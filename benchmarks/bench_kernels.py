@@ -1,0 +1,43 @@
+"""Compression-kernel micro-benchmarks: Pallas (interpret) vs jnp oracle vs
+exact top-k, on residual-sized tensors."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.core.compression import TopK
+from repro.kernels.ops import block_topk, quantize
+from repro.kernels.ref import block_topk_ref, quantize_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run(fast: bool = True):
+    sizes = [1 << 14] if fast else [1 << 14, 1 << 18, 1 << 22]
+    for d in sizes:
+        x = jax.random.normal(KEY, (d,))
+
+        fn_kernel = jax.jit(lambda v: block_topk(v, ratio=0.2, block=1024))
+        us = time_call(fn_kernel, x)
+        emit(f"kernel/block_topk/d={d}", us, "backend=pallas-interpret")
+
+        x2d = x.reshape(-1, 1024)
+        fn_ref = jax.jit(lambda v: block_topk_ref(v, 205))
+        us = time_call(fn_ref, x2d)
+        emit(f"kernel/block_topk_ref/d={d}", us, "backend=jnp-oracle")
+
+        exact = TopK(ratio=0.2)
+        fn_exact = jax.jit(lambda v: exact(KEY, v))
+        us = time_call(fn_exact, x)
+        emit(f"kernel/exact_topk/d={d}", us, "backend=lax.top_k")
+
+        fn_q = jax.jit(lambda v: quantize(v, KEY, bits=4, block=1024))
+        us = time_call(fn_q, x)
+        emit(f"kernel/quantize/d={d}", us, "backend=pallas-interpret")
+
+        u = jax.random.uniform(KEY, x2d.shape)
+        fn_qr = jax.jit(lambda v: quantize_ref(v, u, 4)[0])
+        us = time_call(fn_qr, x2d)
+        emit(f"kernel/quantize_ref/d={d}", us, "backend=jnp-oracle")

@@ -1,0 +1,37 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json):
+per (arch x shape x mesh) the three terms, dominant bottleneck, and the
+MODEL_FLOPS / HLO_FLOPS useful-compute ratio."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def run(fast: bool = True, dryrun_dir: str = "results/dryrun"):
+    files = sorted(glob.glob(os.path.join(dryrun_dir, "*.json")))
+    if not files:
+        emit("roofline/missing", 0.0, "run repro.launch.dryrun first")
+        return
+    for f in files:
+        r = json.load(open(f))
+        tag = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r["status"] == "skipped":
+            emit(tag, 0.0, f"skipped={r['reason']}")
+            continue
+        if r["status"] != "ok":
+            emit(tag, 0.0, f"error={r.get('error', '?')[:80]}")
+            continue
+        rl = r["roofline"]
+        step_s = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        emit(
+            tag,
+            step_s * 1e6,
+            f"compute_s={rl['compute_s']:.4f};memory_s={rl['memory_s']:.4f};"
+            f"collective_s={rl['collective_s']:.4f};dominant={rl['dominant']};"
+            f"useful_ratio={r.get('model_flops_ratio') or 0:.3f};"
+            f"params={r['params']:.3e}",
+        )

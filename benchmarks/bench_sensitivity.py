@@ -1,0 +1,60 @@
+"""Paper Figure 5: sensitivity to (1) inner-loop count K, (2) compression
+ratio, (3) penalty multiplier lambda."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.core.c2dfb import C2DFBConfig, c2dfb_round, init_state, round_wire_bytes
+from repro.core.topology import ring
+from repro.core.types import node_mean
+from repro.data.bilevel_tasks import coefficient_tuning_task
+
+
+def _run_once(bundle, topo, cfg, T, key):
+    state = init_state(bundle.problem, cfg, bundle.x0, bundle.y0)
+    step = jax.jit(lambda s, k: c2dfb_round(s, k, bundle.problem, topo, cfg))
+    bpr = round_wire_bytes(state, cfg, topo)["total_bytes"]
+    t0 = time.time()
+    for _ in range(T):
+        key, k = jax.random.split(key)
+        state, _ = step(state, k)
+    dt = time.time() - t0
+    acc = bundle.test_accuracy(
+        node_mean(state.x), node_mean(state.inner_y.d), bundle.predict_fn
+    )
+    return acc, T * bpr / 1e6, dt
+
+
+def run(fast: bool = True):
+    m = 10
+    T = 12 if fast else 40
+    key = jax.random.PRNGKey(0)
+    bundle = coefficient_tuning_task(m=m, n=1500, p=120, c=5, h=0.8, seed=0)
+    topo = ring(m)
+    base = dict(lam=10.0, eta_out=0.2, gamma_out=0.5, eta_in=0.2, gamma_in=0.5,
+                K=15, compressor="topk", comp_ratio=0.2)
+
+    for K in ([5, 15, 30] if fast else [2, 5, 10, 15, 30, 60]):
+        cfg = C2DFBConfig(**{**base, "K": K})
+        acc, mb, dt = _run_once(bundle, topo, cfg, T, key)
+        emit(f"fig5/K={K}", dt * 1e6 / T, f"acc={acc:.3f};comm_mb={mb:.2f}")
+
+    for ratio in ([0.05, 0.2, 1.0] if fast else [0.02, 0.05, 0.1, 0.2, 0.5, 1.0]):
+        cfg = C2DFBConfig(**{**base, "comp_ratio": ratio})
+        acc, mb, dt = _run_once(bundle, topo, cfg, T, key)
+        emit(f"fig5/ratio={ratio}", dt * 1e6 / T, f"acc={acc:.3f};comm_mb={mb:.2f}")
+
+    for lam in ([1.0, 10.0, 100.0] if fast else [0.1, 1.0, 10.0, 50.0, 100.0]):
+        cfg = C2DFBConfig(**{**base, "lam": lam})
+        acc, mb, dt = _run_once(bundle, topo, cfg, T, key)
+        emit(f"fig5/lam={lam}", dt * 1e6 / T, f"acc={acc:.3f};comm_mb={mb:.2f}")
+
+    # compressor family sweep (beyond-paper: kernel-backed block top-k + quant)
+    for comp in ["topk", "block_topk", "randk", "quant", "identity"]:
+        cfg = C2DFBConfig(**{**base, "compressor": comp, "comp_block": 128})
+        acc, mb, dt = _run_once(bundle, topo, cfg, T, key)
+        emit(f"fig5/comp={comp}", dt * 1e6 / T, f"acc={acc:.3f};comm_mb={mb:.2f}")

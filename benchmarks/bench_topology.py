@@ -1,0 +1,61 @@
+"""Paper Figure 2: accuracy-vs-communication across topologies (ring, 2-hop,
+ER) under iid and heterogeneous splits, C2DFB vs baselines."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.core.baselines import (
+    MADSBOConfig, madsbo_init, madsbo_round, madsbo_round_wire_bytes,
+)
+from repro.core.c2dfb import C2DFBConfig, c2dfb_round, init_state, round_wire_bytes
+from repro.core.topology import erdos_renyi, ring, two_hop
+from repro.core.types import node_mean
+from repro.data.bilevel_tasks import coefficient_tuning_task
+
+
+def run(fast: bool = True):
+    m = 10
+    T = 15 if fast else 60
+    key = jax.random.PRNGKey(0)
+    topos = {"ring": ring(m), "2hop": two_hop(m), "er": erdos_renyi(m, 0.4, 0)}
+    hs = [0.8] if fast else [0.0, 0.8]
+    for h in hs:
+        bundle = coefficient_tuning_task(m=m, n=1500, p=120, c=5, h=h, seed=0)
+        for tname, topo in topos.items():
+            cfg = C2DFBConfig(lam=10.0, eta_out=0.2, gamma_out=0.5, eta_in=0.2,
+                              gamma_in=0.5, K=15, compressor="topk",
+                              comp_ratio=0.2)
+            state = init_state(bundle.problem, cfg, bundle.x0, bundle.y0)
+            step = jax.jit(
+                lambda s, k: c2dfb_round(s, k, bundle.problem, topo, cfg)
+            )
+            bpr = round_wire_bytes(state, cfg, topo)["total_bytes"]
+            k, t0 = key, time.time()
+            for _ in range(T):
+                k, kk = jax.random.split(k)
+                state, _ = step(state, kk)
+            dt = time.time() - t0
+            acc = bundle.test_accuracy(
+                node_mean(state.x), node_mean(state.inner_y.d), bundle.predict_fn
+            )
+            emit(f"fig2/c2dfb/{tname}/h{h}", dt * 1e6 / T,
+                 f"acc={acc:.3f};comm_mb={T*bpr/1e6:.2f};rho={topo.spectral_gap:.3f}")
+
+            mcfg = MADSBOConfig(eta_x=0.05, eta_y=0.1, eta_v=0.05, gamma=0.5,
+                                K=15, Q=15)
+            mstate = madsbo_init(bundle.problem, bundle.x0, bundle.y0)
+            mstep = jax.jit(lambda s: madsbo_round(s, bundle.problem, topo, mcfg))
+            mbpr = madsbo_round_wire_bytes(mstate, mcfg, topo)
+            t0 = time.time()
+            for _ in range(T):
+                mstate, _ = mstep(mstate)
+            dt = time.time() - t0
+            acc = bundle.test_accuracy(
+                node_mean(mstate.x), node_mean(mstate.y), bundle.predict_fn
+            )
+            emit(f"fig2/madsbo/{tname}/h{h}", dt * 1e6 / T,
+                 f"acc={acc:.3f};comm_mb={T*mbpr/1e6:.2f}")

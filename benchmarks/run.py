@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure plus kernel micro
+and roofline reports.  Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale settings")
+    ap.add_argument("--only", default=None,
+                    help="comma list: comm,topology,hyperrep,sensitivity,kernels,roofline")
+    args = ap.parse_args()
+    fast = not args.full
+
+    from benchmarks import (
+        bench_comm_volume,
+        bench_hyperrep,
+        bench_kernels,
+        bench_roofline,
+        bench_sensitivity,
+        bench_topology,
+    )
+
+    suites = {
+        "kernels": bench_kernels.run,
+        "comm": bench_comm_volume.run,
+        "topology": bench_topology.run,
+        "hyperrep": bench_hyperrep.run,
+        "sensitivity": bench_sensitivity.run,
+        "roofline": bench_roofline.run,
+    }
+    wanted = args.only.split(",") if args.only else list(suites)
+    print("name,us_per_call,derived")
+    for name in wanted:
+        t0 = time.time()
+        print(f"# suite {name}", file=sys.stderr, flush=True)
+        suites[name](fast=fast)
+        print(f"# suite {name} done in {time.time()-t0:.1f}s",
+              file=sys.stderr, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Quickstart: solve a decentralized bilevel problem with C2DFB in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Ten nodes on a ring co-tune per-feature regularization (upper level) for a
+linear classifier (lower level), transmitting only top-20% compressed
+residuals during the inner loops — the paper's Algorithm 1+2 end to end.
+"""
+
+import jax
+import numpy as np
+
+from repro.core.c2dfb import C2DFBConfig, run
+from repro.core.topology import ring
+from repro.core.types import node_mean
+from repro.data.bilevel_tasks import coefficient_tuning_task
+
+
+def main():
+    m = 10
+    bundle = coefficient_tuning_task(m=m, n=1500, p=120, c=5, h=0.8, seed=0)
+    topo = ring(m)
+    print(f"ring topology: m={m}, spectral gap rho={topo.spectral_gap:.3f}")
+
+    cfg = C2DFBConfig(
+        lam=10.0,
+        eta_out=0.2, gamma_out=0.5,
+        eta_in=0.2, gamma_in=0.5,
+        K=15,
+        compressor="topk", comp_ratio=0.2,
+    )
+    state, metrics = run(
+        bundle.problem, topo, cfg, bundle.x0, bundle.y0,
+        T=60, key=jax.random.PRNGKey(0),
+    )
+
+    hg = np.asarray(metrics["hypergrad_norm"])
+    print(f"|hypergradient| final: {hg[-1]:.4f}")
+    print(f"x consensus error: {float(metrics['x_consensus_err'][-1]):.2e}")
+    acc = bundle.test_accuracy(
+        node_mean(state.x), node_mean(state.inner_y.d), bundle.predict_fn
+    )
+    print(f"test accuracy (5 classes, heterogeneity h=0.8): {acc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Batched serving example over the public API (prefill + autoregressive
+decode with ring-buffer SWA caches on a MoE model).
+
+    PYTHONPATH=src python examples/serve_batch.py --arch mixtral-8x7b
+"""
+
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    args = ap.parse_args()
+    serve_main([
+        "--arch", args.arch, "--smoke",
+        "--batch", "4", "--prompt-len", "64", "--gen", "16",
+    ])
+
+
+if __name__ == "__main__":
+    main()

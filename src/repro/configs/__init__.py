@@ -1,0 +1,90 @@
+"""Architecture registry + input_specs providers (ShapeDtypeStruct only)."""
+
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+
+_ARCH_MODULES = {
+    "mamba2-2.7b": "mamba2_2p7b",
+    "phi3-mini-3.8b": "phi3_mini_3p8b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "jamba-1.5-large-398b": "jamba_1p5_large",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "llama-3.2-vision-11b": "llama32_vision_11b",
+    "qwen2-7b": "qwen2_7b",
+    "gemma2-27b": "gemma2_27b",
+    "mixtral-8x22b": "mixtral_8x22b",
+}
+
+ARCH_NAMES = tuple(_ARCH_MODULES)
+
+# long_500k applicability per DESIGN.md §5 (sub-quadratic decode only)
+LONG_CONTEXT_ARCHS = frozenset(
+    {
+        "mamba2-2.7b",
+        "jamba-1.5-large-398b",
+        "mixtral-8x7b",
+        "mixtral-8x22b",
+        "gemma2-27b",
+    }
+)
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    if name not in _ARCH_MODULES:
+        raise ValueError(f"unknown arch {name!r}; have {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """Whether (arch, shape) runs; reason when skipped (DESIGN.md §5)."""
+    if shape.name == "long_500k":
+        if cfg.name in _ARCH_MODULES and cfg.name not in LONG_CONTEXT_ARCHS:
+            return False, "full-attention arch: 524k dense KV decode skipped"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input — no allocation.
+
+    train:   tokens + labels (+ modality stub embeddings)
+    prefill: tokens (+ stubs)
+    decode:  one token + position + KV caches of shape.seq_len (+ stubs)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    specs: dict = {}
+    if shape.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+    else:  # decode
+        from repro.models.transformer import init_caches
+
+        specs["token"] = jax.ShapeDtypeStruct((B,), i32)
+        specs["pos"] = jax.ShapeDtypeStruct((), i32)
+        specs["caches"] = jax.eval_shape(
+            lambda: init_caches(cfg, B, S, dtype=cfg.dtype)
+        )
+    if cfg.arch_type == "audio":
+        s_enc = max(cfg.enc_seq_ratio, S // cfg.enc_seq_ratio)
+        if shape.kind == "decode":
+            # fixed encoder memory during decode
+            specs["memory"] = jax.ShapeDtypeStruct((B, s_enc, cfg.d_model), cfg.dtype)
+        else:
+            specs["enc_embeds"] = jax.ShapeDtypeStruct(
+                (B, s_enc, cfg.d_model), cfg.dtype
+            )
+    if cfg.arch_type == "vlm":
+        specs["memory"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_patches, cfg.d_model), cfg.dtype
+        )
+    return specs

@@ -1,0 +1,418 @@
+"""Baselines the paper compares against.
+
+* MDBO    — gossip-based decentralized SBO with a Neumann-series
+            Hessian-inverse-vector approximation (Yang, Zhang & Wang 2022).
+            Second-order oracles are realized as Hessian-VECTOR products
+            (forward-over-reverse); no Hessian is ever materialized.
+* MADSBO  — alternating decentralized SBO with a HIGP quadratic subsolver
+            and moving-average hypergradient (Chen et al. 2023).
+* C2DFB(nc) — ablation: same fully-first-order structure as C2DFB but with
+            naive error-feedback compression (transmit Q(value + error),
+            accumulate the error locally) instead of reference points.
+* F2SA    — centralized fully-first-order bilevel (Kwon et al. 2023); the
+            single-node oracle C2DFB should track from a global view.
+
+All operate on node-stacked pytrees like `c2dfb.py` and report exact wire
+bytes for the communication-volume benchmarks (one broadcast per node per
+transmitted tensor, fp32 — same accounting as C2DFB's meter).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bilevel_problem import BilevelProblem
+from repro.core.compression import Compressor
+from repro.core.gossip import mix_delta_dense, mix_step_dense
+from repro.core.inner_loop import compress_stacked
+from repro.core.topology import Topology
+from repro.core.types import (
+    Pytree,
+    consensus_error,
+    node_mean,
+    tree_count,
+    tree_sq_norm,
+)
+
+# ---------------------------------------------------------------------------
+# second-order oracles via jvp composition (never materialize Hessians)
+# ---------------------------------------------------------------------------
+
+
+def _hvp_yy(g, x, y, v, data):
+    """(d^2/dy^2 g) @ v  via forward-over-reverse."""
+    grad_y = lambda y_: jax.grad(g, argnums=1)(x, y_, data)
+    return jax.jvp(grad_y, (y,), (v,))[1]
+
+
+def _jvp_xy(g, x, y, v, data):
+    """(d^2/dxdy g) @ v : differentiate grad_x along y-direction v."""
+    grad_x = lambda y_: jax.grad(g, argnums=0)(x, y_, data)
+    return jax.jvp(grad_x, (y,), (v,))[1]
+
+
+# ---------------------------------------------------------------------------
+# MDBO
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MDBOConfig:
+    eta_x: float = 0.05
+    eta_y: float = 0.1
+    gamma: float = 0.5
+    K: int = 10          # LL gossip-GD steps per round
+    neumann_N: int = 10  # Neumann series terms
+    neumann_eta: float = 0.1
+
+
+class MDBOState(NamedTuple):
+    x: Pytree
+    y: Pytree
+    t: jax.Array
+
+
+def mdbo_init(x0: Pytree, y0: Pytree) -> MDBOState:
+    return MDBOState(x=x0, y=y0, t=jnp.array(0))
+
+
+def mdbo_round(
+    state: MDBOState, problem: BilevelProblem, topo: Topology, cfg: MDBOConfig
+) -> tuple[MDBOState, dict]:
+    W = jnp.asarray(topo.W, jnp.float32)
+    x, y = state.x, state.y
+
+    # LL: K gossip + gradient steps on y
+    grad_g_y = jax.vmap(jax.grad(problem.g, argnums=1))
+
+    def ll_body(y_, _):
+        gy = grad_g_y(x, y_, problem.data_g)
+        y_ = mix_step_dense(W, cfg.gamma, y_)
+        y_ = jax.tree.map(lambda v, g_: v - cfg.eta_y * g_, y_, gy)
+        return y_, None
+
+    y, _ = jax.lax.scan(ll_body, y, None, length=cfg.K)
+
+    # Hypergradient via truncated Neumann series:
+    #   v approx [d2yy g]^{-1} grad_y f ;  v_{n+1} = v_n - eta*(H v_n) + eta*grad_y f
+    grad_f_y = jax.vmap(jax.grad(problem.f, argnums=1))(x, y, problem.data_f)
+
+    def neumann_body(v, _):
+        hv = jax.vmap(lambda xi, yi, vi, dg: _hvp_yy(problem.g, xi, yi, vi, dg))(
+            x, y, v, problem.data_g
+        )
+        v = jax.tree.map(
+            lambda vn, hvn, b: vn - cfg.neumann_eta * hvn + cfg.neumann_eta * b,
+            v,
+            hv,
+            grad_f_y,
+        )
+        return v, None
+
+    v0 = jax.tree.map(lambda b: cfg.neumann_eta * b, grad_f_y)
+    v, _ = jax.lax.scan(neumann_body, v0, None, length=cfg.neumann_N)
+
+    cross = jax.vmap(lambda xi, yi, vi, dg: _jvp_xy(problem.g, xi, yi, vi, dg))(
+        x, y, v, problem.data_g
+    )
+    grad_f_x = jax.vmap(jax.grad(problem.f, argnums=0))(x, y, problem.data_f)
+    hyper = jax.tree.map(jnp.subtract, grad_f_x, cross)
+
+    # UL: gossip + descent
+    x = mix_step_dense(W, cfg.gamma, x)
+    x = jax.tree.map(lambda v_, g_: v_ - cfg.eta_x * g_, x, hyper)
+
+    metrics = {
+        "hypergrad_norm": jnp.sqrt(tree_sq_norm(node_mean(hyper))),
+        "x_consensus_err": consensus_error(x),
+    }
+    return MDBOState(x=x, y=y, t=state.t + 1), metrics
+
+
+def mdbo_round_wire_bytes(state: MDBOState, cfg: MDBOConfig, topo: Topology) -> float:
+    """Per round each node broadcasts: y every LL step, the Neumann iterate v
+    every term (the decentralized HIGP requires consensus on v), and x once.
+    All uncompressed fp32."""
+    m = topo.m
+    dx = tree_count(state.x)
+    dy = tree_count(state.y)
+    return float((dx + dy * cfg.K + dy * cfg.neumann_N) * 4 * m)
+
+
+# ---------------------------------------------------------------------------
+# MADSBO
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MADSBOConfig:
+    eta_x: float = 0.05
+    eta_y: float = 0.1
+    eta_v: float = 0.1   # HIGP quadratic subsolver step
+    gamma: float = 0.5
+    K: int = 10          # LL steps per round
+    Q: int = 10          # HIGP subsolver steps
+    alpha: float = 0.3   # moving-average constant
+
+
+class MADSBOState(NamedTuple):
+    x: Pytree
+    y: Pytree
+    v: Pytree  # HIGP iterate
+    u: Pytree  # moving-average hypergradient
+    t: jax.Array
+
+
+def madsbo_init(problem: BilevelProblem, x0: Pytree, y0: Pytree) -> MADSBOState:
+    v0 = jax.tree.map(jnp.zeros_like, y0)
+    u0 = jax.vmap(jax.grad(problem.f, argnums=0))(x0, y0, problem.data_f)
+    return MADSBOState(x=x0, y=y0, v=v0, u=u0, t=jnp.array(0))
+
+
+def madsbo_round(
+    state: MADSBOState, problem: BilevelProblem, topo: Topology, cfg: MADSBOConfig
+) -> tuple[MADSBOState, dict]:
+    W = jnp.asarray(topo.W, jnp.float32)
+    x, y, v, u = state.x, state.y, state.v, state.u
+
+    grad_g_y = jax.vmap(jax.grad(problem.g, argnums=1))
+
+    def ll_body(y_, _):
+        gy = grad_g_y(x, y_, problem.data_g)
+        y_ = mix_step_dense(W, cfg.gamma, y_)
+        y_ = jax.tree.map(lambda a, b: a - cfg.eta_y * b, y_, gy)
+        return y_, None
+
+    y, _ = jax.lax.scan(ll_body, y, None, length=cfg.K)
+
+    # HIGP: min_v 0.5 v^T H v - v^T grad_y f  solved by Q gossip-GD steps
+    grad_f_y = jax.vmap(jax.grad(problem.f, argnums=1))(x, y, problem.data_f)
+
+    def higp_body(v_, _):
+        hv = jax.vmap(lambda xi, yi, vi, dg: _hvp_yy(problem.g, xi, yi, vi, dg))(
+            x, y, v_, problem.data_g
+        )
+        v_ = mix_step_dense(W, cfg.gamma, v_)
+        v_ = jax.tree.map(
+            lambda vn, hvn, b: vn - cfg.eta_v * (hvn - b), v_, hv, grad_f_y
+        )
+        return v_, None
+
+    v, _ = jax.lax.scan(higp_body, v, None, length=cfg.Q)
+
+    cross = jax.vmap(lambda xi, yi, vi, dg: _jvp_xy(problem.g, xi, yi, vi, dg))(
+        x, y, v, problem.data_g
+    )
+    grad_f_x = jax.vmap(jax.grad(problem.f, argnums=0))(x, y, problem.data_f)
+    p = jax.tree.map(jnp.subtract, grad_f_x, cross)
+
+    # moving-average hypergradient, then UL gossip + descent
+    u = jax.tree.map(lambda un, pn: (1 - cfg.alpha) * un + cfg.alpha * pn, u, p)
+    x = mix_step_dense(W, cfg.gamma, x)
+    x = jax.tree.map(lambda a, b: a - cfg.eta_x * b, x, u)
+
+    metrics = {
+        "hypergrad_norm": jnp.sqrt(tree_sq_norm(node_mean(u))),
+        "x_consensus_err": consensus_error(x),
+    }
+    return MADSBOState(x=x, y=y, v=v, u=u, t=state.t + 1), metrics
+
+
+def madsbo_round_wire_bytes(
+    state: MADSBOState, cfg: MADSBOConfig, topo: Topology
+) -> float:
+    m = topo.m
+    dx = tree_count(state.x)
+    dy = tree_count(state.y)
+    return float((dx + dy * cfg.K + dy * cfg.Q) * 4 * m)
+
+
+# ---------------------------------------------------------------------------
+# C2DFB(nc): naive error-feedback compression ablation
+# ---------------------------------------------------------------------------
+
+
+class NCInnerState(NamedTuple):
+    d: Pytree
+    e_d: Pytree  # accumulated compression error of d
+    s: Pytree
+    e_s: Pytree
+    g_prev: Pytree
+
+
+def nc_inner_init(d0: Pytree, grad_fn) -> NCInnerState:
+    g0 = grad_fn(d0)
+    z = jax.tree.map(jnp.zeros_like, d0)
+    return NCInnerState(d=d0, e_d=z, s=g0, e_s=jax.tree.map(jnp.zeros_like, g0), g_prev=g0)
+
+
+def nc_refresh_tracker(state: NCInnerState, grad_fn) -> NCInnerState:
+    g_new = grad_fn(state.d)
+    s = jax.tree.map(lambda s_, gn, gp: s_ + gn - gp, state.s, g_new, state.g_prev)
+    return state._replace(s=s, g_prev=g_new)
+
+
+def nc_inner_step(
+    state: NCInnerState, key, grad_fn, W, compressor: Compressor, gamma, eta
+) -> NCInnerState:
+    kd, ks = jax.random.split(key)
+
+    # transmit c = Q(d + e); mixing uses the received compressed values
+    cd = compress_stacked(
+        compressor, kd, jax.tree.map(jnp.add, state.d, state.e_d)
+    )
+    e_d = jax.tree.map(lambda d, e, c: d + e - c, state.d, state.e_d, cd)
+    mix_d = mix_delta_dense(W, cd)
+    d_new = jax.tree.map(
+        lambda d, md, s: d + gamma * md - eta * s, state.d, mix_d, state.s
+    )
+
+    g_new = grad_fn(d_new)
+    cs = compress_stacked(
+        compressor, ks, jax.tree.map(jnp.add, state.s, state.e_s)
+    )
+    e_s = jax.tree.map(lambda s, e, c: s + e - c, state.s, state.e_s, cs)
+    mix_s = mix_delta_dense(W, cs)
+    s_new = jax.tree.map(
+        lambda s, ms, gn, gp: s + gamma * ms + gn - gp,
+        state.s,
+        mix_s,
+        g_new,
+        state.g_prev,
+    )
+    return NCInnerState(d=d_new, e_d=e_d, s=s_new, e_s=e_s, g_prev=g_new)
+
+
+def nc_inner_loop(state, key, grad_fn, W, compressor, gamma, eta, K):
+    def body(st, k):
+        return nc_inner_step(st, k, grad_fn, W, compressor, gamma, eta), None
+
+    keys = jax.random.split(key, K)
+    state, _ = jax.lax.scan(body, state, keys)
+    return state
+
+
+class C2DFBncState(NamedTuple):
+    x: Pytree
+    s_x: Pytree
+    u_prev: Pytree
+    inner_y: NCInnerState
+    inner_z: NCInnerState
+    t: jax.Array
+
+
+def c2dfb_nc_init(problem, cfg, x0, y0) -> C2DFBncState:
+    grad_h = problem.grad_y_h(cfg.lam)
+    grad_g = problem.grad_y_g()
+    iy = nc_inner_init(y0, lambda d: grad_h(d, x0))
+    iz = nc_inner_init(y0, lambda d: grad_g(d, x0))
+    u0 = problem.hyper_grad(x0, y0, y0, cfg.lam)
+    return C2DFBncState(x=x0, s_x=u0, u_prev=u0, inner_y=iy, inner_z=iz, t=jnp.array(0))
+
+
+def c2dfb_nc_round(state, key, problem, topo, cfg):
+    """cfg is a C2DFBConfig — identical hyperparameters to the main method."""
+    W = jnp.asarray(topo.W, jnp.float32)
+    compressor = cfg.make_compressor()
+    ky, kz = jax.random.split(key)
+
+    mix_x = mix_delta_dense(W, state.x)
+    x_new = jax.tree.map(
+        lambda x, mx, s: x + cfg.gamma_out * mx - cfg.eta_out * s,
+        state.x,
+        mix_x,
+        state.s_x,
+    )
+
+    grad_h = problem.grad_y_h(cfg.lam)
+    grad_g = problem.grad_y_g()
+    gy = lambda d: grad_h(d, x_new)
+    gz = lambda d: grad_g(d, x_new)
+    iy = nc_refresh_tracker(state.inner_y, gy)
+    iz = nc_refresh_tracker(state.inner_z, gz)
+    iy = nc_inner_loop(iy, ky, gy, W, compressor, cfg.gamma_in, cfg.eta_in_y, cfg.K)
+    iz = nc_inner_loop(iz, kz, gz, W, compressor, cfg.gamma_in, cfg.eta_in, cfg.K)
+
+    u_new = problem.hyper_grad(x_new, iy.d, iz.d, cfg.lam)
+    mix_s = mix_delta_dense(W, state.s_x)
+    s_x_new = jax.tree.map(
+        lambda s, ms, un, up: s + cfg.gamma_out * ms + un - up,
+        state.s_x,
+        mix_s,
+        u_new,
+        state.u_prev,
+    )
+    new_state = C2DFBncState(
+        x=x_new, s_x=s_x_new, u_prev=u_new, inner_y=iy, inner_z=iz, t=state.t + 1
+    )
+    metrics = {
+        "hypergrad_norm": jnp.sqrt(tree_sq_norm(node_mean(u_new))),
+        "x_consensus_err": consensus_error(x_new),
+    }
+    return new_state, metrics
+
+
+# ---------------------------------------------------------------------------
+# F2SA — centralized fully-first-order reference
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class F2SAConfig:
+    lam: float = 10.0
+    eta_x: float = 0.1
+    eta_y: float = 0.1
+    K: int = 10
+
+
+class F2SAState(NamedTuple):
+    x: Pytree  # single copy (no node axis)
+    y: Pytree
+    z: Pytree
+    t: jax.Array
+
+
+def f2sa_init(x0: Pytree, y0: Pytree) -> F2SAState:
+    return F2SAState(x=x0, y=y0, z=y0, t=jnp.array(0))
+
+
+def f2sa_round(
+    state: F2SAState, problem: BilevelProblem, cfg: F2SAConfig
+) -> tuple[F2SAState, dict]:
+    x, y, z = state.x, state.y, state.z
+
+    def mean_h(y_):
+        fs = jax.vmap(lambda df: problem.f(x, y_, df))(problem.data_f)
+        gs = jax.vmap(lambda dg: problem.g(x, y_, dg))(problem.data_g)
+        return jnp.mean(fs) + cfg.lam * jnp.mean(gs)
+
+    def mean_g(z_):
+        gs = jax.vmap(lambda dg: problem.g(x, z_, dg))(problem.data_g)
+        return jnp.mean(gs)
+
+    def gd(loss, p0):
+        def body(p, _):
+            return jax.tree.map(
+                lambda v, gr: v - cfg.eta_y * gr, p, jax.grad(loss)(p)
+            ), None
+
+        p, _ = jax.lax.scan(body, p0, None, length=cfg.K)
+        return p
+
+    y = gd(mean_h, y)
+    z = gd(mean_g, z)
+
+    def psi_lam(x_):
+        fs = jax.vmap(lambda df: problem.f(x_, y, df))(problem.data_f)
+        gy = jax.vmap(lambda dg: problem.g(x_, y, dg))(problem.data_g)
+        gz = jax.vmap(lambda dg: problem.g(x_, z, dg))(problem.data_g)
+        return jnp.mean(fs) + cfg.lam * (jnp.mean(gy) - jnp.mean(gz))
+
+    hyper = jax.grad(psi_lam)(x)
+    x = jax.tree.map(lambda v, gr: v - cfg.eta_x * gr, x, hyper)
+    metrics = {"hypergrad_norm": jnp.sqrt(tree_sq_norm(hyper))}
+    return F2SAState(x=x, y=y, z=z, t=state.t + 1), metrics

@@ -1,0 +1,152 @@
+"""Algorithm 2 — the compressed gradient-tracking inner loop ``IN``.
+
+State per node (stacked over the leading node axis):
+    d      current model (y or z)
+    d_hat  reference point of the model (what neighbors believe we hold)
+    s      gradient tracker
+    s_hat  reference point of the tracker
+    g_prev gradient at the previous iterate (tracking delta)
+
+One step (paper Algorithm 2):
+    d^{k+1}    = d^k + gamma * sum_j w_ij (dhat_j - dhat_i) - eta * s^k
+    transmit   Q(d^{k+1} - dhat^k);   dhat^{k+1} = dhat^k + Q(.)
+    s^{k+1}    = s^k + gamma * sum_j w_ij (shat_j - shat_i) + grad^{k+1} - grad^k
+    transmit   Q(s^{k+1} - shat^k);   shat^{k+1} = shat^k + Q(.)
+
+Key invariants (tested):
+* mean dynamics are compression-free:  d_bar^{k+1} = d_bar^k - eta * s_bar^k  (Eq. 7)
+* tracking:                            s_bar^k = (1/m) sum_i grad_i(d_i^k)   (Prop. 4)
+
+Reference points and trackers PERSIST across outer rounds (Algorithm 1 passes
+(dhat^K)^t back in).  Because the objective changes between rounds (x moved),
+``refresh_tracker`` re-bases the tracker with grad_new - grad_prev, which
+preserves the tracking invariant exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression import Compressor
+from repro.core.gossip import mix_delta_dense
+from repro.core.types import Pytree, consensus_error, tree_sq_norm
+
+
+class InnerState(NamedTuple):
+    d: Pytree
+    d_hat: Pytree
+    s: Pytree
+    s_hat: Pytree
+    g_prev: Pytree
+
+
+def compress_stacked(compressor: Compressor, key: jax.Array, tree: Pytree) -> Pytree:
+    """Apply Q per node (vmap over the leading node axis, per-node keys)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    m = leaves[0].shape[0]
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, leaf in zip(keys, leaves):
+        node_keys = jax.random.split(k, m)
+        out.append(jax.vmap(compressor)(node_keys, leaf))
+    return jax.tree.unflatten(treedef, out)
+
+
+def inner_init(d0: Pytree, grad_fn: Callable[[Pytree], Pytree]) -> InnerState:
+    """Fresh state: references start at the true values (zero residual),
+    tracker starts at the local gradient (standard GT init)."""
+    g0 = grad_fn(d0)
+    return InnerState(d=d0, d_hat=d0, s=g0, s_hat=g0, g_prev=g0)
+
+
+def refresh_tracker(state: InnerState, grad_fn) -> InnerState:
+    """Re-base the tracker after the objective changed (new outer x).
+
+    s += grad_new(d) - grad_prev keeps  s_bar == mean grad  under the NEW
+    objective, while reference points persist (their residuals stay small —
+    that is the whole point of the reference-point protocol)."""
+    g_new = grad_fn(state.d)
+    s = jax.tree.map(lambda s_, gn, gp: s_ + gn - gp, state.s, g_new, state.g_prev)
+    return state._replace(s=s, g_prev=g_new)
+
+
+def inner_step(
+    state: InnerState,
+    key: jax.Array,
+    grad_fn: Callable[[Pytree], Pytree],
+    W: jax.Array,
+    compressor: Compressor,
+    gamma: float,
+    eta: float,
+) -> InnerState:
+    kd, ks = jax.random.split(key)
+
+    # (1) model update: mix on REFERENCES, descend along tracker
+    mix_d = mix_delta_dense(W, state.d_hat)
+    d_new = jax.tree.map(
+        lambda d, md, s: d + gamma * md - eta * s, state.d, mix_d, state.s
+    )
+
+    # (2) reference update via compressed residual (this is the transmission)
+    resid_d = jax.tree.map(jnp.subtract, d_new, state.d_hat)
+    q_d = compress_stacked(compressor, kd, resid_d)
+    d_hat_new = jax.tree.map(jnp.add, state.d_hat, q_d)
+
+    # (3) tracker update: mix on tracker references + gradient delta
+    g_new = grad_fn(d_new)
+    mix_s = mix_delta_dense(W, state.s_hat)
+    s_new = jax.tree.map(
+        lambda s, ms, gn, gp: s + gamma * ms + gn - gp,
+        state.s,
+        mix_s,
+        g_new,
+        state.g_prev,
+    )
+
+    # (4) tracker reference update via compressed residual
+    resid_s = jax.tree.map(jnp.subtract, s_new, state.s_hat)
+    q_s = compress_stacked(compressor, ks, resid_s)
+    s_hat_new = jax.tree.map(jnp.add, state.s_hat, q_s)
+
+    return InnerState(d=d_new, d_hat=d_hat_new, s=s_new, s_hat=s_hat_new, g_prev=g_new)
+
+
+def inner_loop(
+    state: InnerState,
+    key: jax.Array,
+    grad_fn: Callable[[Pytree], Pytree],
+    W: jax.Array,
+    compressor: Compressor,
+    gamma: float,
+    eta: float,
+    K: int,
+) -> tuple[InnerState, dict]:
+    """Run K compressed-GT steps via lax.scan; returns final state + metrics."""
+
+    def body(st, k):
+        st = inner_step(st, k, grad_fn, W, compressor, gamma, eta)
+        return st, None
+
+    keys = jax.random.split(key, K)
+    state, _ = jax.lax.scan(body, state, keys)
+    metrics = {
+        "consensus_err": consensus_error(state.d),
+        "compress_err": tree_sq_norm(
+            jax.tree.map(jnp.subtract, state.d, state.d_hat)
+        ),
+        "tracker_consensus_err": consensus_error(state.s),
+    }
+    return state, metrics
+
+
+def inner_wire_bytes_per_round(
+    compressor: Compressor, single_node_tree: Pytree, K: int, m: int
+) -> float:
+    """Exact wire bytes one round of IN puts on the network (all m nodes):
+    each node transmits Q(d-resid) and Q(s-resid) once per step."""
+    per_msg = compressor.tree_wire_bytes(single_node_tree)
+    return 2.0 * per_msg * K * m

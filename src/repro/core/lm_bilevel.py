@@ -1,0 +1,72 @@
+"""The paper's technique as a first-class training algorithm for the
+framework's LM architectures — decentralized hyper-representation learning
+(paper §6.2 scaled up): UPPER level x = backbone (embedding + blocks),
+LOWER level y = task head (final norm + LM head), one bilevel node per
+decentralized data shard.
+
+``make_lm_bilevel`` returns a BilevelProblem wired to lm forward passes, so
+the entire C2DFB machinery (compressed reference-point inner loops, gradient
+tracking, gossip) runs unchanged on transformers — selectable in the
+launcher via ``--algo c2dfb``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bilevel_problem import BilevelProblem
+from repro.core.types import broadcast_nodes
+from repro.models.transformer import forward_hidden, init_lm_params
+from repro.models.layers import chunked_cross_entropy
+
+HEAD_KEYS = ("final_norm", "lm_head")
+
+
+def split_params(params):
+    """(backbone x, head y) — the bilevel split."""
+    x = {k: v for k, v in params.items() if k not in HEAD_KEYS}
+    y = {k: v for k, v in params.items() if k in HEAD_KEYS}
+    return x, y
+
+
+def merge_params(x, y):
+    out = dict(x)
+    out.update(y)
+    return out
+
+
+def _loss(cfg, params, tokens, labels, ridge, y=None):
+    hidden, aux = forward_hidden(params, cfg, tokens)
+    head = params["lm_head"]
+    loss = chunked_cross_entropy(
+        hidden, labels, head, chunk=min(256, tokens.shape[1]),
+        logit_cap=cfg.logit_softcap,
+    )
+    if ridge and y is not None:
+        reg = sum(
+            jnp.sum(jnp.square(v.astype(jnp.float32))) for v in jax.tree.leaves(y)
+        )
+        loss = loss + ridge * reg
+    return loss + 0.01 * aux
+
+
+def make_lm_bilevel(cfg, data_train, data_val, m: int, ridge: float = 1e-4):
+    """data_*: node-stacked dicts {"tokens": (m, B, S), "labels": (m, B, S)}."""
+    assert not cfg.tie_embeddings, "bilevel head split needs a separate lm_head"
+
+    def f(x, y, d):  # upper level: validation loss of the full model
+        params = merge_params(x, y)
+        return _loss(cfg, params, d["tokens"], d["labels"], 0.0)
+
+    def g(x, y, d):  # lower level: training loss + ridge on the head
+        params = merge_params(x, y)
+        return _loss(cfg, params, d["tokens"], d["labels"], ridge, y=y)
+
+    return BilevelProblem(f=f, g=g, data_f=data_val, data_g=data_train, m=m)
+
+
+def init_node_params(cfg, key, m: int):
+    params, _ = init_lm_params(cfg, key)
+    x, y = split_params(params)
+    return broadcast_nodes(x, m), broadcast_nodes(y, m)

@@ -1,0 +1,142 @@
+"""Decentralized communication topologies and gossip mixing matrices.
+
+Produces doubly-stochastic, symmetric mixing matrices W (paper Assumption 1)
+via Metropolis–Hastings weights over an undirected connected graph, plus the
+spectral quantities the theory uses:
+
+* spectral gap  rho = 1 - max(|lambda_2|, |lambda_m|)        (Definition 3)
+* rho' = ||W - I||_2^2 = sigma_max(W - I)^2                  (Lemma 4)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import networkx as nx
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    name: str
+    m: int
+    W: np.ndarray           # (m, m) doubly stochastic, symmetric
+    neighbors: tuple        # tuple of tuples: neighbors[i] excludes i
+    # Static ring-like topologies admit a TPU-native ppermute schedule:
+    # list of (shift, weight) meaning "receive from rank (r - shift) % m".
+    ppermute_schedule: tuple | None = None
+
+    @property
+    def spectral_gap(self) -> float:
+        lams = np.sort(np.linalg.eigvalsh(self.W))
+        second = max(abs(lams[-2]), abs(lams[0]))
+        return float(1.0 - second)
+
+    @property
+    def rho_prime(self) -> float:
+        s = np.linalg.svd(self.W - np.eye(self.m), compute_uv=False)
+        return float(s[0] ** 2)
+
+    def validate(self):
+        W = self.W
+        assert np.allclose(W, W.T), "W must be symmetric"
+        assert np.allclose(W.sum(axis=0), 1.0), "W must be doubly stochastic"
+        assert np.all(W >= -1e-12), "W must be non-negative"
+        G = nx.from_numpy_array((W > 1e-12).astype(float) - np.eye(self.m))
+        assert nx.is_connected(G), "graph must be connected"
+        return True
+
+
+def _metropolis(G: nx.Graph, m: int) -> np.ndarray:
+    W = np.zeros((m, m))
+    deg = dict(G.degree())
+    for i, j in G.edges():
+        w = 1.0 / (1 + max(deg[i], deg[j]))
+        W[i, j] = w
+        W[j, i] = w
+    for i in range(m):
+        W[i, i] = 1.0 - W[i].sum()
+    return W
+
+
+def _from_graph(name: str, G: nx.Graph, m: int, schedule=None) -> Topology:
+    W = _metropolis(G, m)
+    neigh = tuple(tuple(sorted(G.neighbors(i))) for i in range(m))
+    topo = Topology(name=name, m=m, W=W, neighbors=neigh, ppermute_schedule=schedule)
+    topo.validate()
+    return topo
+
+
+def ring(m: int) -> Topology:
+    """Each node linked to its two immediate neighbors (paper §6.1)."""
+    G = nx.cycle_graph(m)
+    # Metropolis on a cycle: every edge weight 1/3, self 1/3 (for m > 2).
+    w = 1.0 / 3.0
+    schedule = ((1, w), (-1, w)) if m > 2 else ((1, 0.5),)
+    return _from_graph("ring", G, m, schedule)
+
+
+def two_hop(m: int) -> Topology:
+    """Ring plus neighbors-of-neighbors (paper's 2-hop topology)."""
+    G = nx.cycle_graph(m)
+    for i in range(m):
+        G.add_edge(i, (i + 2) % m)
+    w = 1.0 / 5.0
+    schedule = ((1, w), (-1, w), (2, w), (-2, w)) if m > 4 else None
+    return _from_graph("two_hop", G, m, schedule)
+
+
+def erdos_renyi(m: int, p: float = 0.4, seed: int = 0) -> Topology:
+    rng = np.random.default_rng(seed)
+    for attempt in range(100):
+        G = nx.erdos_renyi_graph(m, p, seed=int(rng.integers(1 << 30)))
+        if nx.is_connected(G):
+            return _from_graph(f"er{p}", G, m)
+    raise RuntimeError("could not sample a connected ER graph")
+
+
+def complete(m: int) -> Topology:
+    G = nx.complete_graph(m)
+    return _from_graph("complete", G, m)
+
+
+def star(m: int) -> Topology:
+    G = nx.star_graph(m - 1)
+    return _from_graph("star", G, m)
+
+
+def torus2d(rows: int, cols: int) -> Topology:
+    """Twisted 2D torus: circulant graph C_m(1, cols).
+
+    The +/-1 ring wraps across row boundaries (i -> (i+1) mod m), which is the
+    shift structure `lax.ppermute` realizes natively on an ICI mesh; +/-cols
+    edges are the second mesh dimension.  Same degree/diameter scaling as the
+    standard torus, but exactly expressible as four global shifts.
+    """
+    m = rows * cols
+    G = nx.Graph()
+    G.add_nodes_from(range(m))
+    for i in range(m):
+        G.add_edge(i, (i + 1) % m)
+        G.add_edge(i, (i + cols) % m)
+    w = 1.0 / 5.0
+    schedule = ((1, w), (-1, w), (cols, w), (-cols, w))
+    return _from_graph("torus2d", G, m, schedule)
+
+
+_FACTORIES = {
+    "ring": ring,
+    "two_hop": two_hop,
+    "er": erdos_renyi,
+    "complete": complete,
+    "star": star,
+}
+
+
+def make_topology(name: str, m: int, **kwargs) -> Topology:
+    if name == "torus2d":
+        rows = kwargs.get("rows", int(np.sqrt(m)))
+        return torus2d(rows, m // rows)
+    if name not in _FACTORIES:
+        raise ValueError(f"unknown topology {name!r}; have {sorted(_FACTORIES)}")
+    return _FACTORIES[name](m, **kwargs)

@@ -1,0 +1,91 @@
+"""Shared type utilities for the C2DFB core.
+
+Conventions
+-----------
+* "node-stacked" pytree: every leaf carries a leading axis of size ``m`` (the
+  number of decentralized nodes).  ``x[i]`` is node *i*'s copy.  This is the
+  paper's stacked notation ``x = [x_1 .. x_m]^T``.
+* All algorithm states are plain (frozen) pytrees so they can live inside
+  ``jax.lax.scan`` / ``jax.jit`` without ceremony.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+GradFn = Callable[[Pytree], Pytree]  # node-stacked params -> node-stacked grads
+
+
+def tree_add(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a: Pytree, c) -> Pytree:
+    return jax.tree.map(lambda x: x * c, a)
+
+
+def tree_axpy(alpha, x: Pytree, y: Pytree) -> Pytree:
+    """alpha * x + y, leafwise."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_zeros_like(a: Pytree) -> Pytree:
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_dot(a: Pytree, b: Pytree):
+    leaves = jax.tree.leaves(jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b))
+    return sum(leaves)
+
+
+def tree_sq_norm(a: Pytree):
+    leaves = jax.tree.leaves(jax.tree.map(lambda x: jnp.sum(x * x), a))
+    return sum(leaves)
+
+
+def tree_norm(a: Pytree):
+    return jnp.sqrt(tree_sq_norm(a))
+
+
+def node_mean(a: Pytree) -> Pytree:
+    """Average over the node axis:  x_bar = (1/m) sum_i x_i  (keeps no node axis)."""
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0), a)
+
+
+def broadcast_nodes(a: Pytree, m: int) -> Pytree:
+    """Tile a per-node-free pytree to the node-stacked layout (1 x ... -> m x ...)."""
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (m,) + x.shape), a)
+
+
+def consensus_error(a: Pytree):
+    """|| x - 1 x_bar ||^2  (Frobenius over the whole stacked pytree)."""
+    bar = node_mean(a)
+    return tree_sq_norm(jax.tree.map(lambda x, b: x - b[None], a, bar))
+
+
+def tree_count(a: Pytree) -> int:
+    """Number of scalar entries per *single node* (node axis excluded)."""
+    leaves = jax.tree.leaves(a)
+    return int(sum(x.size // x.shape[0] for x in leaves))
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeFns:
+    """Per-node objective oracles for the bilevel problem.
+
+    Every callable maps (x_i, y_i, node_index) -> scalar, and is vmapped by
+    the algorithms over the node axis.  Data heterogeneity lives inside the
+    closures (each node sees its own shard).
+    """
+
+    f: Callable  # upper level  f_i(x, y)
+    g: Callable  # lower level  g_i(x, y)

@@ -1,0 +1,203 @@
+"""The paper's two experimental tasks, with synthetic offline datasets.
+
+1. Coefficient tuning (paper §6.1, 20 Newsgroups analogue)
+   UL:  f_i(x, y) = CE(val; linear classifier y)
+   LL:  g_i(x, y) = CE(train; y) + y^T diag(exp(x)) y   (per-feature ridge)
+   x = per-feature log regularization coefficients, y = (p, c) classifier.
+   The real dataset has 101,631 tf-idf features; we synthesize a sparse
+   high-dimensional analogue with controllable dimension so CPU tests stay
+   fast while benchmarks can scale p up.
+
+2. Hyper-representation (paper §6.2, MNIST analogue)
+   UL: backbone (two hidden layers), LL: classification head.
+   f_i = CE(val), g_i = CE(train) + ridge on the head (keeps the LL strongly
+   convex, as in the paper's practice).
+
+Both return a ``BilevelProblem`` plus initial (x0, y0) node-stacked pytrees.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bilevel_problem import BilevelProblem
+from repro.core.types import broadcast_nodes
+from repro.data.partition import label_skew_partition, stack_shards
+
+
+def _softmax_xent(logits, labels, num_classes):
+    logp = jax.nn.log_softmax(logits)
+    onehot = jax.nn.one_hot(labels, num_classes)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+def _synth_classification(
+    n: int, p: int, c: int, sparsity: float, seed: int, noise: float = 0.35
+):
+    """Sparse linear-separable-ish synthetic features (tf-idf analogue)."""
+    rng = np.random.default_rng(seed)
+    # class prototypes are sparse but strong (tf-idf-like: few active terms)
+    centers = 3.0 * rng.normal(size=(c, p)) * (rng.random((c, p)) < max(sparsity, 4.0 / p))
+    labels = rng.integers(0, c, size=n)
+    feats = centers[labels] + noise * rng.normal(size=(n, p))
+    feats *= rng.random((n, p)) < 0.6  # document-level term dropout
+    # MinMax scale to [0, 1] as the paper does
+    lo, hi = feats.min(axis=0), feats.max(axis=0)
+    feats = (feats - lo) / np.maximum(hi - lo, 1e-9)
+    return feats.astype(np.float32), labels.astype(np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskBundle:
+    problem: BilevelProblem
+    x0: any  # node-stacked UL init
+    y0: any  # node-stacked LL init
+    num_classes: int
+    test_data: tuple  # (features, labels) for accuracy eval
+
+    def test_accuracy(self, x_bar, y_bar, predict_fn):
+        feats, labels = self.test_data
+        logits = predict_fn(x_bar, y_bar, feats)
+        return float(jnp.mean(jnp.argmax(logits, -1) == labels))
+
+
+def coefficient_tuning_task(
+    m: int = 10,
+    n: int = 2000,
+    p: int = 500,
+    c: int = 10,
+    h: float = 0.0,
+    seed: int = 0,
+) -> TaskBundle:
+    feats, labels = _synth_classification(n, p, c, sparsity=0.05, seed=seed)
+    n_tr = int(0.4 * n)
+    n_val = int(0.3 * n)
+    tr_f, tr_l = feats[:n_tr], labels[:n_tr]
+    va_f, va_l = feats[n_tr : n_tr + n_val], labels[n_tr : n_tr + n_val]
+    te_f, te_l = feats[n_tr + n_val :], labels[n_tr + n_val :]
+
+    sh_tr = label_skew_partition(tr_l, m, h, seed)
+    sh_va = label_skew_partition(va_l, m, h, seed + 1)
+    data_g = {
+        "a": jnp.asarray(stack_shards(tr_f, sh_tr)),
+        "b": jnp.asarray(stack_shards(tr_l, sh_tr)),
+    }
+    data_f = {
+        "a": jnp.asarray(stack_shards(va_f, sh_va)),
+        "b": jnp.asarray(stack_shards(va_l, sh_va)),
+    }
+
+    def f(x, y, d):
+        return _softmax_xent(d["a"] @ y, d["b"], c)
+
+    def g(x, y, d):
+        ce = _softmax_xent(d["a"] @ y, d["b"], c)
+        reg = jnp.sum(jnp.exp(x)[:, None] * y * y)
+        return ce + reg
+
+    problem = BilevelProblem(f=f, g=g, data_f=data_f, data_g=data_g, m=m)
+    x0 = broadcast_nodes(jnp.full((p,), -4.0, jnp.float32), m)
+    key = jax.random.PRNGKey(seed)
+    y0 = broadcast_nodes(
+        0.01 * jax.random.normal(key, (p, c), jnp.float32), m
+    )
+
+    def predict(x_bar, y_bar, a):
+        return a @ y_bar
+
+    bundle = TaskBundle(
+        problem=problem,
+        x0=x0,
+        y0=y0,
+        num_classes=c,
+        test_data=(jnp.asarray(te_f), jnp.asarray(te_l)),
+    )
+    object.__setattr__(bundle, "predict_fn", predict)
+    return bundle
+
+
+def _synth_images(n: int, c: int, side: int, seed: int):
+    """MNIST analogue: per-class Gaussian-blob prototypes + noise."""
+    rng = np.random.default_rng(seed)
+    d = side * side
+    protos = rng.normal(size=(c, d)).astype(np.float32)
+    labels = rng.integers(0, c, size=n)
+    imgs = protos[labels] + 0.8 * rng.normal(size=(n, d)).astype(np.float32)
+    imgs = (imgs - imgs.mean()) / (imgs.std() + 1e-8)  # paper's normalization
+    return imgs.astype(np.float32), labels.astype(np.int32)
+
+
+def hyper_representation_task(
+    m: int = 10,
+    n: int = 3000,
+    side: int = 12,
+    hidden: int = 32,
+    c: int = 10,
+    h: float = 0.0,
+    ridge: float = 1e-3,
+    seed: int = 0,
+) -> TaskBundle:
+    feats, labels = _synth_images(n, c, side, seed)
+    d_in = side * side
+    n_tr = int(0.4 * n)
+    n_val = int(0.3 * n)
+    tr_f, tr_l = feats[:n_tr], labels[:n_tr]
+    va_f, va_l = feats[n_tr : n_tr + n_val], labels[n_tr : n_tr + n_val]
+    te_f, te_l = feats[n_tr + n_val :], labels[n_tr + n_val :]
+
+    sh_tr = label_skew_partition(tr_l, m, h, seed)
+    sh_va = label_skew_partition(va_l, m, h, seed + 1)
+    data_g = {
+        "a": jnp.asarray(stack_shards(tr_f, sh_tr)),
+        "b": jnp.asarray(stack_shards(tr_l, sh_tr)),
+    }
+    data_f = {
+        "a": jnp.asarray(stack_shards(va_f, sh_va)),
+        "b": jnp.asarray(stack_shards(va_l, sh_va)),
+    }
+
+    def backbone(x, a):
+        hdn = jnp.tanh(a @ x["w1"] + x["b1"])
+        hdn = jnp.tanh(hdn @ x["w2"] + x["b2"])
+        return hdn
+
+    def f(x, y, d):
+        logits = backbone(x, d["a"]) @ y["w"] + y["b"]
+        return _softmax_xent(logits, d["b"], c)
+
+    def g(x, y, d):
+        logits = backbone(x, d["a"]) @ y["w"] + y["b"]
+        reg = ridge * (jnp.sum(y["w"] ** 2) + jnp.sum(y["b"] ** 2))
+        return _softmax_xent(logits, d["b"], c) + reg
+
+    problem = BilevelProblem(f=f, g=g, data_f=data_f, data_g=data_g, m=m)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x0_single = {
+        "w1": jax.random.normal(k1, (d_in, hidden)) * (1.0 / np.sqrt(d_in)),
+        "b1": jnp.zeros((hidden,)),
+        "w2": jax.random.normal(k2, (hidden, hidden)) * (1.0 / np.sqrt(hidden)),
+        "b2": jnp.zeros((hidden,)),
+    }
+    y0_single = {
+        "w": jax.random.normal(k3, (hidden, c)) * (1.0 / np.sqrt(hidden)),
+        "b": jnp.zeros((c,)),
+    }
+    x0 = broadcast_nodes(x0_single, m)
+    y0 = broadcast_nodes(y0_single, m)
+
+    def predict(x_bar, y_bar, a):
+        return backbone(x_bar, a) @ y_bar["w"] + y_bar["b"]
+
+    bundle = TaskBundle(
+        problem=problem,
+        x0=x0,
+        y0=y0,
+        num_classes=c,
+        test_data=(jnp.asarray(te_f), jnp.asarray(te_l)),
+    )
+    object.__setattr__(bundle, "predict_fn", predict)
+    return bundle

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for the Pallas compression kernels.
+
+These define the EXACT semantics the kernels must reproduce (allclose),
+including the threshold-bisection selection rule — so kernel tests are
+bit-meaningful, and the semantic difference vs exact top-k is itself
+quantified in tests/test_kernels_topk.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BISECT_ITERS = 24
+
+
+def block_topk_ref(x2d: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Threshold-bisection block top-k on a (nb, block) array.
+
+    For each row, find by bisection the largest threshold theta such that
+    count(|x| >= theta) >= k, then keep entries with |x| >= theta.
+    With exact arithmetic this keeps exactly k entries (up to ties); the
+    fixed iteration count makes it deterministic and hardware-friendly
+    (reductions + masks only, no sort).
+    """
+    ax = jnp.abs(x2d)
+    hi = jnp.max(ax, axis=-1, keepdims=True)
+    lo = jnp.zeros_like(hi)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum(ax >= mid, axis=-1, keepdims=True)
+        # if we keep >= k at mid, the true threshold is >= mid
+        take = cnt >= k
+        lo = jnp.where(take, mid, lo)
+        hi = jnp.where(take, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, BISECT_ITERS, body, (lo, hi))
+    mask = ax >= lo
+    return x2d * mask.astype(x2d.dtype)
+
+
+def quantize_ref(
+    x2d: jnp.ndarray, u2d: jnp.ndarray, bits: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row-scaled stochastic uniform quantization.
+
+    u2d are iid U[0,1) samples (same shape as x2d).  Returns the dequantized
+    array plus the per-row scales (what a deployment would transmit along
+    with the packed codes).
+    """
+    levels = jnp.asarray((1 << bits) - 1, x2d.dtype)
+    scale = jnp.maximum(jnp.max(jnp.abs(x2d), axis=-1, keepdims=True), 1e-12)
+    y = x2d / scale  # [-1, 1]
+    steps = (y + 1.0) * 0.5 * levels
+    lo = jnp.floor(steps)
+    q = lo + (u2d < (steps - lo)).astype(x2d.dtype)
+    deq = (q / levels) * 2.0 - 1.0
+    return deq * scale, scale

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: block top-k residual compression via threshold bisection.
+
+Hardware adaptation (DESIGN.md §3): a global magnitude sort is hostile to the
+TPU VPU; instead each VMEM-resident block finds its own magnitude threshold
+with BISECT_ITERS rounds of (compare + reduce) — pure elementwise/reduction
+work that vectorizes perfectly — then masks.  Selection is ~k per block; the
+resulting compressor is contractive with delta = k/block (tests prove it).
+
+The kernel is shape-blocked as (BLOCK_ROWS, block) tiles: grid over row
+groups, each tile living in VMEM.  ``block`` is the compression block (one
+threshold per row), a multiple of 128 lanes.  ``k`` is static (baked into
+the kernel), matching deployment where the compression ratio is a config.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import BISECT_ITERS
+
+BLOCK_ROWS = 8  # sublane-aligned rows per tile
+
+
+def _topk_kernel(x_ref, o_ref, *, k: int):
+    x = x_ref[...]  # (BLOCK_ROWS, block) VMEM tile
+    ax = jnp.abs(x)
+    hi = jnp.max(ax, axis=-1, keepdims=True)
+    lo = jnp.zeros_like(hi)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum((ax >= mid).astype(jnp.int32), axis=-1, keepdims=True)
+        take = cnt >= k
+        lo = jnp.where(take, mid, lo)
+        hi = jnp.where(take, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, BISECT_ITERS, body, (lo, hi))
+    mask = ax >= lo
+    o_ref[...] = x * mask.astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block", "interpret"))
+def block_topk_pallas(
+    x2d: jnp.ndarray, k: int, block: int, interpret: bool = True
+) -> jnp.ndarray:
+    """x2d: (nb, block) residual blocks; keeps ~k per row by magnitude."""
+    nb = x2d.shape[0]
+    assert x2d.shape[1] == block and block % 128 == 0, (x2d.shape, block)
+    pad = (-nb) % BLOCK_ROWS
+    xp = jnp.pad(x2d, ((0, pad), (0, 0)))
+    grid = (xp.shape[0] // BLOCK_ROWS,)
+    out = pl.pallas_call(
+        functools.partial(_topk_kernel, k=k),
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, block), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, xp.dtype),
+        interpret=interpret,
+    )(xp)
+    return out[:nb]

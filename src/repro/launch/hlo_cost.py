@@ -1,0 +1,204 @@
+"""Trip-count-aware cost extraction from compiled (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop BODY once, so any
+`lax.scan` (our stacked-layer forward, chunked attention, chunked CE, SSD
+chunk scan) is undercounted by its trip count.  This module walks the HLO
+call graph instead:
+
+    total(comp) = direct(comp) + sum_{call sites} mult * total(callee)
+
+where mult = known_trip_count for `while` bodies (XLA emits it in
+backend_config) and 1 for fusions/branches/to_apply.
+
+Per computation we count:
+* dot FLOPs      : 2 * numel(output) * prod(lhs contracting dims)
+* dot bytes      : lhs + rhs + out bytes (first-order HBM-traffic proxy)
+* collective bytes: output-shape bytes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute (+ their -start forms)
+
+Validated against cost_analysis on unscanned graphs in tests/test_hlo_cost.py.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_HEADER_RE = re.compile(r"^\s*(?:ENTRY\s+)?(%[\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s+([\w\-]+)"
+)
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_ATTR_RE = re.compile(r"(?:calls|body|to_apply)=(%[\w.\-]+)")
+_COND_RE = re.compile(r"condition=(%[\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _shape_numel_bytes(shape_str: str) -> tuple[int, int]:
+    numel_total, bytes_total = 0, 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        numel_total += n
+        bytes_total += n * _DTYPE_BYTES[dt]
+    return numel_total, bytes_total
+
+
+def _shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+class Computation:
+    def __init__(self, name):
+        self.name = name
+        self.flops = 0.0
+        self.dot_bytes = 0.0
+        self.coll_bytes = defaultdict(float)
+        self.coll_counts = defaultdict(int)
+        self.calls: list[tuple[str, float]] = []  # (callee, multiplier)
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    symtab: dict[str, str] = {}
+
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        hm = _HEADER_RE.match(line)
+        if hm and (line.lstrip().startswith("%") or line.lstrip().startswith("ENTRY")):
+            cur = Computation(hm.group(1))
+            comps[cur.name] = cur
+            symtab = {}
+            # parameters declared in the header: name: type pairs
+            for pm in re.finditer(r"(%?[\w.\-]+):\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[\d,]*\})?))", line):
+                nm = pm.group(1)
+                if not nm.startswith("%"):
+                    nm = "%" + nm
+                symtab[nm] = pm.group(2)
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        om = _OP_RE.match(line)
+        if not om:
+            continue
+        name, out_shape, op = om.group(1), om.group(2), om.group(3)
+        symtab[name] = out_shape
+
+        if op == "dot":
+            out_numel, out_bytes = _shape_numel_bytes(out_shape)
+            cm = _CONTRACT_RE.search(line)
+            k = 1
+            # operand list: first two %refs inside dot(...)
+            args = re.search(r"\bdot\(([^)]*)\)", line)
+            lhs_shape = None
+            if args:
+                refs = re.findall(r"%[\w.\-]+", args.group(1))
+                if refs:
+                    lhs_shape = symtab.get(refs[0])
+            if cm and lhs_shape:
+                dims = _shape_dims(lhs_shape)
+                for idx in (cm.group(1).split(",") if cm.group(1) else []):
+                    i = int(idx)
+                    if i < len(dims):
+                        k *= dims[i]
+            cur.flops += 2.0 * out_numel * k
+            _, ob = _shape_numel_bytes(out_shape)
+            ib = 0
+            if args:
+                refs = re.findall(r"%[\w.\-]+", args.group(1))
+                for r in refs[:2]:
+                    if r in symtab:
+                        ib += _shape_numel_bytes(symtab[r])[1]
+            cur.dot_bytes += ob + ib
+            continue
+
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                base = c
+                break
+        if base is not None:
+            _, b = _shape_numel_bytes(out_shape)
+            cur.coll_bytes[base] += b
+            cur.coll_counts[base] += 1
+
+        if op == "while":
+            tm = _TRIP_RE.search(line)
+            trips = float(tm.group(1)) if tm else 1.0
+            bm = re.search(r"body=(%[\w.\-]+)", line)
+            if bm:
+                cur.calls.append((bm.group(1), trips))
+            cm2 = _COND_RE.search(line)
+            if cm2:
+                cur.calls.append((cm2.group(1), trips + 1))
+        else:
+            for m in _CALL_ATTR_RE.finditer(line):
+                cur.calls.append((m.group(1), 1.0))
+            bm2 = _BRANCH_RE.search(line)
+            if bm2:
+                for nm in re.findall(r"%[\w.\-]+", bm2.group(1)):
+                    cur.calls.append((nm, 1.0))
+    return comps
+
+
+def analyze(text: str, entry: str | None = None) -> dict:
+    comps = parse_module(text)
+    if entry is None:
+        m = re.search(r"^ENTRY\s+(%[\w.\-]+)", text, re.MULTILINE)
+        entry = m.group(1) if m else next(iter(comps))
+
+    memo: dict[str, tuple] = {}
+
+    def total(name: str, depth=0):
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        if comp is None or depth > 64:
+            return 0.0, 0.0, {}, {}
+        fl, db = comp.flops, comp.dot_bytes
+        cb = dict(comp.coll_bytes)
+        cc = dict(comp.coll_counts)
+        for callee, mult in comp.calls:
+            f2, d2, c2, n2 = total(callee, depth + 1)
+            fl += mult * f2
+            db += mult * d2
+            for k, v in c2.items():
+                cb[k] = cb.get(k, 0.0) + mult * v
+            for k, v in n2.items():
+                cc[k] = cc.get(k, 0) + mult * v
+        memo[name] = (fl, db, cb, cc)
+        return memo[name]
+
+    fl, db, cb, cc = total(entry)
+    return {
+        "flops": fl,
+        "dot_bytes": db,
+        "collective_bytes_by_kind": {k: float(v) for k, v in cb.items()},
+        "collective_counts_by_kind": {k: float(v) for k, v in cc.items()},
+        "collective_bytes": float(sum(cb.values())),
+    }

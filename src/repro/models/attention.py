@@ -1,0 +1,187 @@
+"""GQA attention: causal / sliding-window / cross, train+prefill+decode.
+
+TPU-shaped choices:
+* prefill/train attention scans over QUERY CHUNKS (`q_chunk`) so the score
+  matrix never exceeds (B, H, q_chunk, S) — required for 32k prefill.
+* decode reads a KV cache laid out (B, S_max, KV, HD) whose sequence axis is
+  sharded over the "model" mesh axis for long contexts (flash-decoding style
+  partial-softmax combine is then XLA's reduction over the sharded axis).
+* sliding-window caches are RING BUFFERS of size window; RoPE is applied at
+  insertion with absolute positions, so softmax permutation-invariance makes
+  ring order irrelevant — validity is tracked with a per-slot absolute
+  position array.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, softcap
+
+NEG_INF = -2.0e38
+
+
+def attn_init(key, cfg, kind: str):
+    d, dt = cfg.d_model, cfg.dtype
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    wq, sq = dense_init(ks[0], d, H * hd, "embed", "heads_hd", dt)
+    wk, sk = dense_init(ks[1], d, KV * hd, "embed", "kv_hd", dt)
+    wv, sv = dense_init(ks[2], d, KV * hd, "embed", "kv_hd", dt)
+    wo, so = dense_init(ks[3], H * hd, d, "heads_hd", "embed", dt)
+    p = {"wq": wq, "wk": wk, "wv": wv, "wo": wo}
+    s = {"wq": sq, "wk": sk, "wv": sv, "wo": so}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dt)
+        p["bk"] = jnp.zeros((KV * hd,), dt)
+        p["bv"] = jnp.zeros((KV * hd,), dt)
+        s["bq"] = ("heads_hd",)
+        s["bk"] = ("kv_hd",)
+        s["bv"] = ("kv_hd",)
+    return p, s
+
+
+def _project_qkv(p, cfg, x, positions, memory=None, rope=True):
+    B = x.shape[0]
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    kv_src = memory if memory is not None else x
+    k = kv_src @ p["wk"]
+    v = kv_src @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, -1, H, hd)
+    k = k.reshape(B, -1, KV, hd)
+    v = v.reshape(B, -1, KV, hd)
+    if rope and cfg.use_rope and memory is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _gqa_scores(q, k, cfg):
+    """q: (B, Sq, H, hd), k: (B, Sk, KV, hd) -> (B, KV, H//KV, Sq, Sk)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    qg = q.reshape(B, Sq, KV, H // KV, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    return softcap(scores, cfg.attn_softcap)
+
+
+def _gqa_out(probs, v):
+    """probs: (B, KV, G, Sq, Sk), v: (B, Sk, KV, hd) -> (B, Sq, H*hd)."""
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    B, Sq = out.shape[0], out.shape[1]
+    return out.reshape(B, Sq, -1)
+
+
+def attn_apply(p, cfg, x, positions, kind="full", memory=None, q_chunk=1024):
+    """Training / prefill attention.  Returns (out, (k, v)) — k/v feed caches.
+
+    kind: "full" causal, "swa" causal window, "cross" (no mask, kv=memory),
+          "bidir" (encoder, no mask).
+    """
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(
+        p, cfg, x, positions, memory=memory if kind == "cross" else None,
+        rope=kind != "cross",
+    )
+    Sk = k.shape[1]
+    kpos = positions if kind not in ("cross",) else None
+
+    q_chunk = min(q_chunk, S)
+    n_chunks = max(1, S // q_chunk)
+    assert S % q_chunk == 0, (S, q_chunk)
+
+    qs = q.reshape(B, n_chunks, q_chunk, *q.shape[2:]).swapaxes(0, 1)
+    pos_s = positions.reshape(B, n_chunks, q_chunk).swapaxes(0, 1)
+
+    # checkpoint: the (B, H, qc, Sk) probs are recomputed in backward rather
+    # than saved per chunk — the flash-attention memory behavior, scan-level
+    @jax.checkpoint
+    def chunk_attn(q_c, qpos_c):
+        scores = _gqa_scores(q_c, k, cfg)  # (B, KV, G, qc, Sk)
+        if kind in ("full", "swa"):
+            mask = qpos_c[:, :, None] >= kpos[:, None, :]  # causal (B, qc, Sk)
+            if kind == "swa" and cfg.window:
+                mask &= (qpos_c[:, :, None] - kpos[:, None, :]) < cfg.window
+            scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return _gqa_out(probs, v)
+
+    def body(_, xs):
+        q_c, p_c = xs
+        return None, chunk_attn(q_c, p_c)
+
+    _, outs = jax.lax.scan(body, None, (qs, pos_s))
+    out = outs.swapaxes(0, 1).reshape(B, S, -1)
+    return out @ p["wo"], (k, v)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def make_cache(cfg, batch, s_max, kind="full", dtype=None):
+    """Cache pytree for one attention layer (callers stack over layers)."""
+    dt = dtype or cfg.dtype
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    size = cfg.window if (kind == "swa" and cfg.window) else s_max
+    size = min(size, s_max)
+    return {
+        "k": jnp.zeros((batch, size, KV, hd), dt),
+        "v": jnp.zeros((batch, size, KV, hd), dt),
+        "slot_pos": jnp.full((size,), -1, jnp.int32),
+    }
+
+
+def cache_specs(kind: str):
+    """Logical axes for the cache tree (resolved by sharding rules)."""
+    return {
+        "k": ("batch", "cache_seq", None, None),
+        "v": ("batch", "cache_seq", None, None),
+        "slot_pos": (None,),
+    }
+
+
+def attn_decode(p, cfg, x_t, cache, pos, kind="full", memory=None):
+    """One-token decode.  x_t: (B, 1, D); pos: scalar int32 absolute position.
+
+    Returns (out (B, 1, D), new_cache).
+    """
+    B = x_t.shape[0]
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+    if kind == "cross":
+        # memory is fixed; no cache mutation
+        q, k, v = _project_qkv(p, cfg, x_t, None, memory=memory, rope=False)
+        scores = _gqa_scores(q, k, cfg)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = _gqa_out(probs, v)
+        return out @ p["wo"], cache
+
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x_t, posv)
+
+    size = cache["k"].shape[1]
+    # full cache: size == s_max > pos so pos % size == pos;
+    # swa ring buffer: size == window, slot cycles.
+    slot = pos % size
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+    slot_pos = jax.lax.dynamic_update_slice(
+        cache["slot_pos"], jnp.full((1,), pos, jnp.int32), (slot,)
+    )
+
+    scores = _gqa_scores(q, k_cache, cfg)  # (B, KV, G, 1, size)
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if kind == "swa" and cfg.window:
+        valid &= slot_pos > (pos - cfg.window)
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = _gqa_out(probs, v_cache)
+    new_cache = {"k": k_cache, "v": v_cache, "slot_pos": slot_pos}
+    return out @ p["wo"], new_cache

@@ -1,0 +1,198 @@
+"""Building blocks shared by every architecture.
+
+Parameters are plain nested dicts of jnp arrays.  Every init function
+returns ``(params, specs)`` where ``specs`` is a structurally identical tree
+of LOGICAL axis tuples (strings); `repro.sharding.partitioning` resolves
+logical axes -> mesh PartitionSpec.  Running init under ``jax.eval_shape``
+yields ShapeDtypeStructs for the dry-run (no allocation).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# activation-sharding hook
+#
+# Models are mesh-agnostic; the launcher installs a constraint function that
+# pins activation layouts (batch over data axes, d_model replicated).  Without
+# this, GSPMD lets the embedding gather output inherit the TABLE's sharding
+# (d_model over "data", batch replicated) and every transformer block then
+# all-reduces a GLOBAL-batch activation per layer — see EXPERIMENTS.md §Perf.
+# ---------------------------------------------------------------------------
+
+_ACT_CONSTRAINT = None
+_WEIGHT_GATHER = None
+
+
+def set_activation_constraint(fn):
+    """fn(x) -> x with a batch-over-data PartitionSpec constraint (or None)."""
+    global _ACT_CONSTRAINT
+    _ACT_CONSTRAINT = fn
+
+
+def shard_activation(x):
+    if _ACT_CONSTRAINT is None:
+        return x
+    return _ACT_CONSTRAINT(x)
+
+
+def set_weight_gather(fn):
+    """fn(w) -> w constrained replicated-over-data (last dim stays @model).
+
+    Explicit FSDP weight-gathering: without it GSPMD may turn a dot whose
+    contracting dim is data-sharded into a partial-sum + activation-sized
+    all-reduce (600 GB/layer on mixtral MoE) instead of gathering the 67 MB
+    weight shard — EXPERIMENTS.md §Perf mixtral iteration 2."""
+    global _WEIGHT_GATHER
+    _WEIGHT_GATHER = fn
+
+
+def gather_weight(w):
+    if _WEIGHT_GATHER is None:
+        return w
+    return _WEIGHT_GATHER(w)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim, out_dim, in_ax, out_ax, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    w = (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+    return w, (in_ax, out_ax)
+
+
+def embed_init(key, vocab, dim, dtype):
+    w = (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+    return w, ("vocab", "embed")
+
+
+def norm_init(dim, dtype):
+    return jnp.ones((dim,), dtype), (None,)
+
+
+def bias_init(dim, ax, dtype):
+    return jnp.zeros((dim,), dtype), (ax,)
+
+
+# ---------------------------------------------------------------------------
+# normalization
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg):
+    """Returns (params, specs) for the configured MLP type."""
+    d, f, dt = cfg.d_model, cfg.d_ff, cfg.dtype
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        wi, si = dense_init(ks[0], d, f, "embed", "ffn", dt)
+        wg, sg = dense_init(ks[1], d, f, "embed", "ffn", dt)
+        wo, so = dense_init(ks[2], f, d, "ffn", "embed", dt)
+        return {"wi": wi, "wg": wg, "wo": wo}, {"wi": si, "wg": sg, "wo": so}
+    wi, si = dense_init(ks[0], d, f, "embed", "ffn", dt)
+    wo, so = dense_init(ks[2], f, d, "ffn", "embed", dt)
+    return {"wi": wi, "wo": wo}, {"wi": si, "wo": so}
+
+
+def mlp_apply(p, x, mlp_type):
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    elif mlp_type == "geglu":
+        h = jax.nn.gelu(x @ p["wg"]) * (x @ p["wi"])
+    elif mlp_type == "squared_relu":
+        h = jnp.square(jax.nn.relu(x @ p["wi"]))
+    elif mlp_type == "gelu":
+        h = jax.nn.gelu(x @ p["wi"])
+    else:
+        raise ValueError(mlp_type)
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# softcap + losses
+# ---------------------------------------------------------------------------
+
+
+def softcap(x, cap):
+    return cap * jnp.tanh(x / cap) if cap else x
+
+
+def chunked_cross_entropy(
+    hidden, labels, lm_head, chunk=512, logit_cap=None, mask=None
+):
+    """Cross-entropy over a big vocab without materializing (B, S, V) at once.
+
+    hidden: (B, S, D); labels: (B, S) int32; lm_head: (D, V).
+    Scans over sequence chunks -> peak memory (B, chunk, V).
+    """
+    B, S, D = hidden.shape
+    n_chunks = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    hs = hidden.reshape(B, n_chunks, chunk, D).swapaxes(0, 1)
+    ls = labels.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+    if mask is None:
+        ms = jnp.ones((n_chunks, B, chunk), jnp.float32)
+    else:
+        ms = mask.reshape(B, n_chunks, chunk).swapaxes(0, 1).astype(jnp.float32)
+
+    # checkpoint: recompute the (B, chunk, V) logits in backward instead of
+    # saving them per chunk (vocab=256k would otherwise dominate temp memory)
+    @jax.checkpoint
+    def body(carry, xs):
+        h, l, mk = xs
+        logits = (h @ lm_head).astype(jnp.float32)
+        logits = softcap(logits, logit_cap)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, l[..., None], axis=-1)[..., 0]
+        return (carry[0] + jnp.sum(nll * mk), carry[1] + jnp.sum(mk)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)), (hs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,176 @@
+"""Top-k MoE with capacity-based dispatch (Mixtral/Jamba style).
+
+Dispatch is the sort-free scatter formulation:
+  1. router top-k -> (expert_idx, weight) per token-slot
+  2. position-in-expert via cumsum over the flattened slot axis
+  3. scatter token activations into an (E, C, D) buffer (capacity-dropped)
+  4. batched expert FFN as one einsum over E
+  5. gather + weighted combine
+
+Sharding: experts are TENSOR-parallel (each expert's d_ff sharded over the
+"model" axis) because the assigned configs have E (8/16) <= model axis (16);
+the (E, C, D) buffer is sharded over capacity by the data axes.  An
+expert-parallel all_to_all layout is the §Perf alternative.
+
+FLOPs honesty: only E*C*D*F matmul FLOPs are issued (C ~ T*topk/E * factor),
+so cost_analysis reflects ACTIVE expert compute, not dense all-expert math.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def moe_init(key, cfg):
+    d, f, dt = cfg.d_model, cfg.d_ff, cfg.dtype
+    E = cfg.num_experts
+    ks = jax.random.split(key, 4)
+    import numpy as np
+
+    def expert_stack(k, in_dim, out_dim, in_ax, out_ax):
+        w = (
+            jax.random.normal(k, (E, in_dim, out_dim), jnp.float32)
+            / np.sqrt(in_dim)
+        ).astype(dt)
+        return w, ("experts", in_ax, out_ax)
+
+    # expert-weight d_model gets its OWN logical axis so sharding variants can
+    # trade FSDP storage vs dispatch locality independently of dense weights
+    wi, si = expert_stack(ks[0], d, f, "moe_embed", "ffn")
+    wg, sg = expert_stack(ks[1], d, f, "moe_embed", "ffn")
+    wo, so = expert_stack(ks[2], f, d, "ffn", "moe_embed")
+    router, sr = dense_init(ks[3], d, E, "embed", None, jnp.float32, scale=0.02)
+    p = {"wi": wi, "wg": wg, "wo": wo, "router": router}
+    s = {"wi": si, "wg": sg, "wo": so, "router": sr}
+    return p, s
+
+
+# Dispatch locality: with G > 1 the token axis is split into G groups that
+# the launcher aligns with the data-parallel shards, so routing, capacity
+# accounting and the (G, E, C/G, D) buffer are shard-LOCAL — this removes the
+# giant cross-shard all-reduce of the dispatch buffer (EXPERIMENTS.md §Perf,
+# mixtral iteration 1).  G = 1 is the paper-agnostic global-capacity baseline.
+_DISPATCH_GROUPS = 1
+
+
+def set_moe_dispatch_groups(groups: int):
+    global _DISPATCH_GROUPS
+    _DISPATCH_GROUPS = max(1, int(groups))
+
+
+def moe_apply(p, cfg, x, capacity_factor=1.25):
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    B, S, D = x.shape
+    G = _DISPATCH_GROUPS
+    if G > 1 and (B * S) % G == 0 and B * S >= 2 * G:
+        out, aux = _moe_tokens_grouped(p, cfg, x.reshape(G, (B * S) // G, D),
+                                       capacity_factor)
+        return out.reshape(B, S, D), aux
+    out, aux = _moe_tokens(p, cfg, x.reshape(B * S, D), capacity_factor)
+    return out.reshape(B, S, D), aux
+
+
+def _moe_tokens_grouped(p, cfg, xg, capacity_factor):
+    """Shard-local dispatch: xg (G, Tl, D) with G aligned to the data shards.
+
+    Every step keeps an explicit leading G axis pinned to the data axes
+    (shard_activation), so routing, capacity cumsum, scatter and the expert
+    matmuls are all shard-local; only the expert WEIGHTS move (d_model
+    replicated by the moe_local sharding rules, f stays tensor-parallel).
+    """
+    from repro.models.layers import shard_activation
+
+    G, Tl, D = xg.shape
+    E, topk = cfg.num_experts, cfg.num_experts_per_tok
+    xg = shard_activation(xg)
+
+    logits = (xg @ p["router"].astype(xg.dtype)).astype(jnp.float32)  # (G,Tl,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, topk)  # (G, Tl, topk)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(
+        jax.nn.one_hot(expert_idx, E, dtype=jnp.float32), axis=(0, 1, 2)
+    )
+    aux = E * jnp.sum(me * ce) * topk  # matches ungrouped scaling
+
+    C = max(8, int(Tl * topk / E * capacity_factor))  # LOCAL capacity
+
+    flat_expert = expert_idx.reshape(G, Tl * topk)
+    onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)  # (G, S2, E)
+    pos_in_expert = jnp.cumsum(onehot, axis=1) - onehot  # local cumsum
+    pos = jnp.sum(pos_in_expert * onehot, axis=-1)  # (G, S2)
+    keep = pos < C
+    tok_of_slot = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Tl), topk)[None], (G, Tl * topk)
+    )
+    safe_pos = jnp.where(keep, pos, C - 1)
+    g_idx = jnp.broadcast_to(jnp.arange(G)[:, None], (G, Tl * topk))
+
+    contrib = jnp.where(
+        keep[..., None], jnp.take_along_axis(xg, tok_of_slot[..., None], axis=1), 0.0
+    )  # (G, S2, D)
+    buf = jnp.zeros((G, E, C, D), xg.dtype)
+    buf = buf.at[g_idx, flat_expert, safe_pos].add(contrib)
+    buf = shard_activation(buf)
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["wg"])) * jnp.einsum(
+        "gecd,edf->gecf", buf, p["wi"]
+    )
+    y = shard_activation(jnp.einsum("gecf,efd->gecd", h, p["wo"]))  # (G,E,C,D)
+
+    gathered = y[g_idx, flat_expert, safe_pos]  # (G, S2, D)
+    gathered = jnp.where(keep[..., None], gathered, 0.0)
+    weights = gate_vals.reshape(G, Tl * topk, 1).astype(gathered.dtype)
+    out = jnp.zeros((G, Tl, D), xg.dtype)
+    out = out.at[g_idx, tok_of_slot].add(gathered * weights)
+    return shard_activation(out), aux
+
+
+def _moe_tokens(p, cfg, xt, capacity_factor=1.25):
+    """xt: (T, D) -> (out (T, D), aux scalar)."""
+    T, D = xt.shape
+    E, topk = cfg.num_experts, cfg.num_experts_per_tok
+
+    logits = (xt @ p["router"].astype(xt.dtype)).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, topk)  # (T, topk)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_idx, E, dtype=jnp.float32), axis=1), axis=0
+    ) / topk
+    aux = E * jnp.sum(me * ce)
+
+    C = max(8, int(T * topk / E * capacity_factor))
+
+    flat_expert = expert_idx.reshape(-1)  # (T*topk,) slot-major? token-major
+    onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)  # (T*topk, E)
+    pos_in_expert = jnp.cumsum(onehot, axis=0) - onehot  # exclusive
+    pos = jnp.sum(pos_in_expert * onehot, axis=-1)  # (T*topk,)
+    keep = pos < C
+
+    tok_of_slot = jnp.repeat(jnp.arange(T), topk)
+    safe_pos = jnp.where(keep, pos, C - 1)
+
+    buf = jnp.zeros((E, C, D), xt.dtype)
+    contrib = jnp.where(keep[:, None], xt[tok_of_slot], 0.0)
+    buf = buf.at[flat_expert, safe_pos].add(contrib)
+
+    # batched expert FFN (Mixtral SwiGLU)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"])) * jnp.einsum(
+        "ecd,edf->ecf", buf, p["wi"]
+    )
+    y = jnp.einsum("ecf,efd->ecd", h, p["wo"])  # (E, C, D)
+
+    gathered = y[flat_expert, safe_pos]  # (T*topk, D)
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    weights = gate_vals.reshape(-1)[:, None].astype(gathered.dtype)
+    out = jnp.zeros((T, D), xt.dtype).at[tok_of_slot].add(gathered * weights)
+    return out, aux

@@ -1,0 +1,231 @@
+"""Mamba2 (SSD — state-space duality) layer: chunked train/prefill scan and
+O(1)-per-token decode recurrence.  [arXiv:2405.21060]
+
+The chunked algorithm (block decomposition of the semiseparable matrix):
+within a chunk of length Q the output is a masked "attention-like" product
+(dual form, MXU-friendly); across chunks a small (H, P, N) state is carried
+by a `lax.scan` — the TPU adaptation of the paper's GPU kernel: chunk-local
+work becomes dense matmuls aligned to the MXU, and the sequential part
+touches only the tiny inter-chunk state.
+
+Decode carries state (B, H, P, N):  state ← da * state + dt*x ⊗ B;
+y = (state · C) + D*x.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_init, rms_norm
+
+D_CONV = 4  # depthwise causal conv width
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_heads * cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return d_inner, conv_dim
+
+
+def mamba_init(key, cfg):
+    d, dt = cfg.d_model, cfg.dtype
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    d_inner, conv_dim = ssm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * d_inner + 2 * G * N + H  # z, x, B, C, dt
+    w_in, s_in = dense_init(ks[0], d, in_dim, "embed", "ssm_in", dt)
+    w_out, s_out = dense_init(ks[1], d_inner, d, "ssm_in", "embed", dt)
+    conv_w = (
+        jax.random.normal(ks[2], (D_CONV, conv_dim), jnp.float32) / np.sqrt(D_CONV)
+    ).astype(dt)
+    # A in (-exp range); standard init A ~ uniform[1, 16] then store log
+    a_log = jnp.log(
+        jax.random.uniform(ks[3], (H,), jnp.float32, minval=1.0, maxval=16.0)
+    )
+    p = {
+        "w_in": w_in,
+        "w_out": w_out,
+        "conv_w": conv_w,
+        "a_log": a_log,
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.ones((d_inner,), dt),
+    }
+    s = {
+        "w_in": s_in,
+        "w_out": s_out,
+        "conv_w": (None, "ssm_in"),
+        "a_log": (None,),
+        "d_skip": (None,),
+        "dt_bias": (None,),
+        "norm": (None,),
+    }
+    return p, s
+
+
+def _split_proj(cfg, proj):
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    d_inner = H * P
+    z, xBC, dt_raw = jnp.split(proj, [d_inner, 2 * d_inner + 2 * G * N], axis=-1)
+    return z, xBC, dt_raw
+
+
+def _causal_conv(xBC, conv_w, conv_state=None):
+    """Depthwise causal conv along seq.  xBC: (B, S, C).  If conv_state
+    (B, D_CONV-1, C) is given (decode), uses it as left context."""
+    if conv_state is not None:
+        xfull = jnp.concatenate([conv_state, xBC], axis=1)
+    else:
+        xfull = jnp.pad(xBC, ((0, 0), (D_CONV - 1, 0), (0, 0)))
+    S = xBC.shape[1]
+    out = sum(
+        xfull[:, i : i + S, :] * conv_w[i][None, None, :] for i in range(D_CONV)
+    )
+    return jax.nn.silu(out)
+
+
+def _segsum(a):
+    """Stable segment-sum: out[..., i, j] = sum_{j < k <= i} a[..., k]."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(cfg, x, B_mat, C_mat, dt, a_log, init_state=None):
+    """SSD forward.  x: (B, S, H, P); B_mat/C_mat: (B, S, G, N); dt: (B, S, H).
+
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = B_mat.shape[2], B_mat.shape[3]
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    A = -jnp.exp(a_log)  # (H,) negative
+
+    # broadcast groups -> heads
+    rep = H // G
+    Bh = jnp.repeat(B_mat, rep, axis=2)  # (B, S, H, N)
+    Ch = jnp.repeat(C_mat, rep, axis=2)
+
+    # chunked views: (B, nc, Q, ...) -> scan over nc
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    Bc = Bh.reshape(Bsz, nc, Q, H, N)
+    Cc = Ch.reshape(Bsz, nc, Q, H, N)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+
+    adt = A[None, None, None, :] * dtc  # (B, nc, Q, H)
+
+    def chunk_body(state, xs):
+        x_q, B_q, C_q, adt_q, dt_q = xs  # (B, Q, H, P/N/…)
+        # intra-chunk (dual / attention-like form)
+        L = jnp.exp(_segsum(adt_q.transpose(0, 2, 1)))  # (B, H, Q, Q)
+        scores = jnp.einsum("bqhn,bkhn->bhqk", C_q, B_q).astype(jnp.float32)
+        M = scores * L
+        y_diag = jnp.einsum("bhqk,bkh,bkhp->bqhp", M, dt_q, x_q.astype(jnp.float32))
+
+        # contribution of the carried state to this chunk
+        decay_in = jnp.exp(jnp.cumsum(adt_q, axis=1))  # (B, Q, H)
+        y_off = jnp.einsum(
+            "bqhn,bhpn,bqh->bqhp", C_q, state, decay_in
+        )
+
+        # state update for the next chunk
+        seg = jnp.sum(adt_q, axis=1)  # (B, H) total decay of the chunk
+        decay_out = jnp.exp(seg[:, None, :] - jnp.cumsum(adt_q, axis=1))  # (B,Q,H)
+        new_contrib = jnp.einsum(
+            "bqhn,bqh,bqh,bqhp->bhpn", B_q, dt_q, decay_out, x_q.astype(jnp.float32)
+        )
+        state = state * jnp.exp(seg)[:, :, None, None] + new_contrib
+        return state, (y_diag + y_off).astype(x.dtype)
+
+    state0 = (
+        init_state
+        if init_state is not None
+        else jnp.zeros((Bsz, H, P, N), jnp.float32)
+    )
+    xs = (
+        xc.swapaxes(0, 1),
+        Bc.swapaxes(0, 1),
+        Cc.swapaxes(0, 1),
+        adt.swapaxes(0, 1),
+        dtc.swapaxes(0, 1),
+    )
+    final_state, ys = jax.lax.scan(chunk_body, state0, xs)
+    y = ys.swapaxes(0, 1).reshape(Bsz, S, H, P)
+    return y, final_state
+
+
+def mamba_apply(p, cfg, x, state=None, return_cache=False):
+    """Full layer forward (train/prefill).  x: (B, S, D)."""
+    Bsz, S, _ = x.shape
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    proj = x @ p["w_in"]
+    z, xBC_raw, dt_raw = _split_proj(cfg, proj)
+    xBC = _causal_conv(xBC_raw, p["conv_w"])
+    x_in, B_mat, C_mat = jnp.split(xBC, [H * P, H * P + G * N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    y, final_state = ssd_chunked(
+        cfg,
+        x_in.reshape(Bsz, S, H, P),
+        B_mat.reshape(Bsz, S, G, N),
+        C_mat.reshape(Bsz, S, G, N),
+        dt,
+        p["a_log"],
+        init_state=state,
+    )
+    y = y + x_in.reshape(Bsz, S, H, P) * p["d_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(Bsz, S, H * P)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = y @ p["w_out"]
+    if return_cache:
+        # conv cache = last D_CONV-1 RAW (pre-activation) conv inputs
+        tail = xBC_raw[:, -(D_CONV - 1):, :]
+        pad = D_CONV - 1 - tail.shape[1]
+        if pad > 0:
+            tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+        return out, {"state": final_state, "conv": tail}
+    return out, final_state
+
+
+def make_ssm_cache(cfg, batch, dtype=None):
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    _, conv_dim = ssm_dims(cfg)
+    return {
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, D_CONV - 1, conv_dim), dtype or cfg.dtype),
+    }
+
+
+def ssm_cache_specs():
+    return {"state": ("batch", None, None, None), "conv": ("batch", None, None)}
+
+
+def mamba_decode(p, cfg, x_t, cache):
+    """One-token decode.  x_t: (B, 1, D)."""
+    Bsz = x_t.shape[0]
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    proj = x_t @ p["w_in"]
+    z, xBC, dt_raw = _split_proj(cfg, proj)
+    conv_in = cache["conv"]
+    xBC_act = _causal_conv(xBC, p["conv_w"], conv_state=conv_in)
+    new_conv = jnp.concatenate([conv_in[:, 1:], xBC], axis=1)
+    x_in, B_mat, C_mat = jnp.split(xBC_act, [H * P, H * P + G * N], axis=-1)
+    x_in = x_in.reshape(Bsz, H, P)
+    B_v = jnp.repeat(B_mat.reshape(Bsz, G, N), H // G, axis=1)  # (B,H,N)
+    C_v = jnp.repeat(C_mat.reshape(Bsz, G, N), H // G, axis=1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)[:, 0] + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["a_log"])
+    da = jnp.exp(A[None] * dt)  # (B, H)
+    state = cache["state"] * da[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt, x_in.astype(jnp.float32), B_v.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", state, C_v.astype(jnp.float32))
+    y = y + x_in.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(Bsz, 1, H * P).astype(x_t.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["w_out"], {"state": state, "conv": new_conv}

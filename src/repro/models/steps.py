@@ -1,0 +1,157 @@
+"""Step factories — the functions the launcher jits and the dry-run lowers.
+
+* train_step(params, opt_state, batch)        -> (params, opt_state, metrics)
+* prefill_step(params, batch)                 -> (last_logits, caches)
+* serve_step(params, token, pos, caches, ...) -> (logits, new_caches)
+
+All are pure; distribution comes from jit in_shardings/out_shardings
+(see repro/launch/dryrun.py) or from running them on a single device.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import mlp_apply, rms_norm, shard_activation, softcap
+from repro.models.transformer import (
+    decode_step,
+    encoder_forward,
+    forward_hidden,
+    lm_loss,
+)
+from repro.optim import clip_by_global_norm, make_optimizer
+
+
+def _memory_from_batch(params, cfg, batch):
+    if cfg.arch_type == "audio":
+        if "memory" in batch:
+            return batch["memory"]
+        return encoder_forward(params, cfg, batch["enc_embeds"])
+    if cfg.arch_type == "vlm":
+        return batch["memory"]
+    return None
+
+
+def make_train_step(cfg, optimizer_name="adamw", lr=3e-4, clip=1.0,
+                    moment_dtype=jnp.float32):
+    opt = make_optimizer(optimizer_name, moment_dtype=moment_dtype)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            memory = _memory_from_batch(p, cfg, batch)
+            return lm_loss(p, cfg, batch["tokens"], batch["labels"], memory=memory)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        params, opt_state = opt.update(grads, opt_state, params, lr)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step, opt
+
+
+def make_prefill_step(cfg, max_len=None):
+    """Full-sequence forward that also materializes decode caches.
+
+    max_len: if given, full-attention caches are padded to this many slots so
+    decode can continue past the prompt (slot j holds position j)."""
+
+    def prefill_step(params, batch):
+        tokens = batch["tokens"]
+        memory = _memory_from_batch(params, cfg, batch)
+        B, S = tokens.shape
+        x = shard_activation(
+            jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+        )
+        if cfg.scale_embed:
+            x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(cfg.dtype)
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        P = len(cfg.pattern)
+
+        def body(x, blocks_slice):
+            new_caches = []
+            for p_idx in range(P):
+                blk = blocks_slice[p_idx]
+                kind = cfg.layer_kind(p_idx)
+                h = rms_norm(x, blk["norm1"], cfg.norm_eps)
+                if kind == "mamba":
+                    out, cch = ssm_mod.mamba_apply(
+                        blk["mamba"], cfg, h, return_cache=True
+                    )
+                else:
+                    a_kind = "cross" if kind == "cross" else kind
+                    mem = memory if kind == "cross" else None
+                    out, (k, v) = attn.attn_apply(
+                        blk["attn"], cfg, h, positions, kind=a_kind, memory=mem
+                    )
+                    if kind == "cross":
+                        # cross layers keep no KV state (memory is fixed);
+                        # 1-slot dummy keeps the cache tree uniform.
+                        cch = {
+                            "k": jnp.zeros((B, 1) + k.shape[2:], k.dtype),
+                            "v": jnp.zeros((B, 1) + v.shape[2:], v.dtype),
+                            "slot_pos": jnp.full((1,), -1, jnp.int32),
+                        }
+                    elif kind == "swa" and cfg.window:
+                        size = min(cfg.window, S)
+                        # ring layout: slot j holds the latest pos == j (mod size)
+                        kept_pos = jnp.arange(S, dtype=jnp.int32)[-size:]
+                        order = jnp.argsort(kept_pos % size)
+                        cch = {
+                            "k": k[:, -size:][:, order],
+                            "v": v[:, -size:][:, order],
+                            "slot_pos": kept_pos[order],
+                        }
+                    else:
+                        tgt = max(max_len or S, S)
+                        pad = tgt - S
+                        cch = {
+                            "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                            "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                            "slot_pos": jnp.concatenate(
+                                [
+                                    jnp.arange(S, dtype=jnp.int32),
+                                    jnp.full((pad,), -1, jnp.int32),
+                                ]
+                            ),
+                        }
+                x = x + out
+                if "cross" in blk:
+                    h = rms_norm(x, blk["norm_x"], cfg.norm_eps)
+                    out, _ = attn.attn_apply(
+                        blk["cross"], cfg, h, positions, kind="cross", memory=memory
+                    )
+                    x = x + out
+                if cfg.d_ff > 0:
+                    h = rms_norm(x, blk["norm2"], cfg.norm_eps)
+                    if "moe" in blk:
+                        out, _ = moe_mod.moe_apply(blk["moe"], cfg, h)
+                    else:
+                        out = mlp_apply(blk["mlp"], h, cfg.mlp_type)
+                    x = x + out
+                x = shard_activation(x)
+                new_caches.append(cch)
+            return x, tuple(new_caches)
+
+        x, caches = jax.lax.scan(body, x, tuple(params["blocks"]))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params.get(
+            "lm_head", params["embed"].T if cfg.tie_embeddings else None
+        )
+        logits = (x[:, -1, :] @ head).astype(jnp.float32)
+        logits = softcap(logits, cfg.logit_softcap)
+        return logits, list(caches)
+
+    return prefill_step
+
+
+def make_serve_step(cfg):
+    def serve_step(params, token, pos, caches, memory=None):
+        return decode_step(params, cfg, token, caches, pos, memory=memory)
+
+    return serve_step

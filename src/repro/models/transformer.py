@@ -1,0 +1,336 @@
+"""Model assembly: decoder-only LM (dense / MoE / SSM / hybrid / VLM) plus an
+optional bidirectional encoder (audio enc-dec).
+
+Layer stacking: the per-layer kind pattern (cfg.pattern, length P) repeats
+R = num_layers / P times.  Parameters for period-position p are STACKED over
+R and the forward pass is a single `lax.scan` over R whose body applies the
+P block kinds in order — HLO contains each block body once, which keeps
+.lower()/.compile() tractable for 46-72 layer models and is the idiomatic
+TPU pattern (same weights layout as MaxText's scanned layers).
+
+Block structure (pre-norm residual):
+    x += mixer(norm(x))            mixer: attention kind or mamba
+    x += cross_attn(norm(x), mem)  only audio decoder blocks
+    x += mlp_or_moe(norm(x))       skipped when d_ff == 0 (pure mamba2)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    chunked_cross_entropy,
+    dense_init,
+    embed_init,
+    mlp_apply,
+    mlp_init,
+    rms_norm,
+    shard_activation,
+    softcap,
+)
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _block_init(key, cfg, p_idx: int, with_cross: bool):
+    kind = cfg.layer_kind(p_idx)
+    ks = jax.random.split(key, 6)
+    params: dict[str, Any] = {"norm1": jnp.ones((cfg.d_model,), cfg.dtype)}
+    specs: dict[str, Any] = {"norm1": (None,)}
+    if kind == "mamba":
+        params["mamba"], specs["mamba"] = ssm_mod.mamba_init(ks[0], cfg)
+    else:
+        params["attn"], specs["attn"] = attn.attn_init(ks[0], cfg, kind)
+    if with_cross:
+        params["norm_x"] = jnp.ones((cfg.d_model,), cfg.dtype)
+        specs["norm_x"] = (None,)
+        params["cross"], specs["cross"] = attn.attn_init(ks[1], cfg, "cross")
+    if cfg.d_ff > 0:
+        params["norm2"] = jnp.ones((cfg.d_model,), cfg.dtype)
+        specs["norm2"] = (None,)
+        if cfg.is_moe_layer(p_idx):
+            params["moe"], specs["moe"] = moe_mod.moe_init(ks[2], cfg)
+        else:
+            params["mlp"], specs["mlp"] = mlp_init(ks[3], cfg)
+    return params, specs
+
+
+def _stacked_blocks_init(key, cfg, with_cross=False):
+    """Stack each period position over R repeats (leading 'layers' axis)."""
+    P, R = len(cfg.pattern), cfg.repeats
+    blocks, bspecs = [], []
+    for p in range(P):
+        keys = jax.random.split(jax.random.fold_in(key, p), R)
+        params = jax.vmap(lambda k: _block_init(k, cfg, p, with_cross)[0])(keys)
+        _, spec = _block_init(jax.random.PRNGKey(0), cfg, p, with_cross)
+        spec = jax.tree.map(
+            lambda s: ("layers",) + tuple(s),
+            spec,
+            is_leaf=lambda s: isinstance(s, tuple),
+        )
+        blocks.append(params)
+        bspecs.append(spec)
+    return blocks, bspecs
+
+
+def init_lm_params(cfg, key):
+    ks = jax.random.split(key, 5)
+    embed, embed_spec = embed_init(ks[0], cfg.vocab_size, cfg.d_model, cfg.dtype)
+    with_cross = cfg.arch_type == "audio"  # audio decoder blocks carry cross-attn
+    blocks, bspecs = _stacked_blocks_init(ks[1], cfg, with_cross=with_cross)
+    params = {
+        "embed": embed,
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+    }
+    specs = {"embed": embed_spec, "blocks": bspecs, "final_norm": (None,)}
+    if not cfg.tie_embeddings:
+        lm_head, s = dense_init(
+            ks[2], cfg.d_model, cfg.vocab_size, "embed", "vocab", cfg.dtype
+        )
+        params["lm_head"] = lm_head
+        specs["lm_head"] = s
+    if cfg.enc_layers > 0:
+        enc_cfg = cfg
+        enc_blocks, enc_specs = [], []
+        keys = jax.random.split(ks[3], cfg.enc_layers)
+        enc_params = jax.vmap(
+            lambda k: _enc_block_init(k, enc_cfg)[0]
+        )(keys)
+        _, es = _enc_block_init(jax.random.PRNGKey(0), enc_cfg)
+        es = jax.tree.map(
+            lambda s: ("layers",) + tuple(s), es,
+            is_leaf=lambda s: isinstance(s, tuple),
+        )
+        params["encoder"] = {"blocks": enc_params, "final_norm": jnp.ones((cfg.d_model,), cfg.dtype)}
+        specs["encoder"] = {"blocks": es, "final_norm": (None,)}
+    return params, specs
+
+
+def _enc_block_init(key, cfg):
+    ks = jax.random.split(key, 2)
+    p = {"norm1": jnp.ones((cfg.d_model,), cfg.dtype), "norm2": jnp.ones((cfg.d_model,), cfg.dtype)}
+    s = {"norm1": (None,), "norm2": (None,)}
+    p["attn"], s["attn"] = attn.attn_init(ks[0], cfg, "bidir")
+    p["mlp"], s["mlp"] = mlp_init(ks[1], cfg)
+    return p, s
+
+
+def abstract_lm_params(cfg):
+    """(ShapeDtypeStruct param tree, logical-axis spec tree) — no allocation.
+
+    The spec tree is static Python data built during tracing, captured via a
+    side channel; the param tree comes from eval_shape.
+    """
+    box = {}
+
+    def build(key):
+        params, specs = init_lm_params(cfg, key)
+        box["specs"] = specs
+        return params
+
+    shapes = jax.eval_shape(build, jax.random.PRNGKey(0))
+    return shapes, box["specs"]
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(p, cfg, p_idx, x, positions, memory, collect_kv):
+    kind = cfg.layer_kind(p_idx)
+    aux = jnp.float32(0.0)
+    kv = None
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if kind == "mamba":
+        out, _state = ssm_mod.mamba_apply(p["mamba"], cfg, h)
+    else:
+        a_kind = "cross" if kind == "cross" else kind
+        mem = memory if kind == "cross" else None
+        out, kv = attn.attn_apply(
+            p["attn"], cfg, h, positions, kind=a_kind, memory=mem
+        )
+    x = x + out
+    if "cross" in p:
+        h = rms_norm(x, p["norm_x"], cfg.norm_eps)
+        out, _ = attn.attn_apply(p["cross"], cfg, h, positions, kind="cross", memory=memory)
+        x = x + out
+    if cfg.d_ff > 0:
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if "moe" in p:
+            out, aux = moe_mod.moe_apply(p["moe"], cfg, h)
+        else:
+            out = mlp_apply(p["mlp"], h, cfg.mlp_type)
+        x = x + out
+    return x, aux, (kv if collect_kv else None)
+
+
+def forward_hidden(params, cfg, tokens, memory=None):
+    """tokens: (B, S) int32 -> final hidden states (B, S, D) + aux loss."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    x = shard_activation(x)
+    if cfg.scale_embed:
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    P = len(cfg.pattern)
+
+    def body(carry, blocks_slice):
+        x, aux = carry
+        for p_idx in range(P):
+            x, a, _ = _apply_block(
+                blocks_slice[p_idx], cfg, p_idx, x, positions, memory, False
+            )
+            x = shard_activation(x)
+            aux = aux + a
+        return (x, aux), None
+
+    body_fn = body
+    if cfg.remat and cfg.remat_policy != "none":
+        # "nothing": min-memory, recomputes everything incl. TP collectives;
+        # "dots": saves matmul outputs -> backward re-reads instead of
+        # recomputing (trades HBM for recompute FLOPs + repeated collectives)
+        policy = {
+            "nothing": jax.checkpoint_policies.nothing_saveable,
+            "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        }[cfg.remat_policy]
+        body_fn = jax.checkpoint(body, policy=policy)
+
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0.0)), tuple(params["blocks"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def encoder_forward(params, cfg, enc_embeds):
+    """Bidirectional encoder over stub frame embeddings (B, S_enc, D)."""
+    x = shard_activation(enc_embeds.astype(cfg.dtype))
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(x, blk):
+        h = rms_norm(x, blk["norm1"], cfg.norm_eps)
+        out, _ = attn.attn_apply(blk["attn"], cfg, h, positions, kind="bidir")
+        x = x + out
+        h = rms_norm(x, blk["norm2"], cfg.norm_eps)
+        x = x + mlp_apply(blk["mlp"], h, cfg.mlp_type)
+        return x, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["encoder"]["blocks"])
+    return rms_norm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def lm_loss(params, cfg, tokens, labels, memory=None, aux_weight=0.01):
+    hidden, aux = forward_hidden(params, cfg, tokens, memory=memory)
+    head = params.get("lm_head", params["embed"].T if cfg.tie_embeddings else None)
+    loss = chunked_cross_entropy(
+        hidden, labels, head, chunk=min(512, tokens.shape[1]),
+        logit_cap=cfg.logit_softcap,
+    )
+    return loss + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg, batch, s_max, dtype=None):
+    """Stacked cache pytree: list over period positions, leaves (R, ...)."""
+    P, R = len(cfg.pattern), cfg.repeats
+    caches = []
+    for p_idx in range(P):
+        kind = cfg.layer_kind(p_idx)
+        if kind == "mamba":
+            one = ssm_mod.make_ssm_cache(cfg, batch, dtype)
+        elif kind == "cross":
+            one = attn.make_cache(cfg, batch, 1, kind="full", dtype=dtype)
+        else:
+            one = attn.make_cache(cfg, batch, s_max, kind=kind, dtype=dtype)
+        caches.append(jax.tree.map(lambda v: jnp.broadcast_to(v[None], (R,) + v.shape), one))
+    return caches
+
+
+def cache_spec_tree(cfg):
+    P = len(cfg.pattern)
+    out = []
+    for p_idx in range(P):
+        kind = cfg.layer_kind(p_idx)
+        if kind == "mamba":
+            s = ssm_mod.ssm_cache_specs()
+        else:
+            s = attn.cache_specs(kind)
+        out.append(
+            jax.tree.map(
+                lambda ax: ("layers",) + tuple(ax), s,
+                is_leaf=lambda ax: isinstance(ax, tuple),
+            )
+        )
+    return out
+
+
+def decode_step(params, cfg, token, caches, pos, memory=None):
+    """One-token decode through the whole stack.
+
+    token: (B,) int32; pos: scalar int32; caches as from init_caches.
+    Returns (logits (B, V), new_caches).
+    """
+    B = token.shape[0]
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(cfg.dtype)
+    x = shard_activation(x)
+    if cfg.scale_embed:
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(cfg.dtype)
+    P = len(cfg.pattern)
+
+    def body(x, xs):
+        blocks_slice, cache_slice = xs
+        new_caches = []
+        for p_idx in range(P):
+            blk = blocks_slice[p_idx]
+            cch = cache_slice[p_idx]
+            kind = cfg.layer_kind(p_idx)
+            h = rms_norm(x, blk["norm1"], cfg.norm_eps)
+            if kind == "mamba":
+                out, cch = ssm_mod.mamba_decode(blk["mamba"], cfg, h, cch)
+            elif kind == "cross":
+                out, cch = attn.attn_decode(
+                    blk["attn"], cfg, h, cch, pos, kind="cross", memory=memory
+                )
+            else:
+                out, cch = attn.attn_decode(blk["attn"], cfg, h, cch, pos, kind=kind)
+            x = x + out
+            if "cross" in blk:
+                h = rms_norm(x, blk["norm_x"], cfg.norm_eps)
+                out, _ = attn.attn_decode(
+                    blk["cross"], cfg, h, None, pos, kind="cross", memory=memory
+                )
+                x = x + out
+            if cfg.d_ff > 0:
+                h = rms_norm(x, blk["norm2"], cfg.norm_eps)
+                if "moe" in blk:
+                    out, _ = moe_mod.moe_apply(blk["moe"], cfg, h)
+                else:
+                    out = mlp_apply(blk["mlp"], h, cfg.mlp_type)
+                x = x + out
+            x = shard_activation(x)
+            new_caches.append(cch)
+        return x, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(body, x, (tuple(params["blocks"]), tuple(caches)))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head", params["embed"].T if cfg.tie_embeddings else None)
+    logits = (x[:, 0, :] @ head).astype(jnp.float32)
+    logits = softcap(logits, cfg.logit_softcap)
+    # scan stacked the per-repeat caches along axis 0 already (xs semantics)
+    return logits, list(new_caches)

@@ -1,0 +1,10 @@
+from repro.optim.optimizers import (  # noqa: F401
+    OptState,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    make_optimizer,
+    sgdm_init,
+    sgdm_update,
+)
+from repro.optim.schedules import cosine_schedule, linear_warmup  # noqa: F401

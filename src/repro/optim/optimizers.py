@@ -1,0 +1,101 @@
+"""Optimizers over parameter pytrees (no external deps).
+
+Optimizer state mirrors the parameter tree leaf-for-leaf so it inherits the
+parameter PartitionSpecs (ZeRO-style sharded moments for free).  ``moment_dtype``
+lets very large models (jamba-398b) keep Adam moments in bf16 — recorded in
+DESIGN.md as a memory-driven adaptation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any  # first moment / momentum
+    v: Any  # second moment (None for SGD-M)
+
+
+def clip_by_global_norm(grads, max_norm):
+    leaves = jax.tree.leaves(jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), grads))
+    gnorm = jnp.sqrt(sum(leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gnorm
+
+
+# -- SGD with momentum -------------------------------------------------------
+
+
+def sgdm_init(params, moment_dtype=jnp.float32):
+    m = jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=m, v=None)
+
+
+def sgdm_update(grads, state, params, lr, momentum=0.9, weight_decay=0.0):
+    m = jax.tree.map(
+        lambda mm, g: momentum * mm + g.astype(mm.dtype), state.m, grads
+    )
+    new_params = jax.tree.map(
+        lambda p, mm: (p.astype(jnp.float32) * (1 - lr * weight_decay) - lr * mm.astype(jnp.float32)).astype(p.dtype),
+        params,
+        m,
+    )
+    return new_params, OptState(step=state.step + 1, m=m, v=None)
+
+
+# -- AdamW -------------------------------------------------------------------
+
+
+def adamw_init(params, moment_dtype=jnp.float32):
+    m = jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype), params)
+    v = jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=m, v=v)
+
+
+def adamw_update(
+    grads, state, params, lr, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1
+):
+    step = state.step + 1
+    m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g.astype(mm.dtype), state.m, grads)
+    v = jax.tree.map(
+        lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(vv.dtype)), state.v, grads
+    )
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, mm, vv):
+        mh = mm.astype(jnp.float32) / c1
+        vh = vv.astype(jnp.float32) / c2
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, OptState(step=step, m=m, v=v)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Any
+    update: Any
+    name: str
+
+
+def make_optimizer(name: str, moment_dtype=jnp.float32) -> Optimizer:
+    if name in ("sgd", "sgdm"):
+        return Optimizer(
+            init=lambda p: sgdm_init(p, moment_dtype),
+            update=sgdm_update,
+            name="sgdm",
+        )
+    if name == "adamw":
+        return Optimizer(
+            init=lambda p: adamw_init(p, moment_dtype),
+            update=adamw_update,
+            name="adamw",
+        )
+    raise ValueError(name)

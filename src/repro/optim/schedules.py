@@ -1,0 +1,20 @@
+"""Learning-rate schedules (pure functions of an int32 step)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, base_lr, warmup_steps):
+    frac = jnp.minimum(step.astype(jnp.float32) / max(warmup_steps, 1), 1.0)
+    return base_lr * frac
+
+
+def cosine_schedule(step, base_lr, total_steps, warmup_steps=0, min_frac=0.1):
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / max(warmup_steps, 1), 1.0) if warmup_steps else 1.0
+    progress = jnp.clip(
+        (s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+    )
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+    return base_lr * warm * cos

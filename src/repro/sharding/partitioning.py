@@ -1,0 +1,108 @@
+"""Logical-axis rules -> PartitionSpec resolution (MaxText-style).
+
+Weights:  "embed" (d_model dims) shards over the data axes (FSDP),
+          "vocab"/"ffn"/"heads_hd"/"kv_hd"/"ssm_in" shard over "model"
+          (tensor parallel), "experts"/"layers" replicate.
+Activations: "batch" shards over (pod, data); KV-cache "cache_seq" shards
+          over "model" (long-context decode -> flash-decoding-style combine).
+
+``resolve`` drops any axis whose mesh size does not divide the dim — this is
+what lets batch=1 (long_500k) or kv=4 < 16 fall back to replication instead
+of erroring, and it is recorded in the dry-run output.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# logical axis -> mesh axes (tried in order; dropped if not divisible)
+DEFAULT_RULES: dict[str, tuple] = {
+    "embed": ("data",),
+    "moe_embed": ("data",),  # expert-weight d_model (FSDP by default)
+    "vocab": ("model",),
+    "ffn": ("model",),
+    "heads_hd": ("model",),
+    "kv_hd": ("model",),
+    "ssm_in": ("model",),
+    "experts": (),
+    "layers": (),
+    "batch": ("pod", "data"),
+    "cache_seq": ("model",),
+    "seq": (),
+}
+
+# multi-pod: extend FSDP across pods (proves the pod axis shards weights too)
+MULTIPOD_RULES = dict(DEFAULT_RULES)
+MULTIPOD_RULES["embed"] = ("pod", "data")
+
+# weight-stationary decode (§Perf gemma2 iteration): FSDP weight gathering
+# re-fetches every weight shard EVERY decoded token; for latency-bound decode
+# keep weights tensor-parallel only (d_model replicated) so nothing moves.
+DECODE_RULES = dict(DEFAULT_RULES)
+DECODE_RULES["embed"] = ()
+MULTIPOD_DECODE_RULES = dict(MULTIPOD_RULES)
+MULTIPOD_DECODE_RULES["embed"] = ()
+
+
+# shard-local MoE dispatch (§Perf mixtral): expert weights replicate their
+# d_model dim (tensor-parallel only) so per-group expert matmuls contract an
+# unsharded dim — removes the activation-sized partial-sum all-reduce.
+MOE_LOCAL_RULES = dict(DEFAULT_RULES)
+MOE_LOCAL_RULES["moe_embed"] = ()
+MULTIPOD_MOE_LOCAL_RULES = dict(MULTIPOD_RULES)
+MULTIPOD_MOE_LOCAL_RULES["moe_embed"] = ()
+
+
+def rules_for_mesh(mesh: Mesh, variant: str = "default") -> dict:
+    multi = "pod" in mesh.axis_names
+    if variant == "decode_stationary":
+        return MULTIPOD_DECODE_RULES if multi else DECODE_RULES
+    if variant == "moe_local":
+        return MULTIPOD_MOE_LOCAL_RULES if multi else MOE_LOCAL_RULES
+    return MULTIPOD_RULES if multi else DEFAULT_RULES
+
+
+def resolve(logical_axes, shape, mesh: Mesh, rules=None) -> P:
+    """Map a logical-axis tuple + concrete shape to a PartitionSpec."""
+    rules = rules or rules_for_mesh(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    parts = []
+    for dim, ax in zip(shape, logical_axes):
+        if ax is None:
+            parts.append(None)
+            continue
+        want = rules.get(ax, ())
+        want = tuple(a for a in want if a in sizes)
+        prod = int(np.prod([sizes[a] for a in want])) if want else 1
+        if want and dim % prod == 0 and dim > 0:
+            parts.append(want if len(want) > 1 else want[0])
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def tree_shardings(spec_tree, shape_tree, mesh: Mesh, rules=None):
+    """Resolve a logical-spec tree against a ShapeDtypeStruct tree."""
+
+    def is_axes(x):
+        return isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        )
+
+    def one(axes, shp):
+        return NamedSharding(mesh, resolve(axes, shp.shape, mesh, rules))
+
+    return jax.tree.map(one, spec_tree, shape_tree, is_leaf=lambda x: is_axes(x))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def batch_sharding(mesh: Mesh, shape, ndim: int):
+    """Sharding for a (B, ...) activation: batch over (pod, data) if divisible."""
+    spec = resolve(("batch",) + (None,) * (ndim - 1), shape, mesh)
+    return NamedSharding(mesh, spec)

@@ -1,0 +1,13 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))  # cross-test helper imports
+
+# Tests run on the single real CPU device; only launch/dryrun.py forces 512
+# placeholder devices (and does so before importing jax — see that module).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("JAX_ENABLE_X64", "0")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_matmul_precision", "highest")

@@ -1,0 +1,168 @@
+"""Attention semantics: causality, sliding windows, GQA grouping, chunked
+scan == unchunked reference, decode == prefill, softcap."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import (
+    attn_apply,
+    attn_decode,
+    attn_init,
+    make_cache,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def mk_cfg(**kw):
+    base = dict(
+        name="t", arch_type="dense", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=64,
+        pattern=("full",), dtype=jnp.float32,
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _pos(B, S):
+    return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+
+def _ref_attention(p, cfg, x, kind="full"):
+    """Unchunked dense reference (numpy-style, no scan)."""
+    B, S, _ = x.shape
+    from repro.models.attention import _gqa_out, _gqa_scores, _project_qkv
+
+    q, k, v = _project_qkv(p, cfg, x, _pos(B, S))
+    scores = _gqa_scores(q, k, cfg)
+    i = jnp.arange(S)
+    mask = i[:, None] >= i[None, :]
+    if kind == "swa" and cfg.window:
+        mask &= (i[:, None] - i[None, :]) < cfg.window
+    scores = jnp.where(mask[None, None, None], scores, -2.0e38)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return _gqa_out(probs, v) @ p["wo"]
+
+
+@pytest.mark.parametrize("S,q_chunk", [(64, 16), (128, 32), (96, 96)])
+def test_chunked_matches_reference(S, q_chunk):
+    cfg = mk_cfg()
+    p, _ = attn_init(KEY, cfg, "full")
+    x = jax.random.normal(KEY, (2, S, cfg.d_model))
+    out, _ = attn_apply(p, cfg, x, _pos(2, S), kind="full", q_chunk=q_chunk)
+    want = _ref_attention(p, cfg, x, "full")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_causality():
+    """Changing a future token never changes past outputs."""
+    cfg = mk_cfg()
+    p, _ = attn_init(KEY, cfg, "full")
+    S = 32
+    x = jax.random.normal(KEY, (1, S, cfg.d_model))
+    out1, _ = attn_apply(p, cfg, x, _pos(1, S), kind="full", q_chunk=8)
+    x2 = x.at[0, -1].add(100.0)
+    out2, _ = attn_apply(p, cfg, x2, _pos(1, S), kind="full", q_chunk=8)
+    np.testing.assert_allclose(
+        np.asarray(out1[0, :-1]), np.asarray(out2[0, :-1]), atol=1e-5
+    )
+    assert not np.allclose(out1[0, -1], out2[0, -1])
+
+
+def test_sliding_window_blocks_distant_tokens():
+    cfg = mk_cfg(window=8, pattern=("swa",))
+    p, _ = attn_init(KEY, cfg, "swa")
+    S = 64
+    x = jax.random.normal(KEY, (1, S, cfg.d_model))
+    out1, _ = attn_apply(p, cfg, x, _pos(1, S), kind="swa", q_chunk=16)
+    # perturb token 0: outputs at positions >= 8 must be unchanged
+    x2 = x.at[0, 0].add(100.0)
+    out2, _ = attn_apply(p, cfg, x2, _pos(1, S), kind="swa", q_chunk=16)
+    np.testing.assert_allclose(
+        np.asarray(out1[0, 8:]), np.asarray(out2[0, 8:]), atol=1e-5
+    )
+    assert not np.allclose(out1[0, 1], out2[0, 1])  # within window: changed
+
+
+def test_swa_matches_reference():
+    cfg = mk_cfg(window=16, pattern=("swa",))
+    p, _ = attn_init(KEY, cfg, "swa")
+    x = jax.random.normal(KEY, (2, 64, cfg.d_model))
+    out, _ = attn_apply(p, cfg, x, _pos(2, 64), kind="swa", q_chunk=16)
+    want = _ref_attention(p, cfg, x, "swa")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_decode_matches_prefill_stepwise():
+    """Token-by-token decode reproduces the full forward (full attention)."""
+    cfg = mk_cfg()
+    p, _ = attn_init(KEY, cfg, "full")
+    B, S = 2, 24
+    x = jax.random.normal(KEY, (B, S, cfg.d_model))
+    want, _ = attn_apply(p, cfg, x, _pos(B, S), kind="full", q_chunk=S)
+
+    cache = make_cache(cfg, B, S, kind="full")
+    outs = []
+    for t in range(S):
+        o, cache = attn_decode(p, cfg, x[:, t : t + 1], cache, jnp.int32(t), kind="full")
+        outs.append(o)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+def test_decode_matches_prefill_swa_ring():
+    """Ring-buffer window decode == windowed full forward."""
+    cfg = mk_cfg(window=8, pattern=("swa",))
+    p, _ = attn_init(KEY, cfg, "swa")
+    B, S = 1, 40
+    x = jax.random.normal(KEY, (B, S, cfg.d_model))
+    want, _ = attn_apply(p, cfg, x, _pos(B, S), kind="swa", q_chunk=8)
+
+    cache = make_cache(cfg, B, S, kind="swa")
+    assert cache["k"].shape[1] == 8  # ring buffer = window
+    outs = []
+    for t in range(S):
+        o, cache = attn_decode(p, cfg, x[:, t : t + 1], cache, jnp.int32(t), kind="swa")
+        outs.append(o)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+def test_gqa_grouping_correct():
+    """With kv_heads == heads (MHA) vs GQA, shapes work and GQA == MHA when
+    kv heads are replicated copies."""
+    cfg = mk_cfg(num_heads=4, num_kv_heads=4)
+    p, _ = attn_init(KEY, cfg, "full")
+    x = jax.random.normal(KEY, (1, 16, cfg.d_model))
+    out, (k, v) = attn_apply(p, cfg, x, _pos(1, 16))
+    assert k.shape == (1, 16, 4, 16)
+
+    cfg2 = mk_cfg(num_heads=4, num_kv_heads=2)
+    p2, _ = attn_init(KEY, cfg2, "full")
+    out2, (k2, v2) = attn_apply(p2, cfg2, x, _pos(1, 16))
+    assert k2.shape == (1, 16, 2, 16)
+    assert out2.shape == out.shape
+
+
+def test_attn_softcap_bounds_scores():
+    cfg = mk_cfg(attn_softcap=5.0)
+    from repro.models.attention import _gqa_scores
+
+    q = 100.0 * jax.random.normal(KEY, (1, 8, 4, 16))
+    k = 100.0 * jax.random.normal(KEY, (1, 8, 2, 16))
+    scores = _gqa_scores(q, k, cfg)
+    assert float(jnp.max(jnp.abs(scores))) <= 5.0 + 1e-5
+
+
+def test_cross_attention_uses_memory():
+    cfg = mk_cfg()
+    p, _ = attn_init(KEY, cfg, "cross")
+    x = jax.random.normal(KEY, (1, 8, cfg.d_model))
+    mem1 = jax.random.normal(jax.random.PRNGKey(1), (1, 20, cfg.d_model))
+    mem2 = jax.random.normal(jax.random.PRNGKey(2), (1, 20, cfg.d_model))
+    o1, _ = attn_apply(p, cfg, x, _pos(1, 8), kind="cross", memory=mem1)
+    o2, _ = attn_apply(p, cfg, x, _pos(1, 8), kind="cross", memory=mem2)
+    assert not np.allclose(np.asarray(o1), np.asarray(o2))

@@ -1,0 +1,181 @@
+"""Baselines converge on the analytic quadratic bilevel problem, and the
+communication-volume ordering matches the paper (C2DFB << MADSBO < MDBO)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import (
+    F2SAConfig,
+    MADSBOConfig,
+    MDBOConfig,
+    c2dfb_nc_init,
+    c2dfb_nc_round,
+    f2sa_init,
+    f2sa_round,
+    madsbo_init,
+    madsbo_round,
+    madsbo_round_wire_bytes,
+    mdbo_init,
+    mdbo_round,
+    mdbo_round_wire_bytes,
+)
+from repro.core.c2dfb import C2DFBConfig, init_state, round_wire_bytes
+from repro.core.topology import ring
+from repro.core.types import broadcast_nodes, node_mean
+
+from test_c2dfb import make_quadratic_bilevel
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _inits(problem, m):
+    x0 = broadcast_nodes(jnp.asarray(np.full(5, 0.7), jnp.float32), m)
+    y0 = broadcast_nodes(jnp.zeros(7, jnp.float32), m)
+    return x0, y0
+
+
+def test_mdbo_converges():
+    problem, true_hg, _ = make_quadratic_bilevel()
+    m = problem.m
+    topo = ring(m)
+    x0, y0 = _inits(problem, m)
+    cfg = MDBOConfig(eta_x=0.2, eta_y=0.3, gamma=0.5, K=20, neumann_N=20, neumann_eta=0.5)
+    state = mdbo_init(x0, y0)
+
+    @jax.jit
+    def many(state):
+        def body(st, _):
+            st, mt = mdbo_round(st, problem, topo, cfg)
+            return st, mt["hypergrad_norm"]
+
+        return jax.lax.scan(body, state, None, length=80)
+
+    state, hgs = many(state)
+    x_bar = np.asarray(node_mean(state.x))
+    assert np.linalg.norm(true_hg(x_bar)) < 0.05
+    assert float(hgs[-1]) < float(hgs[0])
+
+
+def test_madsbo_converges():
+    problem, true_hg, _ = make_quadratic_bilevel()
+    m = problem.m
+    topo = ring(m)
+    x0, y0 = _inits(problem, m)
+    cfg = MADSBOConfig(eta_x=0.2, eta_y=0.3, eta_v=0.3, gamma=0.5, K=15, Q=15, alpha=0.3)
+    state = madsbo_init(problem, x0, y0)
+
+    @jax.jit
+    def many(state):
+        def body(st, _):
+            st, mt = madsbo_round(st, problem, topo, cfg)
+            return st, mt["hypergrad_norm"]
+
+        return jax.lax.scan(body, state, None, length=100)
+
+    state, hgs = many(state)
+    x_bar = np.asarray(node_mean(state.x))
+    assert np.linalg.norm(true_hg(x_bar)) < 0.08
+
+
+def test_c2dfb_nc_runs_and_converges():
+    """nc needs a gentler mixing step (gamma_in=0.2) than reference-point
+    C2DFB tolerates (0.5) — the paper's stability claim; see also
+    test_nc_unstable_where_reference_point_is_stable."""
+    problem, true_hg, _ = make_quadratic_bilevel()
+    m = problem.m
+    topo = ring(m)
+    x0, y0 = _inits(problem, m)
+    cfg = C2DFBConfig(
+        lam=50.0, eta_out=0.3, gamma_out=0.5, eta_in=0.3, gamma_in=0.2,
+        K=30, compressor="topk", comp_ratio=0.5,
+    )
+    state = c2dfb_nc_init(problem, cfg, x0, y0)
+
+    @jax.jit
+    def many(state, key):
+        def body(carry, k):
+            st, _ = carry
+            st, mt = c2dfb_nc_round(st, k, problem, topo, cfg)
+            return (st, mt["hypergrad_norm"]), mt["hypergrad_norm"]
+
+        keys = jax.random.split(key, 60)
+        (st, _), hgs = jax.lax.scan(body, (state, jnp.array(0.0)), keys)
+        return st, hgs
+
+    state, hgs = many(state, KEY)
+    assert np.isfinite(float(hgs[-1]))
+    assert float(hgs[-1]) < float(hgs[0])
+
+
+def test_f2sa_centralized_converges():
+    problem, true_hg, _ = make_quadratic_bilevel()
+    x0 = jnp.asarray(np.full(5, 0.7), jnp.float32)
+    y0 = jnp.zeros(7, jnp.float32)
+    cfg = F2SAConfig(lam=50.0, eta_x=0.3, eta_y=0.02, K=100)
+    state = f2sa_init(x0, y0)
+
+    @jax.jit
+    def many(state):
+        def body(st, _):
+            st, mt = f2sa_round(st, problem, cfg)
+            return st, mt["hypergrad_norm"]
+
+        return jax.lax.scan(body, state, None, length=100)
+
+    state, hgs = many(state)
+    assert np.linalg.norm(true_hg(np.asarray(state.x))) < 0.05
+
+
+def test_nc_unstable_where_reference_point_is_stable():
+    """Fig. 3's stability story, sharpened into an assertion: with the SAME
+    aggressive hyperparameters (gamma_in=0.5, topk 0.5), reference-point
+    C2DFB converges while naive error-feedback nc blows up."""
+    from repro.core.c2dfb import run as c2dfb_run
+
+    problem, _, _ = make_quadratic_bilevel()
+    m = problem.m
+    topo = ring(m)
+    x0, y0 = _inits(problem, m)
+    cfg = C2DFBConfig(
+        lam=50.0, eta_out=0.3, gamma_out=0.5, eta_in=0.5, gamma_in=0.5,
+        K=30, compressor="topk", comp_ratio=0.5,
+    )
+    _, ref_metrics = c2dfb_run(problem, topo, cfg, x0, y0, T=60, key=KEY)
+    ref_final = float(ref_metrics["hypergrad_norm"][-1])
+
+    state = c2dfb_nc_init(problem, cfg, x0, y0)
+
+    @jax.jit
+    def many(state, key):
+        def body(st, k):
+            st, mt = c2dfb_nc_round(st, k, problem, topo, cfg)
+            return st, mt["hypergrad_norm"]
+
+        return jax.lax.scan(body, state, jax.random.split(key, 60))
+
+    _, nc_hgs = many(state, KEY)
+    nc_final = float(nc_hgs[-1])
+    assert ref_final < 0.01
+    assert (not np.isfinite(nc_final)) or nc_final > 10 * ref_final
+
+
+def test_comm_volume_ordering():
+    """Per-round wire bytes: compressed C2DFB < MADSBO ~ MDBO (uncompressed)."""
+    problem, _, _ = make_quadratic_bilevel()
+    m = problem.m
+    topo = ring(m)
+    x0, y0 = _inits(problem, m)
+
+    cfg = C2DFBConfig(K=10, compressor="topk", comp_ratio=0.1)
+    st = init_state(problem, cfg, x0, y0)
+    c2dfb_bytes = round_wire_bytes(st, cfg, topo)["total_bytes"]
+
+    mcfg = MDBOConfig(K=10, neumann_N=10)
+    mdbo_bytes = mdbo_round_wire_bytes(mdbo_init(x0, y0), mcfg, topo)
+
+    acfg = MADSBOConfig(K=10, Q=10)
+    madsbo_bytes = madsbo_round_wire_bytes(madsbo_init(problem, x0, y0), acfg, topo)
+
+    assert c2dfb_bytes < madsbo_bytes
+    assert c2dfb_bytes < mdbo_bytes

@@ -1,0 +1,130 @@
+"""Contractive-compressor properties (paper Definition 2 / Proposition 1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import (
+    BlockTopK,
+    Identity,
+    RandK,
+    Rescaled,
+    StochasticQuant,
+    TopK,
+    empirical_contraction,
+    make_compressor,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize(
+    "comp",
+    [
+        Identity(),
+        TopK(ratio=0.2),
+        TopK(ratio=0.5),
+        BlockTopK(ratio=0.2, block=64),
+        RandK(ratio=0.3),
+        StochasticQuant(bits=4),
+        StochasticQuant(bits=8),
+    ],
+    ids=lambda c: type(c).__name__ + str(getattr(c, "ratio", getattr(c, "bits", ""))),
+)
+def test_contraction_bound(comp):
+    """E||Q(x)-x||^2 <= (1-delta)||x||^2, estimated over draws."""
+    ratios = []
+    for i in range(8):
+        x = jax.random.normal(jax.random.PRNGKey(100 + i), (513,))
+        r = empirical_contraction(comp, jax.random.PRNGKey(i), x)
+        ratios.append(float(r))
+    assert np.mean(ratios) <= (1.0 - comp.delta) + 0.05, (
+        np.mean(ratios),
+        comp.delta,
+    )
+
+
+def test_topk_keeps_largest():
+    x = jnp.array([0.1, -5.0, 0.2, 3.0, -0.05])
+    out = TopK(ratio=0.4)(KEY, x)
+    np.testing.assert_allclose(out, jnp.array([0.0, -5.0, 0.0, 3.0, 0.0]))
+
+
+def test_block_topk_matches_topk_single_block():
+    x = jax.random.normal(KEY, (64,))
+    a = TopK(ratio=0.25)(KEY, x)
+    b = BlockTopK(ratio=0.25, block=64)(KEY, x)
+    np.testing.assert_allclose(a, b)
+
+
+def test_block_topk_ragged_tail():
+    x = jax.random.normal(KEY, (100,))  # 2 blocks of 64, second padded
+    out = BlockTopK(ratio=0.25, block=64)(KEY, x)
+    assert out.shape == x.shape
+    kept = int(jnp.sum(out != 0))
+    assert 16 <= kept <= 32  # 16 per block, tail block partially empty
+
+
+def test_quant_unbiased():
+    x = jax.random.normal(KEY, (4096,))
+    comp = StochasticQuant(bits=4)
+    n_samp = 128
+    samples = jnp.stack(
+        [comp(jax.random.PRNGKey(i), x) for i in range(n_samp)]
+    )
+    step = 2.0 * float(jnp.max(jnp.abs(x))) / ((1 << 4) - 1)
+    # per-element std of the mean is <= step/2/sqrt(n); allow 5 sigma
+    tol = 5.0 * step / 2.0 / np.sqrt(n_samp)
+    np.testing.assert_allclose(samples.mean(0), x, atol=tol)
+    # and the global mean error is ~0 (unbiasedness, aggregated)
+    assert abs(float((samples.mean(0) - x).mean())) < step / 20.0
+
+
+def test_rescaled_proposition1():
+    """Q' = Q/(2-delta) is contractive with delta' = 1/(2-delta), for an
+    UNBIASED inner Q (the proposition's hypothesis)."""
+    inner = StochasticQuant(bits=4)
+    resc = Rescaled(inner=inner)
+    assert abs(resc.delta - 1.0 / (2.0 - inner.delta)) < 1e-12
+    x = jax.random.normal(KEY, (257,))
+    rs = [
+        float(empirical_contraction(resc, jax.random.PRNGKey(i), x))
+        for i in range(16)
+    ]
+    assert np.mean(rs) <= (1.0 - resc.delta) + 0.02
+
+
+def test_wire_bytes_ordering():
+    """Compressed messages must be strictly smaller than dense fp32."""
+    for name in ["topk", "block_topk", "randk", "quant"]:
+        comp = make_compressor(name, ratio=0.1, bits=4)
+        assert comp.leaf_wire_bytes(100_000) < 100_000 * 4
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(min_value=2, max_value=300),
+    st.floats(min_value=0.05, max_value=1.0),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_topk_contraction_property(d, ratio, seed):
+    """Property: top-k error ratio <= 1 - k/d for every shape/ratio/seed."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (d,))
+    comp = TopK(ratio=ratio)
+    r = float(empirical_contraction(comp, KEY, x))
+    k = max(1, int(round(ratio * d)))
+    assert r <= 1.0 - k / d + 1e-5
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(min_value=2, max_value=500),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_block_topk_never_worse_than_delta(d, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (d,))
+    comp = BlockTopK(ratio=0.25, block=64)
+    r = float(empirical_contraction(comp, KEY, x))
+    assert r <= 1.0 - comp.delta + 1e-5

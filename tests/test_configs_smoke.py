@@ -1,0 +1,184 @@
+"""Per-architecture smoke tests: a REDUCED variant of each assigned family
+(<=2-4 layers, d_model<=512, <=4 experts) runs one forward/train step and one
+decode step on CPU; output shapes + finiteness asserted."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, input_specs
+from repro.configs.base import INPUT_SHAPES, InputShape
+from repro.models.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.models.transformer import abstract_lm_params, init_caches, init_lm_params
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 64
+
+
+def _smoke_cfg(name):
+    cfg = get_config(name, smoke=True)
+    # tiny chunks for tiny sequences
+    return cfg
+
+
+def _batch_for(cfg, kind="train"):
+    tok = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tok}
+    if kind == "train":
+        batch["labels"] = jnp.roll(tok, -1, axis=1)
+    if cfg.arch_type == "audio":
+        s_enc = max(1, S // cfg.enc_seq_ratio)
+        batch["enc_embeds"] = jax.random.normal(
+            KEY, (B, s_enc, cfg.d_model), cfg.dtype
+        )
+    if cfg.arch_type == "vlm":
+        batch["memory"] = jax.random.normal(
+            KEY, (B, cfg.num_patches, cfg.d_model), cfg.dtype
+        )
+    return batch
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_train_step_smoke(name):
+    cfg = _smoke_cfg(name)
+    params, specs = init_lm_params(cfg, KEY)
+    assert jax.tree.structure(params) == jax.tree.structure(
+        specs, is_leaf=lambda s: isinstance(s, tuple) and all(
+            isinstance(x, (str, type(None))) for x in s
+        )
+    )
+    train_step, opt = make_train_step(cfg, "adamw", lr=1e-3)
+    opt_state = opt.init(params)
+    batch = _batch_for(cfg)
+    step = jax.jit(train_step)
+    params2, opt_state2, metrics = step(params, opt_state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss) and loss > 0
+    # params actually moved
+    delta = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(
+            lambda a, b: float(jnp.sum(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))),
+            params,
+            params2,
+        ),
+    )
+    assert delta > 0
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_decode_step_smoke(name):
+    cfg = _smoke_cfg(name)
+    params, _ = init_lm_params(cfg, KEY)
+    serve_step = jax.jit(make_serve_step(cfg), static_argnames=())
+    caches = init_caches(cfg, B, S)
+    token = jnp.zeros((B,), jnp.int32)
+    memory = None
+    if cfg.arch_type == "audio":
+        memory = jax.random.normal(KEY, (B, 8, cfg.d_model), cfg.dtype)
+    if cfg.arch_type == "vlm":
+        memory = jax.random.normal(KEY, (B, cfg.num_patches, cfg.d_model), cfg.dtype)
+    logits, new_caches = serve_step(params, token, jnp.int32(0), caches, memory)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+    # cache structure preserved
+    assert jax.tree.structure(caches) == jax.tree.structure(new_caches)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_prefill_then_decode_consistent(name):
+    """Prefill caches + one decode == running the decode token via forward."""
+    cfg = _smoke_cfg(name)
+    params, _ = init_lm_params(cfg, KEY)
+    batch = _batch_for(cfg, kind="prefill")
+    prefill = jax.jit(make_prefill_step(cfg, max_len=S + 4))
+    logits_p, caches = prefill(params, batch)
+    assert logits_p.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits_p)).all()
+
+    serve_step = jax.jit(make_serve_step(cfg))
+    memory = None
+    if cfg.arch_type == "audio":
+        s_enc = max(1, S // cfg.enc_seq_ratio)
+        from repro.models.transformer import encoder_forward
+
+        memory = encoder_forward(params, cfg, batch["enc_embeds"])
+    if cfg.arch_type == "vlm":
+        memory = batch["memory"]
+    next_tok = jnp.ones((B,), jnp.int32)
+    logits_d, _ = serve_step(params, next_tok, jnp.int32(S), caches, memory)
+    assert logits_d.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits_d)).all()
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_abstract_params_match_concrete(name):
+    cfg = _smoke_cfg(name)
+    shapes, specs = abstract_lm_params(cfg)
+    params, specs2 = init_lm_params(cfg, KEY)
+    s1 = jax.tree.map(lambda x: (x.shape, str(x.dtype)), shapes)
+    s2 = jax.tree.map(lambda x: (x.shape, str(x.dtype)), params)
+    assert s1 == s2
+    assert specs == specs2
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_param_count_analytic_close(name):
+    """ModelConfig.param_count() (used for MODEL_FLOPS) tracks actual init."""
+    cfg = _smoke_cfg(name)
+    shapes, _ = abstract_lm_params(cfg)
+    actual = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+    analytic = cfg.param_count()
+    assert abs(actual - analytic) / actual < 0.02, (actual, analytic)
+
+
+def test_full_config_exact_dims():
+    """The FULL configs carry the exact assigned dimensions (no allocation)."""
+    expect = {
+        "mamba2-2.7b": dict(num_layers=64, d_model=2560, d_ff=0, vocab_size=50280, ssm_state=128),
+        "phi3-mini-3.8b": dict(num_layers=32, d_model=3072, num_heads=32, num_kv_heads=32, d_ff=8192, vocab_size=32064),
+        "mixtral-8x7b": dict(num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8, d_ff=14336, vocab_size=32000, num_experts=8),
+        "nemotron-4-15b": dict(num_layers=32, d_model=6144, num_heads=48, num_kv_heads=8, d_ff=24576, vocab_size=256000),
+        "jamba-1.5-large-398b": dict(num_layers=72, d_model=8192, num_heads=64, num_kv_heads=8, d_ff=24576, vocab_size=65536, num_experts=16),
+        "seamless-m4t-medium": dict(num_layers=12, d_model=1024, num_heads=16, num_kv_heads=16, d_ff=4096, vocab_size=256206),
+        "llama-3.2-vision-11b": dict(num_layers=40, d_model=4096, num_heads=32, num_kv_heads=8, d_ff=14336, vocab_size=128256),
+        "qwen2-7b": dict(num_layers=28, d_model=3584, num_heads=28, num_kv_heads=4, d_ff=18944, vocab_size=152064),
+        "gemma2-27b": dict(num_layers=46, d_model=4608, num_heads=32, num_kv_heads=16, d_ff=36864, vocab_size=256000),
+        "mixtral-8x22b": dict(num_layers=56, d_model=6144, num_heads=48, num_kv_heads=8, d_ff=16384, vocab_size=32768, num_experts=8),
+    }
+    for name, dims in expect.items():
+        cfg = get_config(name)
+        for k, v in dims.items():
+            assert getattr(cfg, k) == v, (name, k, getattr(cfg, k), v)
+
+
+def test_param_counts_match_model_scale():
+    """Full-config param counts land near the advertised model sizes."""
+    approx = {
+        "mamba2-2.7b": 2.7e9,
+        "phi3-mini-3.8b": 3.8e9,
+        "mixtral-8x7b": 47e9,
+        "nemotron-4-15b": 15e9,
+        "jamba-1.5-large-398b": 398e9,
+        "qwen2-7b": 7.6e9,
+        "gemma2-27b": 27e9,
+        "mixtral-8x22b": 141e9,
+    }
+    for name, target in approx.items():
+        n = get_config(name).param_count()
+        assert 0.55 * target < n < 1.7 * target, (name, n, target)
+
+
+def test_input_specs_cover_all_shapes():
+    for name in ARCH_NAMES:
+        cfg = get_config(name, smoke=True)
+        for shape in INPUT_SHAPES.values():
+            small = InputShape(shape.name, 256, 2, shape.kind)
+            specs = input_specs(cfg, small)
+            assert all(
+                isinstance(x, jax.ShapeDtypeStruct)
+                for x in jax.tree.leaves(specs)
+            )
+            if shape.kind == "decode":
+                assert "caches" in specs

@@ -1,0 +1,121 @@
+"""hlo_cost analyzer: validated against XLA cost_analysis on graphs WITHOUT
+while loops (where cost_analysis is exact), and against hand-counted flops on
+graphs WITH scans (where cost_analysis undercounts and we must not)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_cost import analyze, parse_module
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_matches_cost_analysis_no_scan():
+    def f(a, b, c):
+        return ((a @ b) @ c).sum()
+
+    a = jnp.zeros((64, 128))
+    b = jnp.zeros((128, 256))
+    c = jnp.zeros((256, 32))
+    compiled = _compile(f, a, b, c)
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, list) else cost
+    res = analyze(compiled.as_text())
+    want = 2 * 64 * 128 * 256 + 2 * 64 * 256 * 32
+    assert abs(res["flops"] - want) / want < 0.05, (res["flops"], want)
+    xla = float(cost.get("flops", 0))
+    assert abs(res["flops"] - xla) / xla < 0.05, (res["flops"], xla)
+
+
+def test_scan_trip_count_multiplied():
+    """cost_analysis counts the body once; we must count it x trips."""
+    W = jnp.zeros((64, 64))
+
+    def step(x, _):
+        return jnp.tanh(x @ W), None
+
+    def f(x):
+        y, _ = jax.lax.scan(step, x, None, length=10)
+        return y.sum()
+
+    x = jnp.zeros((8, 64))
+    compiled = _compile(f, x)
+    res = analyze(compiled.as_text())
+    want = 10 * 2 * 8 * 64 * 64
+    assert abs(res["flops"] - want) / want < 0.1, (res["flops"], want)
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, list) else cost
+    xla = float(cost.get("flops", 0))
+    # demonstrate the undercount we are correcting
+    assert xla < 0.25 * want
+
+
+def test_nested_scan():
+    W = jnp.zeros((32, 32))
+
+    def inner(x, _):
+        return x @ W, None
+
+    def outer(x, _):
+        y, _ = jax.lax.scan(inner, x, None, length=4)
+        return y, None
+
+    def f(x):
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y.sum()
+
+    x = jnp.zeros((4, 32))
+    compiled = _compile(f, x)
+    res = analyze(compiled.as_text())
+    want = 5 * 4 * 2 * 4 * 32 * 32
+    assert abs(res["flops"] - want) / want < 0.1, (res["flops"], want)
+
+
+def test_collectives_parsed_with_trips():
+    """psum inside a scanned body must be multiplied by trip count."""
+    import os
+
+    # needs >1 device to emit collectives; use the 2-device subprocess test
+    # in test_distributed.py for the real check — here just check the parser
+    # on a synthetic module string.
+    hlo = """
+HloModule test
+
+%body.1 (p: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %p = (s32[], f32[128]) parameter(0)
+  %ar = f32[128]{0} all-reduce(%x), replica_groups={}, to_apply=%add
+  ROOT %t = (s32[], f32[128]) tuple(%i, %ar)
+}
+
+%cond.1 (p: (s32[], f32[128])) -> pred[] {
+  %p = (s32[], f32[128]) parameter(0)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[128]) -> f32[128] {
+  %a = f32[128]{0} parameter(0)
+  %w = (s32[], f32[128]) while(%t0), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"7"}}
+  ROOT %out = f32[128]{0} get-tuple-element(%w), index=1
+}
+"""
+    res = analyze(hlo)
+    assert res["collective_bytes"] == 7 * 128 * 4
+    assert res["collective_counts_by_kind"]["all-reduce"] == 7
+
+
+def test_parse_module_structure():
+    hlo = """
+%f (x: f32[4]) -> f32[4] {
+  ROOT %y = f32[4]{0} add(%x, %x)
+}
+
+ENTRY %main (a: f32[4]) -> f32[4] {
+  ROOT %r = f32[4]{0} fusion(%a), kind=kLoop, calls=%f
+}
+"""
+    comps = parse_module(hlo)
+    assert "%main" in comps and "%f" in comps
+    assert comps["%main"].calls == [("%f", 1.0)]

@@ -1,0 +1,105 @@
+"""Hypothesis property tests on the SYSTEM's invariants: the reference-point
+protocol's mean-dynamics and tracking identities must hold for random
+topologies, compressors, step sizes, dimensions and heterogeneity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import LowRank, StochasticQuant, TopK
+from repro.core.inner_loop import inner_init, inner_step
+from repro.core.topology import erdos_renyi, ring, torus2d, two_hop
+from repro.core.types import node_mean
+
+
+def _topo(kind, m):
+    if kind == "ring":
+        return ring(m)
+    if kind == "two_hop":
+        return two_hop(max(m, 5))
+    if kind == "er":
+        return erdos_renyi(m, 0.5, seed=1)
+    return torus2d(2, m // 2 if m % 2 == 0 else (m + 1) // 2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.sampled_from(["ring", "two_hop", "er"]),
+    st.integers(min_value=4, max_value=10),
+    st.integers(min_value=3, max_value=40),
+    st.floats(min_value=0.05, max_value=1.0),
+    st.floats(min_value=0.01, max_value=0.5),
+    st.sampled_from(["topk", "quant", "lowrank"]),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_mean_dynamics_invariant_everywhere(
+    kind, m, d, gamma, eta, comp_name, seed
+):
+    """Eq. 7 (d_bar+ = d_bar - eta*s_bar) holds for ANY contractive
+    compressor, topology, gamma, eta, dimension — the protocol's core."""
+    topo = _topo(kind, m)
+    m = topo.m
+    W = jnp.asarray(topo.W, jnp.float32)
+    comp = {
+        "topk": TopK(ratio=0.3),
+        "quant": StochasticQuant(bits=4),
+        "lowrank": LowRank(rank=2),
+    }[comp_name]
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(
+        np.stack([np.eye(d) * (1 + 0.3 * i) for i in range(m)]), jnp.float32
+    )
+    b = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    grad_fn = lambda w: jnp.einsum("mij,mj->mi", A, w - b)
+    st0 = inner_init(jnp.asarray(rng.normal(size=(m, d)), jnp.float32), grad_fn)
+
+    d_bar = node_mean(st0.d)
+    s_bar = node_mean(st0.s)
+    st1 = inner_step(
+        st0, jax.random.PRNGKey(seed), grad_fn, W, comp, gamma, eta
+    )
+    np.testing.assert_allclose(
+        np.asarray(node_mean(st1.d)),
+        np.asarray(d_bar - eta * s_bar),
+        atol=1e-4,
+    )
+    # tracking invariant after the step
+    np.testing.assert_allclose(
+        np.asarray(node_mean(st1.s)),
+        np.asarray(node_mean(grad_fn(st1.d))),
+        atol=1e-3,
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(min_value=10, max_value=3000),
+    st.integers(min_value=1, max_value=8),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_lowrank_contracts_and_meters(d, rank, seed):
+    comp = LowRank(rank=rank)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (d,))
+    qx = comp(jax.random.PRNGKey(0), x)
+    num = float(jnp.sum((qx - x) ** 2))
+    den = float(jnp.sum(x * x))
+    assert num <= den * (1.0 + 1e-5)  # never expands the residual
+    assert comp.leaf_wire_bytes(d) <= d * 4 + 1e-9
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.sampled_from(["ring", "two_hop", "er"]),
+    st.integers(min_value=4, max_value=12),
+)
+def test_all_topologies_satisfy_assumption1(kind, m):
+    t = _topo(kind, m)
+    assert t.validate()
+    assert 0 < t.spectral_gap <= 1 + 1e-9
+    # W_tilde spectral gap lower bound (Prop. 5) for random gamma
+    for gamma in (0.25, 0.75):
+        Wt = np.eye(t.m) + gamma * (t.W - np.eye(t.m))
+        lams = np.sort(np.linalg.eigvalsh(Wt))
+        gap = 1 - max(abs(lams[-2]), abs(lams[0]))
+        assert gap >= gamma * t.spectral_gap - 1e-9

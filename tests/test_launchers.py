@@ -1,0 +1,49 @@
+"""CLI drivers run end-to-end (subprocess, smoke scale)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    return subprocess.run(
+        [sys.executable] + args, capture_output=True, text=True, env=env,
+        timeout=timeout, cwd=ROOT,
+    )
+
+
+def test_train_cli_adamw(tmp_path):
+    res = _run([
+        "-m", "repro.launch.train", "--arch", "phi3-mini-3.8b", "--smoke",
+        "--algo", "adamw", "--steps", "3", "--batch", "2", "--seq", "64",
+        "--ckpt-dir", str(tmp_path),
+    ])
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "loss" in res.stdout
+    assert any(f.endswith(".msgpack.zst") for f in os.listdir(tmp_path))
+
+
+def test_train_cli_c2dfb():
+    res = _run([
+        "-m", "repro.launch.train", "--arch", "qwen2-7b", "--smoke",
+        "--algo", "c2dfb", "--steps", "2", "--batch", "2", "--seq", "64",
+        "--nodes", "3", "--inner-k", "3", "--lr", "0.02",
+    ])
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "val-loss" in res.stdout
+    assert "wire bytes/round" in res.stdout
+
+
+def test_serve_cli():
+    res = _run([
+        "-m", "repro.launch.serve", "--arch", "gemma2-27b", "--smoke",
+        "--batch", "2", "--prompt-len", "32", "--gen", "4",
+    ])
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "decoded" in res.stdout

@@ -1,0 +1,64 @@
+"""Partitioning rules: logical axes -> PartitionSpec resolution."""
+
+import subprocess
+import sys
+import os
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+from jax.sharding import PartitionSpec as P
+from repro.sharding.partitioning import (
+    DEFAULT_RULES, resolve, rules_for_mesh, tree_shardings,
+)
+from repro.models.transformer import abstract_lm_params
+from repro.configs import get_config
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+out = {}
+
+# basic resolution
+out["ffn"] = str(resolve(("embed", "ffn"), (64, 128), mesh))
+out["indivisible"] = str(resolve(("embed", "ffn"), (64, 130), mesh))  # 130 % 4 != 0
+out["batch1"] = str(resolve(("batch", None), (1, 5), mesh))  # B=1 -> replicated
+out["cache"] = str(resolve(("batch", "cache_seq", None, None), (8, 64, 4, 16), mesh))
+
+# full tree resolves for a real config without error
+cfg = get_config("mixtral-8x7b", smoke=True)
+shapes, specs = abstract_lm_params(cfg)
+sh = tree_shardings(specs, shapes, mesh)
+out["n_leaves"] = len(jax.tree.leaves(sh))
+out["n_params"] = len(jax.tree.leaves(shapes))
+
+# variants
+r = rules_for_mesh(mesh, "decode_stationary")
+out["decode_embed"] = str(r["embed"])
+r2 = rules_for_mesh(mesh, "moe_local")
+out["moe_embed"] = str(r2["moe_embed"])
+print(json.dumps(out))
+"""
+
+
+def test_partitioning_rules():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    res = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env=env, timeout=300,
+    )
+    assert res.returncode == 0, res.stderr[-2000:]
+    import json
+
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    assert out["ffn"] == "PartitionSpec('data', 'model')"
+    assert out["indivisible"] == "PartitionSpec('data', None)"  # ffn dropped
+    assert out["batch1"] == "PartitionSpec(None, None)"
+    assert out["cache"] == "PartitionSpec('data', 'model', None, None)"
+    assert out["n_leaves"] == out["n_params"]  # one sharding per param
+    assert out["decode_embed"] == "()"
+    assert out["moe_embed"] == "()"
