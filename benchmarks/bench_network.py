@@ -1,0 +1,133 @@
+"""Time-to-accuracy under simulated network profiles (repro.net).
+
+For each network profile (LAN, WAN, geo+stragglers) and each algorithm
+(C2DFB, MADSBO, MDBO), run to the target test accuracy, then put every
+round's messages through the `NetworkFabric` and report
+
+    wire_bytes          total bytes on all links to target (C2DFB's are
+                        integer codec-measured bytes, not analytic floats)
+    simulated_seconds   fabric wall clock to target
+    rounds_to_target    outer rounds used
+
+This is the regime the paper's headline claim lives in: compressed
+residual inner loops vs the baselines' dense second-order traffic, priced
+by a real link model instead of a byte counter.
+
+Byte accounting: the fabric counts every per-link transmission (a node
+with two neighbors puts its message on the wire twice), so ``wire_bytes``
+here is degree(topology) x the per-node *broadcast* accounting that
+`bench_comm_volume` / the paper's Table 1 use (on a ring: exactly 2x).
+Both are exact; they answer different questions (link utilization vs
+information sent per node).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.core.baselines import (
+    MADSBOConfig, MDBOConfig, madsbo_init, madsbo_round, madsbo_round_phases,
+    mdbo_init, mdbo_round, mdbo_round_phases,
+)
+from repro.core.c2dfb import (
+    C2DFBConfig, c2dfb_round, init_state, round_phases,
+)
+from repro.core.topology import ring
+from repro.core.types import node_mean
+from repro.data.bilevel_tasks import coefficient_tuning_task
+from repro.net import make_fabric
+
+TARGET_ACC = 0.70
+
+#: (name, fabric kwargs) — per-round compute below is the local gradient
+#: work; stragglers multiply it.
+NET_PROFILES = [
+    ("lan", dict(profile="lan", straggler="none", compute_s=0.01)),
+    ("wan", dict(profile="wan", straggler="none", compute_s=0.01)),
+    (
+        "geo_straggler",
+        dict(
+            profile="geo",
+            straggler="lognormal",
+            compute_s=0.01,
+            sigma=0.8,
+        ),
+    ),
+]
+
+
+def _simulate(fabric, phases, labels, rounds):
+    total_b, total_s = 0, 0.0
+    for t in range(rounds):
+        rep = fabric.simulate_round(phases, t, labels=labels)
+        total_b += rep["wire_bytes"]
+        total_s += rep["sim_seconds"]
+    return total_b, total_s
+
+
+def run(fast: bool = True):
+    m = 10
+    max_rounds = 60 if fast else 200
+    bundle = coefficient_tuning_task(m=m, n=1500, p=120, c=5, h=0.8, seed=0)
+    topo = ring(m)
+    key = jax.random.PRNGKey(0)
+
+    def acc_of(x, y):
+        return bundle.test_accuracy(node_mean(x), node_mean(y), bundle.predict_fn)
+
+    # ---- run each algorithm once (network-independent trajectory) ---------
+    runs = {}
+
+    cfg = C2DFBConfig(lam=10.0, eta_out=0.2, gamma_out=0.5, eta_in=0.2,
+                      gamma_in=0.5, K=15, compressor="topk", comp_ratio=0.2)
+    state = init_state(bundle.problem, cfg, bundle.x0, bundle.y0)
+    step = jax.jit(lambda s, k: c2dfb_round(s, k, bundle.problem, topo, cfg))
+    t0, k, rounds, acc = time.time(), key, 0, 0.0
+    for t in range(max_rounds):
+        k, kk = jax.random.split(k)
+        state, _ = step(state, kk)
+        rounds, acc = t + 1, acc_of(state.x, state.inner_y.d)
+        if acc >= TARGET_ACC:
+            break
+    phases, labels = round_phases(state, cfg, topo, key)
+    runs["c2dfb"] = (rounds, acc, time.time() - t0, phases, labels)
+
+    mcfg = MADSBOConfig(eta_x=0.05, eta_y=0.1, eta_v=0.05, gamma=0.5, K=15, Q=15)
+    mstate = madsbo_init(bundle.problem, bundle.x0, bundle.y0)
+    mstep = jax.jit(lambda s: madsbo_round(s, bundle.problem, topo, mcfg))
+    t0, rounds, acc = time.time(), 0, 0.0
+    for t in range(max_rounds):
+        mstate, _ = mstep(mstate)
+        rounds, acc = t + 1, acc_of(mstate.x, mstate.y)
+        if acc >= TARGET_ACC:
+            break
+    phases, labels = madsbo_round_phases(mstate, mcfg, topo)
+    runs["madsbo"] = (rounds, acc, time.time() - t0, phases, labels)
+
+    dcfg = MDBOConfig(eta_x=0.05, eta_y=0.1, gamma=0.5, K=15, neumann_N=15,
+                      neumann_eta=0.1)
+    dstate = mdbo_init(bundle.x0, bundle.y0)
+    dstep = jax.jit(lambda s: mdbo_round(s, bundle.problem, topo, dcfg))
+    t0, rounds, acc = time.time(), 0, 0.0
+    for t in range(max_rounds):
+        dstate, _ = dstep(dstate)
+        rounds, acc = t + 1, acc_of(dstate.x, dstate.y)
+        if acc >= TARGET_ACC:
+            break
+    phases, labels = mdbo_round_phases(dstate, dcfg, topo)
+    runs["mdbo"] = (rounds, acc, time.time() - t0, phases, labels)
+
+    # ---- price each trajectory under every network profile ----------------
+    for net_name, net_kw in NET_PROFILES:
+        for alg, (rounds, acc, dt, phases, labels) in runs.items():
+            fabric = make_fabric(topo, seed=0, **net_kw)
+            wire_bytes, sim_s = _simulate(fabric, phases, labels, rounds)
+            emit(
+                f"network/{net_name}/{alg}",
+                dt * 1e6 / max(rounds, 1),
+                f"wire_bytes={wire_bytes};simulated_seconds={sim_s:.2f};"
+                f"rounds_to_target={rounds};acc={acc:.3f}",
+            )

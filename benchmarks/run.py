@@ -15,7 +15,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale settings")
     ap.add_argument("--only", default=None,
-                    help="comma list: comm,topology,hyperrep,sensitivity,kernels,roofline")
+                    help="comma list: comm,topology,hyperrep,sensitivity,"
+                         "kernels,roofline,network")
     args = ap.parse_args()
     fast = not args.full
 
@@ -23,6 +24,7 @@ def main() -> None:
         bench_comm_volume,
         bench_hyperrep,
         bench_kernels,
+        bench_network,
         bench_roofline,
         bench_sensitivity,
         bench_topology,
@@ -35,6 +37,7 @@ def main() -> None:
         "hyperrep": bench_hyperrep.run,
         "sensitivity": bench_sensitivity.run,
         "roofline": bench_roofline.run,
+        "network": bench_network.run,
     }
     wanted = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")

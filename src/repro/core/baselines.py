@@ -81,9 +81,16 @@ def mdbo_init(x0: Pytree, y0: Pytree) -> MDBOState:
 
 
 def mdbo_round(
-    state: MDBOState, problem: BilevelProblem, topo: Topology, cfg: MDBOConfig
+    state: MDBOState,
+    problem: BilevelProblem,
+    topo: Topology,
+    cfg: MDBOConfig,
+    W: jax.Array | None = None,
+    fabric=None,
+    round_idx: int = 0,
 ) -> tuple[MDBOState, dict]:
-    W = jnp.asarray(topo.W, jnp.float32)
+    W_override = W
+    W = jnp.asarray(topo.W if W is None else W, jnp.float32)
     x, y = state.x, state.y
 
     # LL: K gossip + gradient steps on y
@@ -130,7 +137,17 @@ def mdbo_round(
         "hypergrad_norm": jnp.sqrt(tree_sq_norm(node_mean(hyper))),
         "x_consensus_err": consensus_error(x),
     }
-    return MDBOState(x=x, y=y, t=state.t + 1), metrics
+    new_state = MDBOState(x=x, y=y, t=state.t + 1)
+    if fabric is not None:
+        from repro.net.fabric import edges_from_weights, mask_phases
+
+        phases, labels = mdbo_round_phases(new_state, cfg, fabric.topo)
+        if W_override is not None:
+            phases = mask_phases(phases, edges_from_weights(W_override))
+        rep = fabric.simulate_round(phases, round_idx, labels=labels)
+        metrics["wire_bytes"] = rep["wire_bytes"]
+        metrics["sim_seconds"] = rep["sim_seconds"]
+    return new_state, metrics
 
 
 def mdbo_round_wire_bytes(state: MDBOState, cfg: MDBOConfig, topo: Topology) -> float:
@@ -141,6 +158,27 @@ def mdbo_round_wire_bytes(state: MDBOState, cfg: MDBOConfig, topo: Topology) -> 
     dx = tree_count(state.x)
     dy = tree_count(state.y)
     return float((dx + dy * cfg.K + dy * cfg.neumann_N) * 4 * m)
+
+
+def _dense_phases(
+    topo: Topology, sizes_and_labels: list[tuple[int, str]]
+) -> tuple[list, list]:
+    """Barrier phases of uncompressed f32 broadcasts for the baselines."""
+    from repro.net.fabric import edge_list
+
+    edges = edge_list(topo)
+    phases = [{e: d * 4 for e in edges} for d, _ in sizes_and_labels]
+    return phases, [lbl for _, lbl in sizes_and_labels]
+
+
+def mdbo_round_phases(
+    state: MDBOState, cfg: MDBOConfig, topo: Topology
+) -> tuple[list, list]:
+    dx, dy = tree_count(state.x), tree_count(state.y)
+    sizes = [(dy, f"ll{k}/y") for k in range(cfg.K)]
+    sizes += [(dy, f"neumann{n}/v") for n in range(cfg.neumann_N)]
+    sizes += [(dx, "ul/x")]
+    return _dense_phases(topo, sizes)
 
 
 # ---------------------------------------------------------------------------
@@ -174,9 +212,16 @@ def madsbo_init(problem: BilevelProblem, x0: Pytree, y0: Pytree) -> MADSBOState:
 
 
 def madsbo_round(
-    state: MADSBOState, problem: BilevelProblem, topo: Topology, cfg: MADSBOConfig
+    state: MADSBOState,
+    problem: BilevelProblem,
+    topo: Topology,
+    cfg: MADSBOConfig,
+    W: jax.Array | None = None,
+    fabric=None,
+    round_idx: int = 0,
 ) -> tuple[MADSBOState, dict]:
-    W = jnp.asarray(topo.W, jnp.float32)
+    W_override = W
+    W = jnp.asarray(topo.W if W is None else W, jnp.float32)
     x, y, v, u = state.x, state.y, state.v, state.u
 
     grad_g_y = jax.vmap(jax.grad(problem.g, argnums=1))
@@ -219,7 +264,17 @@ def madsbo_round(
         "hypergrad_norm": jnp.sqrt(tree_sq_norm(node_mean(u))),
         "x_consensus_err": consensus_error(x),
     }
-    return MADSBOState(x=x, y=y, v=v, u=u, t=state.t + 1), metrics
+    new_state = MADSBOState(x=x, y=y, v=v, u=u, t=state.t + 1)
+    if fabric is not None:
+        from repro.net.fabric import edges_from_weights, mask_phases
+
+        phases, labels = madsbo_round_phases(new_state, cfg, fabric.topo)
+        if W_override is not None:
+            phases = mask_phases(phases, edges_from_weights(W_override))
+        rep = fabric.simulate_round(phases, round_idx, labels=labels)
+        metrics["wire_bytes"] = rep["wire_bytes"]
+        metrics["sim_seconds"] = rep["sim_seconds"]
+    return new_state, metrics
 
 
 def madsbo_round_wire_bytes(
@@ -229,6 +284,16 @@ def madsbo_round_wire_bytes(
     dx = tree_count(state.x)
     dy = tree_count(state.y)
     return float((dx + dy * cfg.K + dy * cfg.Q) * 4 * m)
+
+
+def madsbo_round_phases(
+    state: MADSBOState, cfg: MADSBOConfig, topo: Topology
+) -> tuple[list, list]:
+    dx, dy = tree_count(state.x), tree_count(state.y)
+    sizes = [(dy, f"ll{k}/y") for k in range(cfg.K)]
+    sizes += [(dy, f"higp{q}/v") for q in range(cfg.Q)]
+    sizes += [(dx, "ul/x")]
+    return _dense_phases(topo, sizes)
 
 
 # ---------------------------------------------------------------------------

@@ -28,6 +28,8 @@ from repro.core.inner_loop import (
     InnerState,
     inner_init,
     inner_loop,
+    inner_message_bytes,
+    inner_round_phases,
     inner_wire_bytes_per_round,
     refresh_tracker,
 )
@@ -101,8 +103,17 @@ def c2dfb_round(
     problem: BilevelProblem,
     topo: Topology,
     cfg: C2DFBConfig,
+    W: jax.Array | None = None,
+    fabric=None,
+    round_idx: int = 0,
 ) -> tuple[C2DFBState, dict]:
-    W = jnp.asarray(topo.W, dtype=jnp.float32)
+    """One outer round.  ``W`` overrides the static mixing matrix (used by
+    `repro.net.dynamic` schedules — pass the round's matrix, possibly a
+    traced scan input).  ``fabric`` (a `repro.net.fabric.NetworkFabric`,
+    eager mode only) adds codec-measured ``wire_bytes`` and simulated
+    ``sim_seconds`` to the round metrics."""
+    W_override = W
+    W = jnp.asarray(topo.W if W is None else W, dtype=jnp.float32)
     compressor = cfg.make_compressor()
     ky, kz = jax.random.split(key)
 
@@ -157,7 +168,66 @@ def c2dfb_round(
         "y_compress_err": my["compress_err"],
         "z_consensus_err": mz["consensus_err"],
     }
+    if fabric is not None:
+        from repro.net.fabric import edges_from_weights, mask_phases
+
+        phases, labels = round_phases(new_state, cfg, fabric.topo, key)
+        if W_override is not None:
+            # a schedule's W override deactivates links; don't price them
+            phases = mask_phases(phases, edges_from_weights(W_override))
+        rep = fabric.simulate_round(phases, round_idx, labels=labels)
+        metrics["wire_bytes"] = rep["wire_bytes"]
+        metrics["sim_seconds"] = rep["sim_seconds"]
     return new_state, metrics
+
+
+def round_phases(
+    state: C2DFBState, cfg: C2DFBConfig, topo: Topology, key: jax.Array
+) -> tuple[list, list]:
+    """One outer round as a sequence of barrier phases with per-edge byte
+    payloads: 2 uncompressed broadcasts (x, s_x) + 2 inner loops x K steps
+    x 2 codec-measured compressed messages."""
+    from repro.net.fabric import edge_list
+
+    edges = edge_list(topo)
+    dx = tree_count(state.x)
+    dense = {e: dx * 4 for e in edges}
+    phases, labels = [dense, dense], ["out/x", "out/s_x"]
+    comp = cfg.make_compressor()
+    ky, kz = jax.random.split(jax.random.fold_in(key, 0x5EED))
+    for name, inner, k_ in (("y", state.inner_y, ky), ("z", state.inner_z, kz)):
+        ph, lb = inner_round_phases(inner, comp, topo, k_, cfg.K)
+        phases += ph
+        labels += [f"{name}/{s}" for s in lb]
+    return phases, labels
+
+
+def round_wire_bytes_measured(
+    state: C2DFBState, cfg: C2DFBConfig, topo: Topology, key: jax.Array
+) -> dict:
+    """Exact integer bytes per outer round, serialized by the wire codec
+    (`repro.net.wire`) instead of the analytic `round_wire_bytes` estimate.
+    Outer x/s_x broadcasts are dense f32; inner messages are measured on the
+    current reference-point residuals."""
+    from repro.net.wire import codec_for
+
+    m = topo.m
+    comp = cfg.make_compressor()
+    dense = codec_for(make_compressor("identity"))
+    # one x broadcast + one s_x broadcast per node, dense f32 (as the paper)
+    one_x = jax.tree.map(lambda v: v[0], state.x)
+    one_s = jax.tree.map(lambda v: v[0], state.s_x)
+    outer = (dense.tree_bytes(one_x) + dense.tree_bytes(one_s)) * m
+    ky, kz = jax.random.split(key)
+    inner = 0
+    for st, k_ in ((state.inner_y, ky), (state.inner_z, kz)):
+        bd, bs = inner_message_bytes(st, comp, k_)
+        inner += (sum(bd) + sum(bs)) * cfg.K
+    return {
+        "outer_bytes": outer,
+        "inner_bytes": inner,
+        "total_bytes": outer + inner,
+    }
 
 
 def round_wire_bytes(
@@ -186,17 +256,55 @@ def run(
     T: int,
     key: jax.Array,
     jit: bool = True,
+    schedule=None,
+    fabric=None,
 ) -> tuple[C2DFBState, dict]:
-    """Run T outer rounds under lax.scan; returns final state + stacked metrics."""
+    """Run T outer rounds under lax.scan; returns final state + stacked metrics.
+
+    ``schedule`` (a `repro.net.dynamic.TopologySchedule`) swaps the static W
+    for the schedule's per-round matrices — they ride through the scan as a
+    stacked (T, m, m) input, so the loop stays jitted.  ``fabric`` (a
+    `repro.net.fabric.NetworkFabric`) appends a simulated wall-clock
+    timeline: metrics gain ``sim_seconds`` and ``wire_bytes`` arrays of
+    length T (payload sizes codec-measured on the final state's residuals,
+    representative of steady state; the fabric's stragglers/jitter still
+    vary per round)."""
     state = init_state(problem, cfg, x0, y0)
 
-    def body(st, k):
-        st, metrics = c2dfb_round(st, k, problem, topo, cfg)
+    def body(st, inputs):
+        k, W = inputs
+        st, metrics = c2dfb_round(st, k, problem, topo, cfg, W=W)
         return st, metrics
 
     keys = jax.random.split(key, T)
-    scan = jax.jit(lambda s: jax.lax.scan(body, s, keys)) if jit else (
-        lambda s: jax.lax.scan(body, s, keys)
+    Ws = (
+        jnp.asarray(schedule.stack(T), jnp.float32)
+        if schedule is not None
+        else jnp.broadcast_to(
+            jnp.asarray(topo.W, jnp.float32), (T,) + topo.W.shape
+        )
+    )
+    scan = jax.jit(lambda s: jax.lax.scan(body, s, (keys, Ws))) if jit else (
+        lambda s: jax.lax.scan(body, s, (keys, Ws))
     )
     state, metrics = scan(state)
+    if fabric is not None:
+        import numpy as np
+
+        phases, labels = round_phases(state, cfg, fabric.topo, key)
+        sim_s, wire_b = [], []
+        for t in range(T):
+            phases_t = phases
+            if schedule is not None:
+                # only the round's active links carry traffic
+                act = set(schedule.active_edges(t))
+                phases_t = [
+                    {e: b for e, b in ph.items() if e in act} for ph in phases
+                ]
+            rep = fabric.simulate_round(phases_t, t, labels=labels)
+            sim_s.append(rep["sim_seconds"])
+            wire_b.append(rep["wire_bytes"])
+        metrics = dict(metrics)
+        metrics["sim_seconds"] = np.asarray(sim_s)
+        metrics["wire_bytes"] = np.asarray(wire_b, dtype=np.int64)
     return state, metrics

@@ -124,8 +124,15 @@ def inner_loop(
     gamma: float,
     eta: float,
     K: int,
+    fabric=None,
+    round_idx: int = 0,
 ) -> tuple[InnerState, dict]:
-    """Run K compressed-GT steps via lax.scan; returns final state + metrics."""
+    """Run K compressed-GT steps via lax.scan; returns final state + metrics.
+
+    With a ``repro.net.fabric.NetworkFabric`` (eager mode only — the fabric
+    is host-side numpy), metrics additionally carry ``wire_bytes`` (exact
+    integer, codec-measured on this loop's residuals) and ``sim_seconds``
+    (the simulated wall clock of the K barrier phases x 2 messages)."""
 
     def body(st, k):
         st = inner_step(st, k, grad_fn, W, compressor, gamma, eta)
@@ -140,7 +147,54 @@ def inner_loop(
         ),
         "tracker_consensus_err": consensus_error(state.s),
     }
+    if fabric is not None:
+        phases, labels = inner_round_phases(state, compressor, fabric.topo, key, K)
+        rep = fabric.simulate_round(phases, round_idx, labels=labels)
+        metrics["wire_bytes"] = rep["wire_bytes"]
+        metrics["sim_seconds"] = rep["sim_seconds"]
     return state, metrics
+
+
+def inner_message_bytes(
+    state: InnerState, compressor: Compressor, key: jax.Array
+) -> tuple[list[int], list[int]]:
+    """Exact per-node wire bytes of one inner step's two transmissions,
+    measured by serializing Q(d - d_hat) and Q(s - s_hat) with the codec
+    (current residuals; sizes are steady once residuals are nonzero)."""
+    from repro.net.wire import codec_for
+
+    codec = codec_for(compressor)
+    kd, ks = jax.random.split(key)
+    out = []
+    for k_, a, b in ((kd, state.d, state.d_hat), (ks, state.s, state.s_hat)):
+        resid = jax.tree.map(jnp.subtract, a, b)
+        q = compress_stacked(compressor, k_, resid)
+        m = jax.tree.leaves(q)[0].shape[0]
+        out.append(
+            [
+                codec.tree_bytes(jax.tree.map(lambda v: v[i], q))
+                for i in range(m)
+            ]
+        )
+    return out[0], out[1]
+
+
+def inner_round_phases(
+    state: InnerState, compressor: Compressor, topo, key: jax.Array, K: int
+) -> tuple[list, list]:
+    """K steps x (d-residual, s-residual) barrier phases as per-edge byte
+    dicts for ``NetworkFabric.simulate_round``."""
+    from repro.net.fabric import edge_list
+
+    bytes_d, bytes_s = inner_message_bytes(state, compressor, key)
+    edges = edge_list(topo)
+    phase_d = {(i, j): bytes_d[i] for (i, j) in edges}
+    phase_s = {(i, j): bytes_s[i] for (i, j) in edges}
+    phases, labels = [], []
+    for k in range(K):
+        phases += [phase_d, phase_s]
+        labels += [f"in{k}/d", f"in{k}/s"]
+    return phases, labels
 
 
 def inner_wire_bytes_per_round(

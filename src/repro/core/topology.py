@@ -47,16 +47,25 @@ class Topology:
         return True
 
 
-def _metropolis(G: nx.Graph, m: int) -> np.ndarray:
+def metropolis_weights(G: nx.Graph, m: int) -> np.ndarray:
+    """Metropolis–Hastings mixing matrix for an undirected graph on m nodes:
+    symmetric, doubly stochastic, non-negative for any (even disconnected)
+    graph — the workhorse for both static topologies and the per-round
+    subgraphs of `repro.net.dynamic` schedules."""
     W = np.zeros((m, m))
     deg = dict(G.degree())
     for i, j in G.edges():
+        if i == j:
+            continue
         w = 1.0 / (1 + max(deg[i], deg[j]))
         W[i, j] = w
         W[j, i] = w
     for i in range(m):
         W[i, i] = 1.0 - W[i].sum()
     return W
+
+
+_metropolis = metropolis_weights
 
 
 def _from_graph(name: str, G: nx.Graph, m: int, schedule=None) -> Topology:

@@ -1,0 +1,122 @@
+"""Pallas TPU kernels: sparse residual pack / unpack for the wire codec.
+
+``block_topk`` emits dense tiles that are mostly zeros; a real deployment
+puts only the survivors on the wire.  These kernels convert between the
+dense (nb, block) tile form and the packed (nb, kpad) record form
+
+    vals[b, j] = j-th surviving value of block b         (0.0 past nnz)
+    idx[b, j]  = its lane index within the block         (block past nnz)
+
+without any gather/scatter: survivors are ranked by an exclusive prefix sum
+over the keep mask and routed through a one-hot matrix, so both directions
+are pure compare + matmul work that the MXU/VPU execute natively (see
+/opt/skills/guides/pallas_guide.md — 2D iota, preferred_element_type).
+
+Index arithmetic rides the MXU in float32, which is exact for lane ids up
+to 2^24 — far above any sane compression block.  ``kpad`` (k rounded up to
+the 128-lane boundary) is the packed row width; slots past a block's nnz
+hold the sentinel index ``block`` so unpack and the serializer drop them.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128  # TPU lane width; packed rows are padded to this
+
+
+def padded_k(k: int) -> int:
+    return -(-k // LANE) * LANE
+
+
+def _pack_kernel(x_ref, vals_ref, idx_ref, *, block: int, kpad: int):
+    x = x_ref[...]  # (1, block)
+    keep = x != 0.0
+    # exclusive rank of each survivor among survivors; -1 for dropped lanes
+    rank = jnp.cumsum(keep.astype(jnp.int32), axis=-1) - 1
+    rank = jnp.where(keep, rank, -1)
+    slot = jax.lax.broadcasted_iota(jnp.int32, (block, kpad), 1)
+    route = (rank[0][:, None] == slot).astype(jnp.float32)  # (block, kpad)
+    vals_ref[...] = jnp.dot(
+        x.astype(jnp.float32), route, preferred_element_type=jnp.float32
+    )
+    lane = jax.lax.broadcasted_iota(jnp.float32, (1, block), 1)
+    idx = jnp.dot(lane, route, preferred_element_type=jnp.float32)
+    nnz = jnp.sum(keep.astype(jnp.int32))
+    out_slot = jax.lax.broadcasted_iota(jnp.int32, (1, kpad), 1)
+    idx_ref[...] = jnp.where(
+        out_slot < nnz, idx.astype(jnp.int32), jnp.int32(block)
+    )
+
+
+def _unpack_kernel(vals_ref, idx_ref, o_ref, *, block: int, kpad: int):
+    vals = vals_ref[...]  # (1, kpad)
+    idx = idx_ref[...]    # (1, kpad); sentinel rows route nowhere
+    lane = jax.lax.broadcasted_iota(jnp.int32, (kpad, block), 1)
+    route = (idx[0][:, None] == lane).astype(jnp.float32)  # (kpad, block)
+    o_ref[...] = jnp.dot(
+        vals.astype(jnp.float32), route, preferred_element_type=jnp.float32
+    )
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block", "interpret"))
+def pack_sparse_blocks(
+    x2d: jnp.ndarray, k: int, block: int, interpret: bool | None = None
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(nb, block) sparse tiles -> ((nb, kpad) f32 values, (nb, kpad) i32
+    local indices).  Requires <= k survivors per row (the top-k contract);
+    extra survivors past kpad are dropped by the one-hot routing."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    nb = x2d.shape[0]
+    assert x2d.shape[1] == block and block % LANE == 0, (x2d.shape, block)
+    kpad = padded_k(k)
+    vals, idx = pl.pallas_call(
+        functools.partial(_pack_kernel, block=block, kpad=kpad),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1, kpad), lambda i: (i, 0)),
+            pl.BlockSpec((1, kpad), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, kpad), jnp.float32),
+            jax.ShapeDtypeStruct((nb, kpad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x2d.astype(jnp.float32))
+    return vals, idx
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def unpack_sparse_blocks(
+    vals: jnp.ndarray,
+    idx: jnp.ndarray,
+    block: int,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Inverse of ``pack_sparse_blocks``: scatter records back to dense
+    (nb, block) tiles.  Sentinel indices (== block) contribute nothing."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    nb, kpad = vals.shape
+    assert idx.shape == (nb, kpad) and kpad % LANE == 0
+    return pl.pallas_call(
+        functools.partial(_unpack_kernel, block=block, kpad=kpad),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, kpad), lambda i: (i, 0)),
+            pl.BlockSpec((1, kpad), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block), jnp.float32),
+        interpret=interpret,
+    )(vals.astype(jnp.float32), idx)

@@ -1,0 +1,67 @@
+"""repro.net — the network fabric subsystem.
+
+Models the wire end-to-end for the decentralized bilevel algorithms:
+
+* ``wire``    — exact serialization codecs per compressor (integer bytes,
+  bit-exact round trips), backed by the Pallas pack/unpack kernel.
+* ``fabric``  — deterministic event-driven link simulation (latency,
+  bandwidth, jitter, egress serialization, stragglers) turning per-round
+  payloads into wall-clock timelines.
+* ``dynamic`` — time-varying topology schedules (dropout, random edges,
+  B-connected sequences) that plug into gossip as per-round W matrices.
+* ``trace``   — JSON / Chrome-trace export of simulated timelines.
+"""
+
+from repro.net.dynamic import (
+    BConnectedSchedule,
+    LinkDropoutSchedule,
+    RandomEdgeSchedule,
+    StaticSchedule,
+    TopologySchedule,
+    is_jointly_connected,
+)
+from repro.net.fabric import (
+    PROFILES,
+    LinkModel,
+    NetworkFabric,
+    StragglerModel,
+    edge_list,
+    make_fabric,
+)
+from repro.net.trace import NetTrace, PhaseEvent, TransferEvent
+from repro.net.wire import (
+    BlockSparseCodec,
+    DenseCodec,
+    QuantCodec,
+    SparseCodec,
+    WireCodec,
+    codec_for,
+    measure_compressed_tree_bytes,
+    measure_tree_bytes,
+)
+
+__all__ = [
+    "BConnectedSchedule",
+    "BlockSparseCodec",
+    "DenseCodec",
+    "LinkDropoutSchedule",
+    "LinkModel",
+    "NetTrace",
+    "NetworkFabric",
+    "PROFILES",
+    "PhaseEvent",
+    "QuantCodec",
+    "RandomEdgeSchedule",
+    "SparseCodec",
+    "StaticSchedule",
+    "StragglerModel",
+    "TopologySchedule",
+    "TransferEvent",
+    "WireCodec",
+    "codec_for",
+    "edge_list",
+    "is_jointly_connected",
+    "make_fabric",
+    "measure_compressed_tree_bytes",
+    "measure_tree_bytes",
+]

@@ -1,0 +1,138 @@
+"""Time-varying topology schedules for gossip mixing.
+
+A ``TopologySchedule`` yields one mixing matrix per round — always symmetric
+doubly stochastic (Metropolis weights on the round's active subgraph), so
+every schedule step is a valid Assumption-1 gossip operator even when the
+instantaneous graph is disconnected.  Convergence then rests on joint
+(B-)connectivity across windows of rounds, the standard time-varying-graph
+condition; ``BConnectedSchedule`` realizes it constructively and
+``is_jointly_connected`` checks it for sampled schedules.
+
+Schedules plug into the algorithms through the ``W`` override of
+``c2dfb_round`` / the ``schedule`` argument of ``c2dfb.run`` (the stacked
+``(T, m, m)`` array rides through ``lax.scan`` like any other per-round
+input), and into the fabric through ``active_edges``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import networkx as nx
+import numpy as np
+
+from repro.core.topology import Topology, metropolis_weights
+
+
+class TopologySchedule:
+    """One mixing matrix per round over a fixed node set."""
+
+    base: Topology
+
+    def weights(self, t: int) -> np.ndarray:
+        """(m, m) symmetric doubly-stochastic matrix for round t."""
+        raise NotImplementedError
+
+    def active_edges(self, t: int) -> tuple[tuple[int, int], ...]:
+        """Directed edges carrying traffic in round t (derived from W)."""
+        W = self.weights(t)
+        m = W.shape[0]
+        off = (W > 1e-12) & ~np.eye(m, dtype=bool)
+        return tuple((i, j) for i in range(m) for j in range(m) if off[i, j])
+
+    def stack(self, T: int) -> np.ndarray:
+        """(T, m, m) array of per-round matrices — scan-ready."""
+        return np.stack([self.weights(t) for t in range(T)])
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticSchedule(TopologySchedule):
+    """The degenerate schedule: the base graph every round.  Running any
+    algorithm with it must be bit-identical to the schedule-free path
+    (tested in tests/test_net_dynamic.py)."""
+
+    base: Topology
+
+    def weights(self, t: int) -> np.ndarray:
+        return self.base.W
+
+
+def _graph_of(topo: Topology) -> nx.Graph:
+    G = nx.Graph()
+    G.add_nodes_from(range(topo.m))
+    for i, neigh in enumerate(topo.neighbors):
+        for j in neigh:
+            G.add_edge(i, j)
+    return G
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkDropoutSchedule(TopologySchedule):
+    """Each base edge fails independently with probability ``p_drop`` each
+    round (flaky links).  Deterministic given ``seed``."""
+
+    base: Topology
+    p_drop: float = 0.2
+    seed: int = 0
+
+    def weights(self, t: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, t))
+        G = _graph_of(self.base)
+        keep = nx.Graph()
+        keep.add_nodes_from(range(self.base.m))
+        for i, j in G.edges():
+            if rng.random() >= self.p_drop:
+                keep.add_edge(i, j)
+        return metropolis_weights(keep, self.base.m)
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomEdgeSchedule(TopologySchedule):
+    """Uniformly sample ``n_edges`` of the base graph per round (randomized
+    gossip / edge subsampling to cut per-round traffic)."""
+
+    base: Topology
+    n_edges: int = 4
+    seed: int = 0
+
+    def weights(self, t: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, t))
+        edges = list(_graph_of(self.base).edges())
+        pick = rng.choice(
+            len(edges), size=min(self.n_edges, len(edges)), replace=False
+        )
+        G = nx.Graph()
+        G.add_nodes_from(range(self.base.m))
+        G.add_edges_from(edges[k] for k in pick)
+        return metropolis_weights(G, self.base.m)
+
+
+@dataclasses.dataclass(frozen=True)
+class BConnectedSchedule(TopologySchedule):
+    """Round-robin partition of the base edges into ``B`` groups; round t
+    activates group t mod B, so the union over any B consecutive rounds is
+    the full (connected) base graph — the classic B-connected sequence."""
+
+    base: Topology
+    B: int = 2
+
+    def weights(self, t: int) -> np.ndarray:
+        edges = sorted(_graph_of(self.base).edges())
+        G = nx.Graph()
+        G.add_nodes_from(range(self.base.m))
+        G.add_edges_from(e for k, e in enumerate(edges) if k % self.B == t % self.B)
+        return metropolis_weights(G, self.base.m)
+
+
+def is_jointly_connected(
+    schedule: TopologySchedule, t0: int, window: int
+) -> bool:
+    """True if the union graph over rounds [t0, t0+window) is connected."""
+    m = schedule.base.m
+    G = nx.Graph()
+    G.add_nodes_from(range(m))
+    for t in range(t0, t0 + window):
+        W = schedule.weights(t)
+        off = (W > 1e-12) & ~np.eye(m, dtype=bool)
+        G.add_edges_from(zip(*np.nonzero(off)))
+    return nx.is_connected(G)

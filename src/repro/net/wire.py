@@ -1,0 +1,285 @@
+"""Exact wire-format codecs for compressed residuals.
+
+``Compressor.leaf_wire_bytes`` is an analytic float estimate; this module is
+the real thing: each codec serializes a compressor's *output* tensor to the
+byte string a deployment would put on the wire, and deserializes it back.
+``measure`` therefore returns integer bytes including headers, and
+``decode(encode(q)) == q`` bitwise for every compressor except KernelQuant,
+whose XLA-fused dequant epilogue can differ from the canonical receiver by
+1 ulp — there the wire representation itself (codes + scales) round-trips
+losslessly (see ``_dequant``; both contracts are tested).
+
+Formats (little-endian):
+
+* sparse   ``b"S" | u32 d | u32 nnz | nnz*u32 idx | nnz*f32 vals``
+  for magnitude/coordinate sparsifiers (TopK, RandK, BlockTopK,
+  KernelBlockTopK).  Block variants pack via the Pallas kernel
+  (`repro.kernels.pack_residuals`) and globalize the per-block lane ids.
+* quant    ``b"Q" | u32 d | u8 bits | u32 block | nb*f32 scales | codes``
+  for stochastic quantizers; codes are bit-packed to ``bits`` each.  Scales
+  are recovered from the dequantized output (the argmax input element maps
+  exactly to +/-scale), so the codec needs no side channel.
+* dense    ``b"D" | u32 d | d*f32``
+  for Identity / LowRank fallbacks.
+
+Codecs run host-side on numpy; they meter and check the SPMD simulator, they
+are not inside jit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compression as C
+from repro.core.types import Pytree
+
+_HDR_S = struct.Struct("<cII")    # kind, d, nnz
+_HDR_Q = struct.Struct("<cIBI")   # kind, d, bits, block
+_HDR_D = struct.Struct("<cI")     # kind, d
+
+
+class WireCodec:
+    """Serialize one compressed leaf (flattened) to wire bytes and back."""
+
+    def encode(self, q: np.ndarray) -> bytes:
+        raise NotImplementedError
+
+    def decode(self, payload: bytes) -> np.ndarray:
+        raise NotImplementedError
+
+    def measure(self, q: np.ndarray) -> int:
+        return len(self.encode(q))
+
+    # -- pytree conveniences ------------------------------------------------
+    def encode_tree(self, tree: Pytree) -> list[bytes]:
+        return [
+            self.encode(np.asarray(leaf).reshape(-1))
+            for leaf in jax.tree.leaves(tree)
+        ]
+
+    def tree_bytes(self, tree: Pytree) -> int:
+        return sum(len(p) for p in self.encode_tree(tree))
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseCodec(WireCodec):
+    def encode(self, q: np.ndarray) -> bytes:
+        q = np.asarray(q, np.float32).reshape(-1)
+        return _HDR_D.pack(b"D", q.size) + q.tobytes()
+
+    def decode(self, payload: bytes) -> np.ndarray:
+        kind, d = _HDR_D.unpack_from(payload)
+        assert kind == b"D", kind
+        return np.frombuffer(payload, np.float32, count=d, offset=_HDR_D.size)
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseCodec(WireCodec):
+    """(u32 index, f32 value) records for any zero-masked sparsifier."""
+
+    def encode(self, q: np.ndarray) -> bytes:
+        q = np.asarray(q, np.float32).reshape(-1)
+        idx = np.flatnonzero(q).astype(np.uint32)
+        vals = q[idx]
+        return (
+            _HDR_S.pack(b"S", q.size, idx.size)
+            + idx.tobytes()
+            + vals.tobytes()
+        )
+
+    def decode(self, payload: bytes) -> np.ndarray:
+        kind, d, nnz = _HDR_S.unpack_from(payload)
+        assert kind == b"S", kind
+        off = _HDR_S.size
+        idx = np.frombuffer(payload, np.uint32, count=nnz, offset=off)
+        vals = np.frombuffer(
+            payload, np.float32, count=nnz, offset=off + 4 * nnz
+        )
+        out = np.zeros(d, np.float32)
+        out[idx] = vals
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSparseCodec(SparseCodec):
+    """SparseCodec whose record extraction runs through the Pallas
+    pack kernel — the deployment path for BlockTopK residuals.  The wire
+    format is identical to SparseCodec (global u32 indices), so the two
+    decode interchangeably; only the packing engine differs."""
+
+    block: int = 1024
+    ratio: float = 0.2
+
+    def encode(self, q: np.ndarray) -> bytes:
+        from repro.kernels.pack_residuals import pack_sparse_blocks
+
+        q = np.asarray(q, np.float32).reshape(-1)
+        d = q.size
+        nb = -(-d // self.block)
+        padded = np.zeros(nb * self.block, np.float32)
+        padded[:d] = q
+        # budget = the worst row's actual survivor count, so the pack can
+        # never drop a record even when the bisection kernel keeps more
+        # than the nominal ratio*block per block
+        nnz_max = int(
+            np.count_nonzero(padded.reshape(nb, self.block), axis=1).max()
+        )
+        k = min(self.block, max(1, nnz_max))
+        vals, idx = pack_sparse_blocks(
+            jnp.asarray(padded.reshape(nb, self.block)), k=k, block=self.block
+        )
+        vals, idx = np.asarray(vals), np.asarray(idx)
+        valid = idx < self.block
+        gidx = (
+            idx + self.block * np.arange(nb, dtype=np.int32)[:, None]
+        )[valid].astype(np.uint32)
+        gvals = vals[valid]
+        order = np.argsort(gidx, kind="stable")
+        return (
+            _HDR_S.pack(b"S", d, gidx.size)
+            + gidx[order].tobytes()
+            + gvals[order].tobytes()
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantCodec(WireCodec):
+    """Bit-packed stochastic-quantization codes + per-block f32 scales.
+
+    The compressor hands us the *dequantized* tensor; codes and scales are
+    recovered exactly because the per-block argmax element always lands on
+    the +/-scale grid point (valid whenever max|x| exceeded the 1e-12
+    clamp).  Decode replays the canonical dequant arithmetic (``_dequant``),
+    value-bit-exact for ``StochasticQuant`` and 1-ulp for ``KernelQuant``.
+    """
+
+    bits: int = 4
+    block: int = 0  # 0 = one scale for the whole leaf (StochasticQuant)
+
+    def _blocks(self, d: int) -> int:
+        return 1 if self.block == 0 else -(-d // self.block)
+
+    def encode(self, q: np.ndarray) -> bytes:
+        q = np.asarray(q, np.float32).reshape(-1)
+        d = q.size
+        blk = d if self.block == 0 else self.block
+        nb = self._blocks(d)
+        padded = np.zeros(nb * blk, np.float32)
+        padded[:d] = q
+        tiles = padded.reshape(nb, blk)
+        scales = np.maximum(np.abs(tiles).max(axis=1), 1e-12).astype(np.float32)
+        levels = np.float32((1 << self.bits) - 1)
+        y = tiles / scales[:, None]
+        codes = np.rint((y + np.float32(1.0)) * np.float32(0.5) * levels)
+        codes = np.clip(codes, 0, int(levels)).astype(np.uint8).reshape(-1)[: d]
+        packed = _pack_bits(codes, self.bits)
+        return (
+            _HDR_Q.pack(b"Q", d, self.bits, self.block)
+            + scales.tobytes()
+            + packed.tobytes()
+        )
+
+    def decode(self, payload: bytes) -> np.ndarray:
+        kind, d, bits, block = _HDR_Q.unpack_from(payload)
+        assert kind == b"Q", kind
+        blk = d if block == 0 else block
+        nb = 1 if block == 0 else -(-d // block)
+        off = _HDR_Q.size
+        scales = np.frombuffer(payload, np.float32, count=nb, offset=off)
+        codes = _unpack_bits(
+            np.frombuffer(payload, np.uint8, offset=off + 4 * nb), bits, d
+        )
+        padded = np.zeros(nb * blk, np.float32)
+        padded[:d] = codes
+        out = _dequant(padded.reshape(nb, blk), scales, bits)
+        return out.reshape(-1)[:d].astype(np.float32)
+
+
+def _dequant(codes: np.ndarray, scales: np.ndarray, bits: int) -> np.ndarray:
+    """Canonical receiver-side dequant: IEEE op-by-op float32, identical to
+    the eager jnp arithmetic in ``StochasticQuant`` (value-bit-exact round
+    trip).  The Pallas ``KernelQuant`` runs the same chain *fused* under
+    XLA, which may round the epilogue differently by <= 1 ulp — for that
+    compressor the wire is information-exact (codes and scales are carried
+    losslessly) while decoded values can differ in the last bit; tests pin
+    both contracts."""
+    levels = np.float32((1 << bits) - 1)
+    deq = codes.astype(np.float32) / levels * np.float32(2.0) - np.float32(1.0)
+    return deq * scales[:, None].astype(np.float32)
+
+
+def _pack_bits(codes: np.ndarray, bits: int) -> np.ndarray:
+    """Pack b-bit codes (uint8, values < 2^bits) into a dense byte stream."""
+    cbits = np.unpackbits(codes[:, None], axis=1, count=8)[:, 8 - bits :]
+    return np.packbits(cbits.reshape(-1))
+
+
+def _unpack_bits(packed: np.ndarray, bits: int, n: int) -> np.ndarray:
+    cbits = np.unpackbits(packed)[: n * bits].reshape(n, bits)
+    pad = np.zeros((n, 8 - bits), np.uint8)
+    return np.packbits(np.concatenate([pad, cbits], axis=1), axis=1).reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+
+def has_exact_codec(compressor: C.Compressor) -> bool:
+    """True when ``codec_for`` implements this compressor's actual wire
+    format.  LowRank (and any future compressor without a codec) falls back
+    to DenseCodec, which serializes the reconstruction — a valid wire but
+    NOT what a deployment would send (the rank-r factors), so byte
+    measurements there must not be compared against ``leaf_wire_bytes``."""
+    if isinstance(compressor, C.Rescaled):
+        return has_exact_codec(compressor.inner)
+    return isinstance(
+        compressor,
+        (
+            C.Identity,
+            C.TopK,
+            C.RandK,
+            C.BlockTopK,
+            C.KernelBlockTopK,
+            C.StochasticQuant,
+            C.KernelQuant,
+        ),
+    )
+
+
+def codec_for(compressor: C.Compressor) -> WireCodec:
+    """The wire codec a deployment would pair with this compressor.
+    Compressors without a dedicated format fall back to DenseCodec — check
+    ``has_exact_codec`` before treating the measurement as deployment
+    truth."""
+    if isinstance(compressor, (C.BlockTopK, C.KernelBlockTopK)):
+        return BlockSparseCodec(
+            block=compressor.block, ratio=compressor.ratio
+        )
+    if isinstance(compressor, (C.TopK, C.RandK)):
+        return SparseCodec()
+    if isinstance(compressor, C.StochasticQuant):
+        return QuantCodec(bits=compressor.bits, block=0)
+    if isinstance(compressor, C.KernelQuant):
+        return QuantCodec(bits=compressor.bits, block=compressor.block)
+    if isinstance(compressor, C.Rescaled):
+        return codec_for(compressor.inner)
+    return DenseCodec()
+
+
+def measure_tree_bytes(compressor: C.Compressor, tree: Pytree) -> int:
+    """Exact integer wire bytes for one transmission of ``tree`` (already
+    compressed).  Replaces ``Compressor.tree_wire_bytes`` estimates."""
+    return codec_for(compressor).tree_bytes(tree)
+
+
+def measure_compressed_tree_bytes(
+    compressor: C.Compressor, key, tree: Pytree
+) -> int:
+    """Compress ``tree`` with ``compressor`` then measure the wire bytes."""
+    return measure_tree_bytes(compressor, compressor.compress_tree(key, tree))

@@ -5,6 +5,9 @@ topologies, compressors, step sizes, dimensions and heterogeneity."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep; skip cleanly when absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core.compression import LowRank, StochasticQuant, TopK

@@ -1,0 +1,154 @@
+"""Network fabric: determinism under a fixed seed, timing model sanity,
+straggler/jitter behavior, trace export, and algorithm integration."""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.c2dfb import C2DFBConfig, c2dfb_round, init_state, run
+from repro.core.topology import ring
+from repro.data.bilevel_tasks import coefficient_tuning_task
+from repro.net import (
+    LinkModel,
+    NetTrace,
+    NetworkFabric,
+    StragglerModel,
+    edge_list,
+    make_fabric,
+)
+
+
+@pytest.fixture(scope="module")
+def bundle():
+    return coefficient_tuning_task(m=6, n=200, p=30, c=3, h=0.5, seed=0)
+
+
+def test_fabric_deterministic_under_seed():
+    topo = ring(6)
+    phases = [10_000, 2_000, 2_000]
+    a = make_fabric(topo, profile="wan", straggler="lognormal",
+                    compute_s=0.05, seed=7)
+    b = make_fabric(topo, profile="wan", straggler="lognormal",
+                    compute_s=0.05, seed=7)
+    ra = [a.simulate_round(phases, t) for t in range(5)]
+    rb = [b.simulate_round(phases, t) for t in range(5)]
+    for x, y in zip(ra, rb):
+        assert x["sim_seconds"] == y["sim_seconds"]
+        assert x["wire_bytes"] == y["wire_bytes"]
+        np.testing.assert_array_equal(x["straggler_mult"], y["straggler_mult"])
+    c = make_fabric(topo, profile="wan", straggler="lognormal",
+                    compute_s=0.05, seed=8)
+    assert c.simulate_round(phases, 0)["sim_seconds"] != ra[0]["sim_seconds"]
+
+
+def test_round_indexed_rng_is_order_independent():
+    """Round t's timeline must not depend on which rounds ran before."""
+    topo = ring(4)
+    a = make_fabric(topo, profile="wan", straggler="bernoulli", seed=3,
+                    compute_s=0.02)
+    b = make_fabric(topo, profile="wan", straggler="bernoulli", seed=3,
+                    compute_s=0.02)
+    _ = a.simulate_round([1000], 0)
+    r5_after_0 = a.simulate_round([1000], 5)
+    r5_cold = b.simulate_round([1000], 5)
+    assert r5_after_0["sim_seconds"] == r5_cold["sim_seconds"]
+
+
+def test_phase_timing_model():
+    """latency + bytes/bandwidth with egress serialization, no randomness."""
+    topo = ring(4)  # every node has exactly 2 neighbors
+    link = LinkModel(latency_s=0.010, bandwidth_Bps=1_000_000.0)
+    fab = NetworkFabric(topo, link=link, seed=0)
+    rep = fab.simulate_round([100_000], 0)
+    # 2 egress messages serialize: 2 * 0.1 s transfer + 0.01 s latency
+    assert rep["sim_seconds"] == pytest.approx(0.21)
+    assert rep["wire_bytes"] == 100_000 * len(edge_list(topo))
+
+
+def test_stragglers_slow_the_round():
+    topo = ring(6)
+    fast = make_fabric(topo, profile="lan", straggler="none", compute_s=0.05,
+                       seed=0)
+    slow = make_fabric(topo, profile="lan", straggler="bernoulli", p=0.99,
+                       slowdown=10.0, compute_s=0.05, seed=0)
+    t_fast = fast.simulate_round([1000], 0)["sim_seconds"]
+    t_slow = slow.simulate_round([1000], 0)["sim_seconds"]
+    assert t_slow > 5 * t_fast
+
+
+def test_straggler_models_shapes():
+    rng = np.random.default_rng(0)
+    assert (StragglerModel("none").sample(rng, 5) == 1.0).all()
+    ln = StragglerModel("lognormal", sigma=0.5).sample(rng, 1000)
+    assert ln.min() > 0 and ln.mean() > 0.9
+    bn = StragglerModel("bernoulli", p=0.5, slowdown=4.0).sample(rng, 1000)
+    assert set(np.unique(bn)) <= {1.0, 4.0}
+    with pytest.raises(ValueError):
+        StragglerModel("nope").sample(rng, 3)
+
+
+def test_trace_export(tmp_path):
+    topo = ring(4)
+    tr = NetTrace()
+    fab = make_fabric(topo, profile="wan", seed=0, trace=tr)
+    fab.simulate_round([500, 700], 0, labels=["x", "s"])
+    assert len(tr.transfers) == 2 * len(edge_list(topo))
+    assert [p.label for p in tr.phases] == ["x", "s"]
+    path = tmp_path / "trace.json"
+    tr.save(str(path))
+    data = json.loads(path.read_text())
+    assert data["transfers"][0]["bytes"] == 500
+    chrome = tr.to_chrome_trace()
+    assert all(e["ph"] == "X" for e in chrome)
+
+
+def test_c2dfb_round_with_fabric_metrics(bundle):
+    topo = ring(6)
+    cfg = C2DFBConfig(K=2, compressor="topk", comp_ratio=0.2)
+    fab = make_fabric(topo, profile="wan", seed=0)
+    state = init_state(bundle.problem, cfg, bundle.x0, bundle.y0)
+    key = jax.random.PRNGKey(0)
+    state, m1 = c2dfb_round(state, key, bundle.problem, topo, cfg,
+                            fabric=fab, round_idx=0)
+    assert isinstance(m1["wire_bytes"], (int, np.integer))
+    assert m1["wire_bytes"] > 0 and m1["sim_seconds"] > 0
+    # fabric must not perturb the optimization itself
+    fabfree = init_state(bundle.problem, cfg, bundle.x0, bundle.y0)
+    ref, m2 = c2dfb_round(fabfree, key, bundle.problem, topo, cfg)
+    np.testing.assert_array_equal(np.asarray(state.x), np.asarray(ref.x))
+
+
+def test_round_with_w_override_prices_only_active_links(bundle):
+    """c2dfb_round(W=schedule.weights(t), fabric=...) must not bill
+    deactivated links — the eager path has to agree with run()'s
+    active-edge masking."""
+    from repro.net import BConnectedSchedule
+
+    topo = ring(6)
+    cfg = C2DFBConfig(K=2, compressor="topk", comp_ratio=0.2)
+    sched = BConnectedSchedule(topo, B=2)  # half the ring's edges per round
+    key = jax.random.PRNGKey(0)
+
+    full = make_fabric(topo, profile="lan", seed=0)
+    state = init_state(bundle.problem, cfg, bundle.x0, bundle.y0)
+    _, m_full = c2dfb_round(state, key, bundle.problem, topo, cfg,
+                            fabric=full, round_idx=0)
+    half = make_fabric(topo, profile="lan", seed=0)
+    _, m_half = c2dfb_round(state, key, bundle.problem, topo, cfg,
+                            W=sched.weights(0), fabric=half, round_idx=0)
+    assert m_half["wire_bytes"] == m_full["wire_bytes"] // 2
+
+
+def test_run_with_fabric_attaches_timeline(bundle):
+    topo = ring(6)
+    cfg = C2DFBConfig(K=2, compressor="topk", comp_ratio=0.2)
+    fab = make_fabric(topo, profile="wan", straggler="lognormal", seed=1,
+                      compute_s=0.01)
+    _, mets = run(bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=3,
+                  key=jax.random.PRNGKey(0), fabric=fab)
+    assert mets["sim_seconds"].shape == (3,)
+    assert mets["wire_bytes"].shape == (3,)
+    assert mets["wire_bytes"].dtype == np.int64
+    assert (mets["wire_bytes"] > 0).all() and (mets["sim_seconds"] > 0).all()

@@ -5,7 +5,11 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
+# optional checkpoint deps (pyproject 'checkpoint' extra); skip cleanly
+pytest.importorskip("msgpack")
+pytest.importorskip("zstandard")
 from repro.checkpoint.io import (
     checkpoint_path,
     latest_checkpoint,
