@@ -1,0 +1,148 @@
+"""Time-to-accuracy: synchronous barriers vs bounded-stale vs fully-async.
+
+For each network profile (LAN, WAN, geo+stragglers) run C2DFB through the
+`repro.async_gossip` engine under the three policies — identical
+hyperparameters, identical fabric seeds — and report
+
+    simulated_seconds     fabric wall clock for T rounds
+    t_to_sync_err         first simulated second at which the async run
+                          reaches the synchronous run's final consensus
+                          error (inf if never)
+    staleness_max/mean    the ages the run actually experienced
+    wire_bytes            per-link traffic (scheduler-accounted)
+
+This is the regime where the paper's compressed inner loop should win most:
+under geo latency the barrier pays ~latency per inner STEP, while the async
+policies pipeline flight time behind compute at a bounded staleness cost.
+
+Also exports a Chrome trace (one lane per node) of one geo round under each
+policy to ``bench_async_trace.json`` — the CI uploads it as an artifact.
+
+    PYTHONPATH=src python benchmarks/bench_async.py [--smoke] [--full]
+    PYTHONPATH=src python -m benchmarks.run --only async
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+if __package__ in (None, ""):  # `python benchmarks/bench_async.py`
+    sys.path.insert(
+        0, os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    )
+
+from benchmarks.common import emit
+from repro.core.c2dfb import C2DFBConfig
+from repro.core.c2dfb import run as c2dfb_run
+from repro.core.topology import ring
+from repro.data.bilevel_tasks import coefficient_tuning_task
+from repro.net import NetTrace, make_fabric
+
+#: (name, fabric kwargs) — same profiles as bench_network.
+NET_PROFILES = [
+    ("lan", dict(profile="lan", straggler="none", compute_s=0.01)),
+    ("wan", dict(profile="wan", straggler="none", compute_s=0.01)),
+    (
+        "geo_straggler",
+        dict(profile="geo", straggler="lognormal", compute_s=0.05, sigma=0.8),
+    ),
+]
+
+#: (label, async_mode, staleness bound) — bound chosen inside the
+#: gamma*staleness stability margin (tests/test_async_invariants.py).
+POLICIES = [
+    ("sync", "sync", 0),
+    ("bounded1", "bounded", 1),
+    ("full", "full", 0),
+]
+
+TRACE_PATH = "bench_async_trace.json"
+
+
+def run_suite(fast: bool = True, smoke: bool = False):
+    m = 6 if smoke else 10
+    T = 3 if smoke else (8 if fast else 20)
+    K = 4 if smoke else 6
+    bundle = coefficient_tuning_task(
+        m=m, n=300 if smoke else 1500, p=40 if smoke else 120, c=5,
+        h=0.8, seed=0,
+    )
+    topo = ring(m)
+    cfg = C2DFBConfig(
+        lam=10.0, eta_out=0.3, gamma_out=0.5, eta_in=0.3, gamma_in=0.3,
+        K=K, compressor="topk", comp_ratio=0.5,
+    )
+    key = jax.random.PRNGKey(0)
+    trace_out = {}
+
+    for net_name, net_kw in NET_PROFILES:
+        sync_err = sync_t = None
+        for label, mode, bound in POLICIES:
+            tr = NetTrace() if net_name == "geo_straggler" else None
+            fabric = make_fabric(topo, seed=0, trace=tr, **net_kw)
+            t0 = time.time()
+            _, mets = c2dfb_run(
+                bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=T,
+                key=key, fabric=fabric, async_mode=mode,
+                staleness_bound=bound,
+            )
+            dt = time.time() - t0
+            err = np.asarray(mets["y_consensus_err"], dtype=np.float64)
+            sim = np.cumsum(np.asarray(mets["sim_seconds"]))
+            if label == "sync":
+                sync_err, sync_t = float(err[-1]), float(sim[-1])
+                t_hit = sync_t
+            else:
+                hit = np.nonzero(err <= sync_err)[0]
+                t_hit = float(sim[hit[0]]) if hit.size else float("inf")
+            emit(
+                f"async/{net_name}/{label}",
+                dt * 1e6 / max(T, 1),
+                f"simulated_seconds={float(sim[-1]):.2f};"
+                f"t_to_sync_err={t_hit:.2f};"
+                f"final_consensus_err={float(err[-1]):.5f};"
+                f"staleness_max={int(np.asarray(mets['staleness_max']).max())};"
+                f"staleness_mean={float(np.asarray(mets['staleness_mean']).mean()):.2f};"
+                f"wire_bytes={int(np.asarray(mets['wire_bytes']).sum())}",
+            )
+            if tr is not None:
+                trace_out[label] = tr.to_chrome_trace()
+
+    with open(TRACE_PATH, "w") as fh:
+        json.dump(
+            # one merged chrome trace; policies offset into named lanes by
+            # prefixing pids so they don't overlap
+            [
+                {**ev, "pid": f"{pol}/{ev['pid']}"}
+                for pol, evs in trace_out.items()
+                for ev in evs
+            ],
+            fh,
+        )
+    print(f"# chrome trace: {TRACE_PATH}", flush=True)
+
+
+def run(fast: bool = True, **_kw):  # benchmarks.run harness entry point
+    run_suite(fast=fast)
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny settings for CI (seconds, not minutes)")
+    ap.add_argument("--full", action="store_true", help="paper-scale settings")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run_suite(fast=not args.full, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,11 +16,12 @@ def main() -> None:
     ap.add_argument("--full", action="store_true", help="paper-scale settings")
     ap.add_argument("--only", default=None,
                     help="comma list: comm,topology,hyperrep,sensitivity,"
-                         "kernels,roofline,network")
+                         "kernels,roofline,network,async")
     args = ap.parse_args()
     fast = not args.full
 
     from benchmarks import (
+        bench_async,
         bench_comm_volume,
         bench_hyperrep,
         bench_kernels,
@@ -38,6 +39,7 @@ def main() -> None:
         "sensitivity": bench_sensitivity.run,
         "roofline": bench_roofline.run,
         "network": bench_network.run,
+        "async": bench_async.run,
     }
     wanted = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")

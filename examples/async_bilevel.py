@@ -1,0 +1,74 @@
+"""Asynchronous decentralized bilevel training — no more barriers.
+
+    PYTHONPATH=src python examples/async_bilevel.py
+
+The same ten-node coefficient-tuning ring as examples/wan_bilevel.py, but
+over an intercontinental (geo) fabric with lognormal stragglers, executed
+by the `repro.async_gossip` engine: nodes mix whatever neighbor reference
+points have actually arrived instead of waiting at per-step barriers.
+Compares the three policies (per-step barriers / bounded staleness /
+fully-async) on simulated wall clock and shows the staleness the run
+actually experienced, then exports a per-node Chrome timeline.
+"""
+
+import json
+
+import jax
+import numpy as np
+
+from repro.core.c2dfb import C2DFBConfig, run
+from repro.core.topology import ring
+from repro.core.types import node_mean
+from repro.data.bilevel_tasks import coefficient_tuning_task
+from repro.net import NetTrace, make_fabric
+
+
+def main():
+    m, T = 10, 12
+    bundle = coefficient_tuning_task(m=m, n=1500, p=120, c=5, h=0.8, seed=0)
+    topo = ring(m)
+    # gamma_in = 0.3: delayed gossip trades contraction for wall clock and
+    # its stability margin shrinks with gamma x staleness — see
+    # tests/test_async_invariants.py::test_delayed_consensus_stability
+    cfg = C2DFBConfig(
+        lam=10.0, eta_out=0.3, gamma_out=0.5, eta_in=0.3, gamma_in=0.3,
+        K=6, compressor="topk", comp_ratio=0.5,
+    )
+    key = jax.random.PRNGKey(0)
+
+    results = {}
+    for label, mode, bound, trace in [
+        ("per-step barriers", "sync", 0, None),
+        ("bounded staleness (S=1)", "bounded", 1, NetTrace()),
+        ("fully asynchronous", "full", 0, None),
+    ]:
+        fabric = make_fabric(
+            topo, profile="geo", straggler="lognormal", sigma=0.8,
+            compute_s=0.05, seed=0, trace=trace,
+        )
+        state, mets = run(
+            bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=T, key=key,
+            fabric=fabric, async_mode=mode, staleness_bound=bound,
+        )
+        acc = bundle.test_accuracy(
+            node_mean(state.x), node_mean(state.inner_y.d), bundle.predict_fn
+        )
+        sim = float(np.asarray(mets["sim_seconds"]).sum())
+        smax = int(np.asarray(mets["staleness_max"]).max())
+        smean = float(np.asarray(mets["staleness_mean"]).mean())
+        results[label] = (sim, acc)
+        print(f"{label:26s}: {sim:6.1f} simulated s for {T} rounds, "
+              f"accuracy {acc:.3f}, staleness max={smax} mean={smean:.2f}")
+        if trace is not None:
+            with open("async_trace.json", "w") as fh:
+                json.dump(trace.to_chrome_trace(), fh)
+
+    speedup = results["per-step barriers"][0] / results["fully asynchronous"][0]
+    print(f"\nfully-async finishes the same rounds {speedup:.1f}x faster on "
+          "this fabric (staleness-aware mixing keeps Eq. 7 intact).")
+    print("per-node timeline: async_trace.json (load in chrome://tracing — "
+          "lanes drifting apart IS the staleness)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""repro.async_gossip — event-driven asynchronous gossip with
+staleness-aware mixing.
+
+Turns the synchronous barrier phases of the C2DFB reproduction into an
+event-driven execution model over the `repro.net` fabric:
+
+* ``scheduler`` — `AsyncScheduler`: per-node clocks, per-message arrivals
+  (NIC egress + link model + stragglers), and the sync / bounded-staleness
+  / fully-async gating policies.  Produces per-step per-edge version AGES.
+* ``mixing``   — jit/scan-side delayed gossip: reference-point histories
+  and the symmetric age-gated operator that preserves the paper's
+  mean-dynamics invariant (Eq. 7) under any delay pattern.
+* ``engine``   — `run_async` (C2DFB rounds under staleness, reached via
+  ``c2dfb.run(async_mode=...)``) and `run_baseline_async` (MADSBO / MDBO
+  value-gossip loops under the same scheduler).
+* ``ledger``   — `StalenessLedger`: per-edge age histograms and the
+  consensus-error-vs-simulated-seconds curves time-to-accuracy
+  comparisons are read off of.
+"""
+
+from repro.async_gossip.engine import (
+    async_c2dfb_round,
+    async_inner_loop,
+    delayed_value_scan,
+    run_async,
+    run_baseline_async,
+)
+from repro.async_gossip.ledger import LoopRecord, StalenessLedger
+from repro.async_gossip.mixing import (
+    init_history,
+    mix_delta_delayed,
+    push_history,
+)
+from repro.async_gossip.scheduler import POLICIES, AsyncScheduler, AsyncTimeline
+
+__all__ = [
+    "POLICIES",
+    "AsyncScheduler",
+    "AsyncTimeline",
+    "LoopRecord",
+    "StalenessLedger",
+    "async_c2dfb_round",
+    "async_inner_loop",
+    "delayed_value_scan",
+    "init_history",
+    "mix_delta_delayed",
+    "push_history",
+    "run_async",
+    "run_baseline_async",
+]

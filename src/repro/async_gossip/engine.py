@@ -1,0 +1,410 @@
+"""Async execution engine: C2DFB (and the baselines) under staleness.
+
+Couples the three halves of the subsystem:
+
+* `scheduler.AsyncScheduler` (host-side numpy) turns the fabric's link /
+  straggler timelines into per-step, per-edge version AGES;
+* `mixing.mix_delta_delayed` (jit) gates the mixing matrix with those ages
+  inside ``lax.scan``;
+* `ledger.StalenessLedger` keeps the ages and the consensus-vs-seconds
+  curve as first-class round metrics.
+
+The outer loop runs EAGERLY round-by-round (the jitted work is per-round):
+each round the current residuals are serialized by the wire codec to get
+honest per-node packet sizes, the scheduler executes the two inner loops
+event-driven (outer x / s_x broadcasts stay barrier-synchronized —
+Algorithm 1's round boundary, which also drains in-flight residuals so the
+next round's version-0 references are globally consistent), and the
+resulting age tensors ride into the jitted round as scan inputs.
+
+Rounds whose age tensors are all zero take a fast path that is
+OP-IDENTICAL to the synchronous `c2dfb_round` — so a zero-latency fabric
+reproduces the synchronous trajectory bit-for-bit (tested), not merely to
+tolerance.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.async_gossip.ledger import StalenessLedger
+from repro.async_gossip.mixing import (
+    init_history,
+    mix_delta_delayed,
+    push_history,
+)
+from repro.async_gossip.scheduler import AsyncScheduler
+from repro.core.bilevel_problem import BilevelProblem
+from repro.core.c2dfb import (
+    C2DFBConfig,
+    C2DFBState,
+    c2dfb_round_core,
+    init_state,
+)
+from repro.core.compression import make_compressor
+from repro.core.inner_loop import (
+    InnerState,
+    inner_apply,
+    inner_loop,
+    inner_message_bytes,
+)
+from repro.core.topology import Topology
+from repro.core.types import Pytree, consensus_error, tree_sq_norm
+
+
+def async_inner_loop(
+    state: InnerState,
+    key: jax.Array,
+    grad_fn,
+    W: jax.Array,
+    compressor,
+    gamma: float,
+    eta: float,
+    K: int,
+    ages: jax.Array,
+    depth: int,
+    delayed: bool = True,
+) -> tuple[InnerState, dict]:
+    """Algorithm 2 under staleness: K steps where the mixing deltas come
+    from age-gated reference HISTORIES instead of the current references.
+
+    ``ages`` is (K, m, m) — step k mixes edge (i, j) on the common version
+    of age ``ages[k, i, j]``.  With ``delayed=False`` (all ages zero) this
+    IS the synchronous `inner_loop` — same function, so zero-staleness
+    rounds are bit-identical to the sync path and carry no dead history.
+
+    The delayed branch mirrors `inner_loop`'s scan body with the history
+    carry added; keep the two in lockstep (same `inner_apply` call, same
+    byte metering, same metrics keys) — a change to one that skips the
+    other breaks the sync/async metric parity that `run` callers rely on.
+    """
+    from repro.net.wire import scan_tree_bytes
+
+    if not delayed:
+        return inner_loop(
+            state, key, grad_fn, W, compressor, gamma, eta, K
+        )
+
+    hist_d = init_history(state.d_hat, depth)
+    hist_s = init_history(state.s_hat, depth)
+
+    def body(carry, inp):
+        st, hd, hs = carry
+        k, age_k = inp
+        mix_d = mix_delta_delayed(W, hd, age_k)
+        mix_s = mix_delta_delayed(W, hs, age_k)
+        st, (q_d, q_s) = inner_apply(
+            st, k, grad_fn, compressor, gamma, eta, mix_d, mix_s
+        )
+        hd = push_history(hd, st.d_hat)
+        hs = push_history(hs, st.s_hat)
+        nbytes = scan_tree_bytes(compressor, q_d) + scan_tree_bytes(
+            compressor, q_s
+        )
+        return (st, hd, hs), nbytes
+
+    keys = jax.random.split(key, K)
+    ages = jnp.asarray(ages, jnp.int32)
+    (state, _, _), step_bytes = jax.lax.scan(
+        body, (state, hist_d, hist_s), (keys, ages)
+    )
+    metrics = {
+        "consensus_err": consensus_error(state.d),
+        "compress_err": tree_sq_norm(
+            jax.tree.map(jnp.subtract, state.d, state.d_hat)
+        ),
+        "tracker_consensus_err": consensus_error(state.s),
+        "msg_bytes": jnp.sum(step_bytes),
+    }
+    return state, metrics
+
+
+def async_c2dfb_round(
+    state: C2DFBState,
+    key: jax.Array,
+    problem: BilevelProblem,
+    topo: Topology,
+    cfg: C2DFBConfig,
+    ages_y: jax.Array,
+    ages_z: jax.Array,
+    depth: int,
+    delayed: bool = True,
+) -> tuple[C2DFBState, dict]:
+    """One outer round with staleness-gated inner loops: the shared
+    `c2dfb_round_core` body with `async_inner_loop` plugged in.  Outer
+    x / s_x updates stay synchronous (the round boundary is a barrier), so
+    zero ages reproduce the synchronous round exactly."""
+    W = jnp.asarray(topo.W, dtype=jnp.float32)
+    compressor = cfg.make_compressor()
+    ages = {"y": ages_y, "z": ages_z}
+
+    def inner_fn(st, k, grad_fn, eta, tag):
+        return async_inner_loop(
+            st, k, grad_fn, W, compressor, cfg.gamma_in, eta, cfg.K,
+            ages[tag], depth, delayed,
+        )
+
+    return c2dfb_round_core(state, key, problem, W, cfg, inner_fn)
+
+
+def _dense_node_bytes(tree: Pytree) -> int:
+    """Per-node dense f32 wire bytes of a node-stacked tree (codec truth)."""
+    from repro.net.wire import codec_for
+
+    one = jax.tree.map(lambda v: v[0], tree)
+    return codec_for(make_compressor("identity")).tree_bytes(one)
+
+
+def _loop_start(tl, fallback: float) -> float:
+    """A loop's true start: the earliest step-0 mix (loops overlap the
+    previous loop's in-flight packets, so the prior end_s is NOT the
+    start)."""
+    return float(tl.mix_s[0].min()) if tl.mix_s.size else float(fallback)
+
+
+def run_async(
+    problem: BilevelProblem,
+    topo: Topology,
+    cfg: C2DFBConfig,
+    x0: Pytree,
+    y0: Pytree,
+    T: int,
+    key: jax.Array,
+    fabric,
+    policy: str = "bounded",
+    bound: int = 2,
+    ledger: StalenessLedger | None = None,
+    scheduler: AsyncScheduler | None = None,
+) -> tuple[C2DFBState, dict]:
+    """T outer rounds of C2DFB under the async engine.
+
+    Returns the final state and per-round metric arrays — the synchronous
+    ``run``'s keys plus ``sim_seconds``, ``wire_bytes`` (per-link
+    accounting from the scheduler), ``staleness_max`` / ``staleness_mean``
+    (active directed edges only) and ``staleness_hist`` (T, depth) age
+    histograms.  ``policy="sync"`` is the barrier reference; "bounded"
+    enforces ``age <= bound`` by gating; "full" never waits.
+    """
+    from repro.net.fabric import edge_list
+
+    scheduler = scheduler or AsyncScheduler(fabric, policy=policy, bound=bound)
+    ledger = ledger if ledger is not None else StalenessLedger()
+    state = init_state(problem, cfg, x0, y0)
+    comp = cfg.make_compressor()
+    depth = scheduler.depth_for(cfg.K)
+    outer_node_bytes = _dense_node_bytes(state.x)
+    compute_step = (
+        fabric.compute_s / (2 * cfg.K + 2) if fabric.compute_s else 0.0
+    )
+    edges = edge_list(topo)
+
+    round_fns = {}
+
+    def round_fn(delayed: bool):
+        if delayed not in round_fns:
+            round_fns[delayed] = jax.jit(
+                lambda st, k, ay, az, _d=delayed: async_c2dfb_round(
+                    st, k, problem, topo, cfg, ay, az, depth, delayed=_d
+                )
+            )
+        return round_fns[delayed]
+
+    idx = tuple(zip(*edges))
+    keys = jax.random.split(key, T)
+    rows: list[dict] = []
+    for t in range(T):
+        t_start = float(scheduler.clock.max())
+        # honest per-node packet sizes: serialize the CURRENT residuals
+        kb = jax.random.fold_in(keys[t], 0xB17E)  # metering-only key
+        kby, kbz = jax.random.split(kb)
+        bd, bs = inner_message_bytes(state.inner_y, comp, kby)
+        bytes_y = np.asarray(bd) + np.asarray(bs)
+        bd, bs = inner_message_bytes(state.inner_z, comp, kbz)
+        bytes_z = np.asarray(bd) + np.asarray(bs)
+
+        scheduler.barrier_phase(
+            outer_node_bytes, t, compute_s=compute_step, label="x"
+        )
+        ty0 = float(scheduler.clock.max())
+        tl_y = scheduler.run_loop(
+            cfg.K, bytes_y, t, compute_step, loop="y"
+        )
+        tl_z = scheduler.run_loop(
+            cfg.K, bytes_z, t, compute_step, loop="z"
+        )
+        scheduler.drain(max(tl_y.end_s, tl_z.end_s))
+        t_end = scheduler.barrier_phase(
+            outer_node_bytes, t, compute_s=compute_step, label="s_x"
+        )
+
+        delayed = bool(tl_y.ages.any() or tl_z.ages.any())
+        state, mets = round_fn(delayed)(
+            state, keys[t], jnp.asarray(tl_y.ages), jnp.asarray(tl_z.ages)
+        )
+
+        ledger.record_loop(t, "y", tl_y.ages, _loop_start(tl_y, ty0),
+                           tl_y.end_s)
+        ledger.record_loop(t, "z", tl_z.ages, _loop_start(tl_z, tl_y.end_s),
+                           tl_z.end_s)
+        x_err = float(mets["x_consensus_err"])
+        ledger.record_point(t_end, x_err)
+
+        edge_ages = np.concatenate(
+            [tl_y.ages[:, idx[0], idx[1]].reshape(-1),
+             tl_z.ages[:, idx[0], idx[1]].reshape(-1)]
+        )
+        outer_wire = 2 * outer_node_bytes * len(edges)
+        row = {k: np.asarray(v) for k, v in mets.items()}
+        row["sim_seconds"] = np.float64(t_end - t_start)
+        row["wire_bytes"] = np.int64(
+            tl_y.wire_bytes + tl_z.wire_bytes + outer_wire
+        )
+        row["staleness_max"] = np.int32(edge_ages.max(initial=0))
+        row["staleness_mean"] = np.float64(
+            edge_ages.mean() if edge_ages.size else 0.0
+        )
+        row["staleness_hist"] = np.bincount(
+            edge_ages, minlength=depth
+        )[:depth].astype(np.int64)
+        rows.append(row)
+
+    metrics = {
+        k: np.stack([r[k] for r in rows]) for k in rows[0]
+    } if rows else {}
+    metrics["ledger"] = ledger
+    return state, metrics
+
+
+# ---------------------------------------------------------------------------
+# baselines under the same scheduler (delayed VALUE gossip: no reference
+# points — each step transmits the dense iterate, staleness delays it)
+# ---------------------------------------------------------------------------
+
+
+def delayed_value_scan(
+    value: Pytree,
+    W: jax.Array,
+    gamma: float,
+    ages: jax.Array,
+    depth: int,
+    local_update,
+) -> Pytree:
+    """Staleness-gated twin of `repro.core.baselines.value_gossip_scan`:
+    K steps of  v <- local_update(v + gamma * mix(views), v_pre)  where the
+    views are age-gated versions of the transmitted iterate (dense value
+    gossip — each step transmits the iterate itself).  ``local_update``
+    has the same (mixed, pre) contract as the synchronous scan."""
+    hist = init_history(value, depth)
+
+    def body(carry, age_k):
+        v, h = carry
+        delta = mix_delta_delayed(W, h, age_k)
+        mixed = jax.tree.map(lambda a, d_: a + gamma * d_, v, delta)
+        v_new = local_update(mixed, v)
+        h = push_history(h, v_new)
+        return (v_new, h), None
+
+    (value, _), _ = jax.lax.scan(
+        body, (value, hist), jnp.asarray(ages, jnp.int32)
+    )
+    return value
+
+
+def run_baseline_async(
+    alg: str,
+    problem: BilevelProblem,
+    topo: Topology,
+    cfg,
+    x0: Pytree,
+    y0: Pytree,
+    T: int,
+    fabric,
+    policy: str = "bounded",
+    bound: int = 2,
+    ledger: StalenessLedger | None = None,
+) -> tuple[object, dict]:
+    """MADSBO / MDBO rounds driven by the AsyncScheduler: their dense
+    value-gossip loops run event-driven with age-gated mixing; the
+    hypergradient assembly and upper-level update stay at the (barrier)
+    round boundary, mirroring the sync baselines."""
+    from repro.core.baselines import (
+        madsbo_init, madsbo_round_async, mdbo_init, mdbo_round_async,
+    )
+
+    if alg not in ("madsbo", "mdbo"):
+        raise ValueError(f"unknown async baseline {alg!r}")
+    scheduler = AsyncScheduler(fabric, policy=policy, bound=bound)
+    ledger = ledger if ledger is not None else StalenessLedger()
+    dy_bytes = _dense_node_bytes(y0)
+    dx_bytes = _dense_node_bytes(x0)
+    K = cfg.K
+    Q = getattr(cfg, "Q", 0)            # MADSBO's HIGP subsolver steps
+    N = getattr(cfg, "neumann_N", 0)    # MDBO's local Neumann terms
+    n_units = K + Q + N + 1
+    compute_step = fabric.compute_s / n_units if fabric.compute_s else 0.0
+    depth = scheduler.depth_for(max(K, Q))
+
+    if alg == "madsbo":
+        state = madsbo_init(problem, x0, y0)
+    else:
+        state = mdbo_init(x0, y0)
+    round_fns = {}
+
+    def round_fn(delayed: bool):
+        if delayed not in round_fns:
+            if alg == "madsbo":
+                round_fns[delayed] = jax.jit(
+                    lambda st, all_, ah, _d=delayed: madsbo_round_async(
+                        st, problem, topo, cfg, all_, ah, depth, delayed=_d
+                    )
+                )
+            else:
+                round_fns[delayed] = jax.jit(
+                    lambda st, all_, _d=delayed: mdbo_round_async(
+                        st, problem, topo, cfg, all_, depth, delayed=_d
+                    )
+                )
+        return round_fns[delayed]
+
+    rows = []
+    for t in range(T):
+        t_start = float(scheduler.clock.max())
+        tl_ll = scheduler.run_loop(K, dy_bytes, t, compute_step, loop="ll")
+        if alg == "madsbo":
+            tl_h = scheduler.run_loop(Q, dy_bytes, t, compute_step, loop="higp")
+            ages_h = tl_h.ages
+            end_loops = tl_h.end_s
+        else:
+            ages_h = None
+            end_loops = tl_ll.end_s
+        scheduler.drain(end_loops)
+        # MDBO's Neumann terms are local compute (no gossip in this
+        # realization) — they ride the barrier phase's compute slice
+        t_end = scheduler.barrier_phase(
+            dx_bytes, t, compute_s=compute_step * (1 + N), label="ul"
+        )
+        delayed = bool(
+            tl_ll.ages.any() or (ages_h is not None and ages_h.any())
+        )
+        if alg == "madsbo":
+            state, mets = round_fn(delayed)(
+                state, jnp.asarray(tl_ll.ages), jnp.asarray(ages_h)
+            )
+        else:
+            state, mets = round_fn(delayed)(state, jnp.asarray(tl_ll.ages))
+        ledger.record_loop(t, "ll", tl_ll.ages, _loop_start(tl_ll, t_start),
+                           tl_ll.end_s)
+        if ages_h is not None:
+            ledger.record_loop(t, "higp", ages_h,
+                               _loop_start(tl_h, tl_ll.end_s), tl_h.end_s)
+        x_err = float(mets["x_consensus_err"])
+        ledger.record_point(t_end, x_err)
+        row = {k: np.asarray(v) for k, v in mets.items()}
+        row["sim_seconds"] = np.float64(t_end - t_start)
+        rows.append(row)
+
+    metrics = {k: np.stack([r[k] for r in rows]) for k in rows[0]}
+    metrics["ledger"] = ledger
+    return state, metrics

@@ -1,0 +1,108 @@
+"""Staleness ledger — per-edge reference-point age as a first-class metric.
+
+Convergence claims for asynchronous gossip are only meaningful against the
+staleness the run actually experienced, so the ledger records every loop's
+(K, m, m) age tensor next to the simulated clock, and turns them into the
+round metrics the benchmarks plot:
+
+* per-round age histograms (``hist``), max and mean age;
+* the consensus-error-vs-simulated-seconds curve (``curve``) that
+  time-to-accuracy comparisons (sync vs bounded-stale vs fully-async) are
+  read off of.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopRecord:
+    round: int
+    loop: str              # "y" | "z"
+    ages: np.ndarray       # (K, m, m) int32, symmetric
+    t_start: float
+    t_end: float
+
+
+class StalenessLedger:
+    """Append-only record of per-edge ages and convergence checkpoints."""
+
+    def __init__(self) -> None:
+        self.loops: list[LoopRecord] = []
+        self._curve_t: list[float] = []
+        self._curve_err: list[float] = []
+
+    # -- recording ----------------------------------------------------------
+    def record_loop(
+        self, round_idx: int, loop: str, ages: np.ndarray,
+        t_start: float, t_end: float,
+    ) -> None:
+        self.loops.append(
+            LoopRecord(
+                round=round_idx, loop=loop,
+                ages=np.asarray(ages, dtype=np.int32),
+                t_start=float(t_start), t_end=float(t_end),
+            )
+        )
+
+    def record_point(self, sim_s: float, consensus_err: float) -> None:
+        """One (simulated seconds, consensus error) convergence checkpoint —
+        called by the engine at each round boundary."""
+        self._curve_t.append(float(sim_s))
+        self._curve_err.append(float(consensus_err))
+
+    # -- queries ------------------------------------------------------------
+    def round_ages(self, round_idx: int) -> np.ndarray:
+        """All edge ages observed in one round, flattened (active edges
+        only — zero-weight pairs never enter the ledger's loop records with
+        nonzero age, but we keep the raw tensors and mask upstream)."""
+        recs = [r.ages for r in self.loops if r.round == round_idx]
+        return (
+            np.concatenate([a.reshape(-1) for a in recs])
+            if recs else np.zeros(0, np.int32)
+        )
+
+    def max_age(self) -> int:
+        return max((int(r.ages.max()) for r in self.loops), default=0)
+
+    def mean_age(self, edges=None) -> float:
+        """Mean age over recorded steps; restrict to ``edges`` (directed
+        pairs) when given so idle (i, i) / non-edge zeros don't dilute it."""
+        if not self.loops:
+            return 0.0
+        if edges is None:
+            vals = np.concatenate([r.ages.reshape(-1) for r in self.loops])
+        else:
+            idx = tuple(zip(*edges))
+            vals = np.concatenate(
+                [r.ages[:, idx[0], idx[1]].reshape(-1) for r in self.loops]
+            )
+        return float(vals.mean()) if vals.size else 0.0
+
+    def histogram(self, max_age: int | None = None, edges=None) -> np.ndarray:
+        """Counts of observed ages 0..max_age over all recorded steps."""
+        if max_age is None:
+            max_age = self.max_age()
+        counts = np.zeros(max_age + 1, dtype=np.int64)
+        for r in self.loops:
+            a = r.ages
+            if edges is not None:
+                idx = tuple(zip(*edges))
+                a = a[:, idx[0], idx[1]]
+            c = np.bincount(a.reshape(-1), minlength=max_age + 1)
+            counts += c[: max_age + 1]
+        return counts
+
+    def curve(self) -> tuple[np.ndarray, np.ndarray]:
+        """(sim_seconds, consensus_err) checkpoints in round order."""
+        return np.asarray(self._curve_t), np.asarray(self._curve_err)
+
+    def time_to_error(self, target_err: float) -> float:
+        """First simulated time at which the consensus error checkpoint
+        dropped to ``target_err`` (inf if never)."""
+        t, e = self.curve()
+        hit = np.nonzero(e <= target_err)[0]
+        return float(t[hit[0]]) if hit.size else float("inf")

@@ -1,0 +1,75 @@
+"""Staleness-aware gossip mixing — the jit/scan half of the async engine.
+
+Under asynchronous execution a node mixes whatever neighbor reference
+points have actually ARRIVED, not the current ones.  Because reference
+points evolve by cumulative residual updates, "the copy of j that i holds"
+is simply j's reference at an earlier version; the engine therefore carries
+a rolling HISTORY of the node-stacked reference pytree (leading axis =
+version age) and gates the mixing matrix with a per-edge integer age.
+
+The delayed operator implemented here is the *pairwise-version* form
+
+    mix_i = sum_j w_ij ( h[a_ij, j] - h[a_ij, i] )
+
+where ``a_ij`` is the age of edge (i, j)'s newest COMMONLY-held version
+(symmetric: a_ij == a_ji, realized in a deployment by sequence-numbered
+acks).  Node i subtracts its OWN value at that same version — it keeps its
+full local history, so this costs no communication.  The symmetry is what
+preserves the paper's mean-dynamics invariant (Eq. 7) exactly: for every
+unordered pair the two terms cancel in the node average, so
+
+    d_bar^{k+1} = d_bar^k - eta * s_bar^k
+
+holds under ANY symmetric delay pattern, exactly as in the synchronous
+protocol (property-tested in tests/test_async_invariants.py).  With all
+ages zero the operator reduces to ``mix_delta_dense`` on the current
+references.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Pytree
+
+
+def init_history(tree: Pytree, depth: int) -> Pytree:
+    """(depth, m, ...) history with every slot holding the current version.
+
+    Slot 0 is the newest version; at local step k slot ``a`` holds version
+    ``k - a`` (clamped at the round's initial version, which is what every
+    slot starts as — correct because age <= step by construction).
+    """
+    return jax.tree.map(
+        lambda v: jnp.broadcast_to(v[None], (depth,) + v.shape).copy(), tree
+    )
+
+
+def push_history(hist: Pytree, new: Pytree) -> Pytree:
+    """Shift the history one version: slot 0 becomes ``new``."""
+    return jax.tree.map(
+        lambda h, n: jnp.concatenate([n[None], h[:-1]], axis=0), hist, new
+    )
+
+
+def mix_delta_delayed(W: jax.Array, hist: Pytree, ages: jax.Array) -> Pytree:
+    """sum_j w_ij (h[a_ij, j] - h[a_ij, i]) for a history pytree.
+
+    ``ages`` is an (m, m) int array of per-edge version ages, symmetric and
+    < history depth; entries on non-edges (w_ij = 0) and the diagonal are
+    ignored by the weighting.  Arithmetic in f32, emitted at the leaf dtype
+    (same contract as ``mix_delta_dense``).
+    """
+    m = ages.shape[0]
+    rows = jnp.arange(m)[:, None]
+    cols = jnp.arange(m)[None, :]
+
+    def leaf(h):
+        flat = h.reshape(h.shape[0], m, -1).astype(jnp.float32)
+        theirs = flat[ages, cols]  # (m, m, d): h[a_ij, j]
+        mine = flat[ages, rows]    # (m, m, d): h[a_ij, i]
+        out = jnp.einsum("ij,ijd->id", W.astype(jnp.float32), theirs - mine)
+        return out.reshape(h.shape[1:]).astype(h.dtype)
+
+    return jax.tree.map(leaf, hist)

@@ -1,0 +1,306 @@
+"""Event-driven asynchronous scheduler over a `repro.net` fabric.
+
+Where `NetworkFabric.simulate_round` prices barrier-synchronized phases
+(every node waits for every message, so one straggler stalls the world),
+the ``AsyncScheduler`` executes a K-step gossip loop as a per-node event
+timeline: each node keeps its own clock, transmits one packet per neighbor
+per step (d- and s-residuals ride together), and its *mixing matrix is
+gated on which neighbor reference points have actually arrived*.
+
+Per node i, local step k:
+
+    gate      policy-dependent wait (see below)
+    mix       at t_mix = gate time, using the newest version commonly held
+              with each neighbor (symmetric ages -> Eq. 7 preserved)
+    compute   straggler-scaled local gradient work
+    transmit  version-(k+1) packet to every neighbor; NIC egress
+              serialization + the fabric's per-message arrival query
+              (transfer + propagation + jitter) price the flight
+
+Policies:
+
+* ``sync``    — global barrier per step: every node's step k starts only
+                when all version-k packets have landed everywhere.  Same
+                math as the synchronous algorithm (all ages zero); this is
+                the reference timing the async modes are compared against.
+* ``bounded`` — node i may start step k once it holds version >= k - S from
+                every neighbor (S = ``bound``).  Ages never exceed S.
+* ``full``    — never wait: mix whatever has arrived (age capped only by
+                the step index; version 0 is always held).
+
+All dependencies point to strictly earlier versions, so a step-ordered
+dynamic program yields the exact event-driven fixpoint.  Randomness
+(stragglers, jitter) comes from the fabric's per-(seed, round) RNG on a
+dedicated stream, so timelines are reproducible event-for-event and do not
+perturb the fabric's own barrier pricing.
+
+A modeling caveat on the AGES: the "newest commonly-held version" of an
+edge compares i's receipts at i's mix time with j's receipts at j's (same
+local step, possibly later wall-clock) mix time — a simulator idealization
+of sequence-numbered acks that a real protocol can only approach from
+below (it would need extra, here-unpriced coordination to agree that
+precisely).  The timing itself stays sound for the bounded policy: the
+gate guarantees version k - S is causally held by BOTH endpoints before
+either mixes step k, so a deployment that deterministically mixes version
+k - S needs no acks and sees exactly the gated wait times; the common-
+version ages then only grant it fresher data than that worst case.  See
+the ROADMAP's "causally-priced version agreement" follow-up.
+
+The round boundary DRAINS the wire: the outer barrier waits for every
+in-flight residual, so the next round's version-0 reference points are
+globally consistent — which is why per-round age arrays satisfy
+``age[k] <= k`` and histories can restart each round.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.net.fabric import NetworkFabric
+from repro.net.trace import StepEvent, TransferEvent
+
+POLICIES = ("sync", "bounded", "full")
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncTimeline:
+    """One K-step loop's simulated execution.
+
+    ages        (K, m, m) int32 — per-step per-edge version age used by the
+                mixing (symmetric; 0 on non-edges and the diagonal)
+    mix_s       (K, m) absolute sim time of each node's step-k mix
+    finish_s    (K, m) absolute compute-finish times
+    end_s       when the loop (incl. in-flight packets) has fully drained
+    wire_bytes  total bytes put on all links (per-link accounting)
+    """
+
+    ages: np.ndarray
+    mix_s: np.ndarray
+    finish_s: np.ndarray
+    end_s: float
+    wire_bytes: int
+
+    @property
+    def max_age(self) -> int:
+        return int(self.ages.max()) if self.ages.size else 0
+
+
+class AsyncScheduler:
+    """Drives non-barrier gossip loops on a fabric, with per-node clocks
+    persisting across loops and rounds (so a straggler's lag carries over
+    until a barrier catches it up)."""
+
+    def __init__(
+        self,
+        fabric: NetworkFabric,
+        policy: str = "bounded",
+        bound: int = 2,
+    ) -> None:
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; have {POLICIES}")
+        if policy == "bounded" and bound < 0:
+            raise ValueError("staleness bound must be >= 0")
+        self.fabric = fabric
+        self.policy = policy
+        self.bound = bound
+        m = fabric.topo.m
+        self.clock = np.zeros(m)        # per-node absolute clocks
+        self.egress_free = np.zeros(m)  # per-node NIC availability
+        self._mult_round: int | None = None
+        self._mult: np.ndarray | None = None
+        self._rng = None
+
+    # ------------------------------------------------------------------
+    def _round_state(self, round_idx: int):
+        """Per-round straggler multipliers + jitter RNG (stream-separated
+        from the fabric's own barrier draws)."""
+        if self._mult_round != round_idx:
+            self._rng = self.fabric.round_rng(round_idx, stream=0xA5)
+            self._mult = self.fabric.straggler.sample(
+                self._rng, self.fabric.topo.m
+            )
+            self._mult_round = round_idx
+        return self._mult, self._rng
+
+    def reset(self) -> None:
+        self.clock[:] = 0.0
+        self.egress_free[:] = 0.0
+        self._mult_round = None
+
+    @property
+    def history_depth(self) -> int:
+        """History slots the jit side must carry for a K-step loop: the
+        +1 covers age 0 (the current version)."""
+        return 1 if self.policy == "sync" else self.bound + 1
+
+    def depth_for(self, K: int) -> int:
+        if self.policy == "full":
+            return max(1, K)
+        return min(self.history_depth, max(1, K))
+
+    # ------------------------------------------------------------------
+    def run_loop(
+        self,
+        K: int,
+        node_bytes,
+        round_idx: int,
+        compute_s_step: float = 0.0,
+        loop: str = "loop",
+        trace: bool = True,
+    ) -> AsyncTimeline:
+        """Execute K gossip steps; ``node_bytes`` is the per-node packet
+        size (int or length-m sequence) — each node sends that many bytes
+        to each neighbor each step."""
+        topo = self.fabric.topo
+        m = topo.m
+        neighbors = topo.neighbors
+        mult, rng = self._round_state(round_idx)
+        if np.isscalar(node_bytes):
+            node_bytes = np.full(m, int(node_bytes))
+        else:
+            node_bytes = np.asarray(node_bytes, dtype=np.int64)
+        S = 0 if self.policy == "sync" else self.bound
+
+        # arrive[v-1, j, i]: absolute arrival at i of j's version-v packet
+        arrive = np.full((K, m, m), np.inf)
+        mix_t = np.zeros((K, m))
+        finish_t = np.zeros((K, m))
+        ages = np.zeros((K, m, m), dtype=np.int32)
+        total_bytes = 0
+        tr = self.fabric.trace if trace else None
+
+        for k in range(K):
+            # ---- gate + mix time ------------------------------------------
+            if self.policy == "sync":
+                # global barrier: all clocks and all version-k arrivals
+                t = float(self.clock.max())
+                if k >= 1:
+                    for i in range(m):
+                        for j in neighbors[i]:
+                            t = max(t, arrive[k - 1, j, i])
+                mix_t[k, :] = t
+            else:
+                for i in range(m):
+                    t = self.clock[i]
+                    if self.policy == "bounded":
+                        need = k - S  # oldest version i may mix at step k
+                        if need >= 1:
+                            for j in neighbors[i]:
+                                t = max(t, arrive[need - 1, j, i])
+                    mix_t[k, i] = t
+
+            # ---- compute + transmit ---------------------------------------
+            for i in range(m):
+                dur = compute_s_step * mult[i]
+                finish_t[k, i] = mix_t[k, i] + dur
+                self.clock[i] = finish_t[k, i]
+                if tr is not None:
+                    tr.add_step(
+                        StepEvent(
+                            round=round_idx, loop=loop, step=k, node=i,
+                            t_start=mix_t[k, i], t_end=finish_t[k, i],
+                        )
+                    )
+            for i in range(m):
+                for j in neighbors[i]:
+                    nbytes = int(node_bytes[i])
+                    depart = max(self.egress_free[i], finish_t[k, i])
+                    self.egress_free[i] = depart + self.fabric.egress_s(nbytes)
+                    arrive[k, i, j] = self.fabric.message_arrival(
+                        depart, nbytes, rng
+                    )
+                    total_bytes += nbytes
+                    if tr is not None:
+                        tr.add_transfer(
+                            TransferEvent(
+                                round=round_idx, phase=k, src=i, dst=j,
+                                bytes=nbytes, t_start=depart,
+                                t_end=arrive[k, i, j],
+                            )
+                        )
+
+        # ---- per-edge version ages (symmetric -> Eq. 7 preserved) ---------
+        # held[k, j, i] = newest version from j that i holds at its step-k
+        # mix; the edge mixes on the newest COMMON version min(held both
+        # ways, k), as with sequence-numbered acks.
+        for k in range(K):
+            for i in range(m):
+                for j in neighbors[i]:
+                    if j < i:
+                        continue  # fill symmetric pairs once
+                    held_i = 0
+                    for v in range(min(k, K), 0, -1):
+                        if arrive[v - 1, j, i] <= mix_t[k, i]:
+                            held_i = v
+                            break
+                    held_j = 0
+                    for v in range(min(k, K), 0, -1):
+                        if arrive[v - 1, i, j] <= mix_t[k, j]:
+                            held_j = v
+                            break
+                    common = min(held_i, held_j, k)
+                    ages[k, i, j] = ages[k, j, i] = k - common
+
+        # ---- drain: the loop is over when every packet has landed ---------
+        end = float(self.clock.max()) if m else 0.0
+        for i in range(m):
+            for j in neighbors[i]:
+                end = max(end, float(arrive[:, i, j].max(initial=end)))
+        return AsyncTimeline(
+            ages=ages, mix_s=mix_t, finish_s=finish_t, end_s=end,
+            wire_bytes=total_bytes,
+        )
+
+    # ------------------------------------------------------------------
+    def barrier_phase(
+        self,
+        node_bytes,
+        round_idx: int,
+        compute_s: float = 0.0,
+        label: str = "outer",
+    ) -> float:
+        """One barrier-synchronized dense exchange (the outer x / s_x
+        broadcasts stay synchronous — Algorithm 1's round boundary).  All
+        clocks join at the phase end; returns the phase end time."""
+        topo = self.fabric.topo
+        m = topo.m
+        mult, rng = self._round_state(round_idx)
+        if np.isscalar(node_bytes):
+            node_bytes = np.full(m, int(node_bytes))
+        tr = self.fabric.trace
+        end = 0.0
+        for i in range(m):
+            ready = self.clock[i] + compute_s * mult[i]
+            if tr is not None:
+                tr.add_step(
+                    StepEvent(
+                        round=round_idx, loop=label, step=0, node=i,
+                        t_start=self.clock[i], t_end=ready,
+                    )
+                )
+            self.clock[i] = ready
+            end = max(end, ready)
+        for i in range(m):
+            for j in topo.neighbors[i]:
+                nbytes = int(node_bytes[i])
+                depart = max(self.egress_free[i], self.clock[i])
+                self.egress_free[i] = depart + self.fabric.egress_s(nbytes)
+                t_arr = self.fabric.message_arrival(depart, nbytes, rng)
+                end = max(end, t_arr)
+                if tr is not None:
+                    tr.add_transfer(
+                        TransferEvent(
+                            round=round_idx, phase=-1, src=i, dst=j,
+                            bytes=nbytes, t_start=depart, t_end=t_arr,
+                        )
+                    )
+        self.clock[:] = end
+        self.egress_free = np.maximum(self.egress_free, end)
+        return end
+
+    def drain(self, end_s: float) -> None:
+        """Join all clocks at ``end_s`` (round boundary barrier)."""
+        self.clock[:] = np.maximum(self.clock, end_s).max()
+        self.egress_free = np.maximum(self.egress_free, self.clock.max())

@@ -80,29 +80,40 @@ def mdbo_init(x0: Pytree, y0: Pytree) -> MDBOState:
     return MDBOState(x=x0, y=y0, t=jnp.array(0))
 
 
-def mdbo_round(
+def value_gossip_scan(value, W: jax.Array, gamma, K: int, update):
+    """K steps of  v <- update(v + gamma * mix(v), v_pre)  — the shape of
+    every baseline gossip loop (MDBO/MADSBO lower level, HIGP subsolver).
+    ``update(mixed, pre)`` applies the local gradient computed at the
+    PRE-mix iterate (the baselines' update order).  The async engine swaps
+    this for its staleness-gated twin (`delayed_value_scan`)."""
+
+    def body(v, _):
+        return update(mix_step_dense(W, gamma, v), v), None
+
+    value, _ = jax.lax.scan(body, value, None, length=K)
+    return value
+
+
+def _mdbo_round_core(
     state: MDBOState,
     problem: BilevelProblem,
-    topo: Topology,
     cfg: MDBOConfig,
-    W: jax.Array | None = None,
-    fabric=None,
-    round_idx: int = 0,
+    W: jax.Array,
+    ll_fn,
 ) -> tuple[MDBOState, dict]:
-    W_override = W
-    W = jnp.asarray(topo.W if W is None else W, jnp.float32)
+    """Shared MDBO round body; ``ll_fn(y0, update)`` runs the LL gossip
+    loop (synchronous scan or the async engine's age-gated scan)."""
     x, y = state.x, state.y
 
     # LL: K gossip + gradient steps on y
     grad_g_y = jax.vmap(jax.grad(problem.g, argnums=1))
-
-    def ll_body(y_, _):
-        gy = grad_g_y(x, y_, problem.data_g)
-        y_ = mix_step_dense(W, cfg.gamma, y_)
-        y_ = jax.tree.map(lambda v, g_: v - cfg.eta_y * g_, y_, gy)
-        return y_, None
-
-    y, _ = jax.lax.scan(ll_body, y, None, length=cfg.K)
+    y = ll_fn(
+        y,
+        lambda mixed, pre: jax.tree.map(
+            lambda v, g_: v - cfg.eta_y * g_,
+            mixed, grad_g_y(x, pre, problem.data_g),
+        ),
+    )
 
     # Hypergradient via truncated Neumann series:
     #   v approx [d2yy g]^{-1} grad_y f ;  v_{n+1} = v_n - eta*(H v_n) + eta*grad_y f
@@ -137,7 +148,24 @@ def mdbo_round(
         "hypergrad_norm": jnp.sqrt(tree_sq_norm(node_mean(hyper))),
         "x_consensus_err": consensus_error(x),
     }
-    new_state = MDBOState(x=x, y=y, t=state.t + 1)
+    return MDBOState(x=x, y=y, t=state.t + 1), metrics
+
+
+def mdbo_round(
+    state: MDBOState,
+    problem: BilevelProblem,
+    topo: Topology,
+    cfg: MDBOConfig,
+    W: jax.Array | None = None,
+    fabric=None,
+    round_idx: int = 0,
+) -> tuple[MDBOState, dict]:
+    W_override = W
+    W = jnp.asarray(topo.W if W is None else W, jnp.float32)
+    new_state, metrics = _mdbo_round_core(
+        state, problem, cfg, W,
+        lambda y0, upd: value_gossip_scan(y0, W, cfg.gamma, cfg.K, upd),
+    )
     if fabric is not None:
         from repro.net.fabric import edges_from_weights, mask_phases
 
@@ -211,43 +239,39 @@ def madsbo_init(problem: BilevelProblem, x0: Pytree, y0: Pytree) -> MADSBOState:
     return MADSBOState(x=x0, y=y0, v=v0, u=u0, t=jnp.array(0))
 
 
-def madsbo_round(
+def _madsbo_round_core(
     state: MADSBOState,
     problem: BilevelProblem,
-    topo: Topology,
     cfg: MADSBOConfig,
-    W: jax.Array | None = None,
-    fabric=None,
-    round_idx: int = 0,
+    W: jax.Array,
+    ll_fn,
+    higp_fn,
 ) -> tuple[MADSBOState, dict]:
-    W_override = W
-    W = jnp.asarray(topo.W if W is None else W, jnp.float32)
+    """Shared MADSBO round body; ``ll_fn`` / ``higp_fn`` run the two gossip
+    loops (synchronous scans or the async engine's age-gated scans)."""
     x, y, v, u = state.x, state.y, state.v, state.u
 
     grad_g_y = jax.vmap(jax.grad(problem.g, argnums=1))
-
-    def ll_body(y_, _):
-        gy = grad_g_y(x, y_, problem.data_g)
-        y_ = mix_step_dense(W, cfg.gamma, y_)
-        y_ = jax.tree.map(lambda a, b: a - cfg.eta_y * b, y_, gy)
-        return y_, None
-
-    y, _ = jax.lax.scan(ll_body, y, None, length=cfg.K)
+    y = ll_fn(
+        y,
+        lambda mixed, pre: jax.tree.map(
+            lambda a, b: a - cfg.eta_y * b,
+            mixed, grad_g_y(x, pre, problem.data_g),
+        ),
+    )
 
     # HIGP: min_v 0.5 v^T H v - v^T grad_y f  solved by Q gossip-GD steps
     grad_f_y = jax.vmap(jax.grad(problem.f, argnums=1))(x, y, problem.data_f)
 
-    def higp_body(v_, _):
+    def higp_update(mixed, pre):
         hv = jax.vmap(lambda xi, yi, vi, dg: _hvp_yy(problem.g, xi, yi, vi, dg))(
-            x, y, v_, problem.data_g
+            x, y, pre, problem.data_g
         )
-        v_ = mix_step_dense(W, cfg.gamma, v_)
-        v_ = jax.tree.map(
-            lambda vn, hvn, b: vn - cfg.eta_v * (hvn - b), v_, hv, grad_f_y
+        return jax.tree.map(
+            lambda vn, hvn, b: vn - cfg.eta_v * (hvn - b), mixed, hv, grad_f_y
         )
-        return v_, None
 
-    v, _ = jax.lax.scan(higp_body, v, None, length=cfg.Q)
+    v = higp_fn(v, higp_update)
 
     cross = jax.vmap(lambda xi, yi, vi, dg: _jvp_xy(problem.g, xi, yi, vi, dg))(
         x, y, v, problem.data_g
@@ -264,7 +288,25 @@ def madsbo_round(
         "hypergrad_norm": jnp.sqrt(tree_sq_norm(node_mean(u))),
         "x_consensus_err": consensus_error(x),
     }
-    new_state = MADSBOState(x=x, y=y, v=v, u=u, t=state.t + 1)
+    return MADSBOState(x=x, y=y, v=v, u=u, t=state.t + 1), metrics
+
+
+def madsbo_round(
+    state: MADSBOState,
+    problem: BilevelProblem,
+    topo: Topology,
+    cfg: MADSBOConfig,
+    W: jax.Array | None = None,
+    fabric=None,
+    round_idx: int = 0,
+) -> tuple[MADSBOState, dict]:
+    W_override = W
+    W = jnp.asarray(topo.W if W is None else W, jnp.float32)
+    new_state, metrics = _madsbo_round_core(
+        state, problem, cfg, W,
+        lambda y0, upd: value_gossip_scan(y0, W, cfg.gamma, cfg.K, upd),
+        lambda v0, upd: value_gossip_scan(v0, W, cfg.gamma, cfg.Q, upd),
+    )
     if fabric is not None:
         from repro.net.fabric import edges_from_weights, mask_phases
 
@@ -294,6 +336,69 @@ def madsbo_round_phases(
     sizes += [(dy, f"higp{q}/v") for q in range(cfg.Q)]
     sizes += [(dx, "ul/x")]
     return _dense_phases(topo, sizes)
+
+
+# ---------------------------------------------------------------------------
+# async (staleness-gated) baseline rounds — driven by
+# repro.async_gossip.engine.run_baseline_async
+# ---------------------------------------------------------------------------
+
+
+def madsbo_round_async(
+    state: MADSBOState,
+    problem: BilevelProblem,
+    topo: Topology,
+    cfg: MADSBOConfig,
+    ages_ll: jax.Array,
+    ages_higp: jax.Array,
+    depth: int,
+    delayed: bool = True,
+) -> tuple[MADSBOState, dict]:
+    """MADSBO round accepting the AsyncScheduler's per-step edge ages: the
+    LL and HIGP gossip loops mix age-gated VERSIONS of the transmitted
+    iterates (dense value gossip — no reference points); everything else is
+    the shared `_madsbo_round_core`.  With ``delayed=False`` the
+    synchronous scans are used, so zero-age rounds are bit-identical to
+    ``madsbo_round``."""
+    from repro.async_gossip.engine import delayed_value_scan
+
+    W = jnp.asarray(topo.W, jnp.float32)
+    if delayed:
+        ll_fn = lambda y0, upd: delayed_value_scan(
+            y0, W, cfg.gamma, ages_ll, depth, upd
+        )
+        higp_fn = lambda v0, upd: delayed_value_scan(
+            v0, W, cfg.gamma, ages_higp, depth, upd
+        )
+    else:
+        ll_fn = lambda y0, upd: value_gossip_scan(y0, W, cfg.gamma, cfg.K, upd)
+        higp_fn = lambda v0, upd: value_gossip_scan(v0, W, cfg.gamma, cfg.Q, upd)
+    return _madsbo_round_core(state, problem, cfg, W, ll_fn, higp_fn)
+
+
+def mdbo_round_async(
+    state: MDBOState,
+    problem: BilevelProblem,
+    topo: Topology,
+    cfg: MDBOConfig,
+    ages_ll: jax.Array,
+    depth: int,
+    delayed: bool = True,
+) -> tuple[MDBOState, dict]:
+    """MDBO round with a staleness-gated LL gossip loop; the Neumann series
+    is local compute (no gossip in this realization) and the UL update
+    stays at the barrier round boundary — both live in the shared
+    `_mdbo_round_core`."""
+    from repro.async_gossip.engine import delayed_value_scan
+
+    W = jnp.asarray(topo.W, jnp.float32)
+    if delayed:
+        ll_fn = lambda y0, upd: delayed_value_scan(
+            y0, W, cfg.gamma, ages_ll, depth, upd
+        )
+    else:
+        ll_fn = lambda y0, upd: value_gossip_scan(y0, W, cfg.gamma, cfg.K, upd)
+    return _mdbo_round_core(state, problem, cfg, W, ll_fn)
 
 
 # ---------------------------------------------------------------------------

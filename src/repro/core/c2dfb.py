@@ -97,24 +97,19 @@ def init_state(
     )
 
 
-def c2dfb_round(
+def c2dfb_round_core(
     state: C2DFBState,
     key: jax.Array,
     problem: BilevelProblem,
-    topo: Topology,
+    W: jax.Array,
     cfg: C2DFBConfig,
-    W: jax.Array | None = None,
-    fabric=None,
-    round_idx: int = 0,
+    inner_fn,
 ) -> tuple[C2DFBState, dict]:
-    """One outer round.  ``W`` overrides the static mixing matrix (used by
-    `repro.net.dynamic` schedules — pass the round's matrix, possibly a
-    traced scan input).  ``fabric`` (a `repro.net.fabric.NetworkFabric`,
-    eager mode only) adds codec-measured ``wire_bytes`` and simulated
-    ``sim_seconds`` to the round metrics."""
-    W_override = W
-    W = jnp.asarray(topo.W if W is None else W, dtype=jnp.float32)
-    compressor = cfg.make_compressor()
+    """Shared outer-round body (Algorithm 1).  ``inner_fn(inner_state, key,
+    grad_fn, eta, tag)`` runs one K-step inner loop and returns
+    ``(state, metrics)`` — the synchronous path plugs in `inner_loop`, the
+    async engine (`repro.async_gossip`) a staleness-gated runner keyed by
+    ``tag`` ("y" / "z")."""
     ky, kz = jax.random.split(key)
 
     # ---- outer model update (uncompressed gossip + tracked descent) -------
@@ -134,12 +129,8 @@ def c2dfb_round(
 
     inner_y = refresh_tracker(state.inner_y, gy)
     inner_z = refresh_tracker(state.inner_z, gz)
-    inner_y, my = inner_loop(
-        inner_y, ky, gy, W, compressor, cfg.gamma_in, cfg.eta_in_y, cfg.K
-    )
-    inner_z, mz = inner_loop(
-        inner_z, kz, gz, W, compressor, cfg.gamma_in, cfg.eta_in, cfg.K
-    )
+    inner_y, my = inner_fn(inner_y, ky, gy, cfg.eta_in_y, "y")
+    inner_z, mz = inner_fn(inner_z, kz, gz, cfg.eta_in, "z")
 
     # ---- hypergradient + tracker update ------------------------------------
     u_new = problem.hyper_grad(x_new, inner_y.d, inner_z.d, cfg.lam)
@@ -160,6 +151,11 @@ def c2dfb_round(
         inner_z=inner_z,
         t=state.t + 1,
     )
+    # exact per-round wire bytes, counted inside the scan (broadcast
+    # accounting: outer x + s_x dense f32 once per node, inner messages
+    # metered by the jit nnz/byte counter on the actual payloads)
+    m = W.shape[0]
+    outer_bytes = 2 * tree_count(state.x) * 4 * m
     metrics = {
         "hypergrad_norm": jnp.sqrt(tree_sq_norm(node_mean(u_new))),
         "x_consensus_err": consensus_error(x_new),
@@ -167,7 +163,36 @@ def c2dfb_round(
         "y_consensus_err": my["consensus_err"],
         "y_compress_err": my["compress_err"],
         "z_consensus_err": mz["consensus_err"],
+        "measured_bytes": my["msg_bytes"] + mz["msg_bytes"] + outer_bytes,
     }
+    return new_state, metrics
+
+
+def c2dfb_round(
+    state: C2DFBState,
+    key: jax.Array,
+    problem: BilevelProblem,
+    topo: Topology,
+    cfg: C2DFBConfig,
+    W: jax.Array | None = None,
+    fabric=None,
+    round_idx: int = 0,
+) -> tuple[C2DFBState, dict]:
+    """One outer round.  ``W`` overrides the static mixing matrix (used by
+    `repro.net.dynamic` schedules — pass the round's matrix, possibly a
+    traced scan input).  ``fabric`` (a `repro.net.fabric.NetworkFabric`,
+    eager mode only) adds codec-measured ``wire_bytes`` and simulated
+    ``sim_seconds`` to the round metrics."""
+    W_override = W
+    W = jnp.asarray(topo.W if W is None else W, dtype=jnp.float32)
+    compressor = cfg.make_compressor()
+
+    def inner_fn(st, k, grad_fn, eta, tag):
+        return inner_loop(
+            st, k, grad_fn, W, compressor, cfg.gamma_in, eta, cfg.K
+        )
+
+    new_state, metrics = c2dfb_round_core(state, key, problem, W, cfg, inner_fn)
     if fabric is not None:
         from repro.net.fabric import edges_from_weights, mask_phases
 
@@ -258,6 +283,9 @@ def run(
     jit: bool = True,
     schedule=None,
     fabric=None,
+    async_mode: str | None = None,
+    staleness_bound: int = 2,
+    ledger=None,
 ) -> tuple[C2DFBState, dict]:
     """Run T outer rounds under lax.scan; returns final state + stacked metrics.
 
@@ -268,7 +296,28 @@ def run(
     timeline: metrics gain ``sim_seconds`` and ``wire_bytes`` arrays of
     length T (payload sizes codec-measured on the final state's residuals,
     representative of steady state; the fabric's stragglers/jitter still
-    vary per round)."""
+    vary per round).  Metrics always carry ``measured_bytes`` — the exact
+    per-round byte curve counted inside the scan.
+
+    ``async_mode`` switches to the event-driven asynchronous engine
+    (`repro.async_gossip`): "sync" (per-step global barriers, the reference
+    timing), "bounded" (nodes run ahead up to ``staleness_bound`` inner
+    steps), or "full" (never wait; mix whatever reference points have
+    arrived).  Requires ``fabric``; ``ledger`` (a
+    `repro.async_gossip.StalenessLedger`) records per-edge staleness."""
+    if async_mode is not None:
+        from repro.async_gossip.engine import run_async
+
+        if fabric is None:
+            raise ValueError("async_mode requires a NetworkFabric")
+        if schedule is not None:
+            raise ValueError(
+                "async_mode does not compose with topology schedules yet"
+            )
+        return run_async(
+            problem, topo, cfg, x0, y0, T, key, fabric,
+            policy=async_mode, bound=staleness_bound, ledger=ledger,
+        )
     state = init_state(problem, cfg, x0, y0)
 
     def body(st, inputs):

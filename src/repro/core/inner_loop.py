@@ -74,31 +74,50 @@ def refresh_tracker(state: InnerState, grad_fn) -> InnerState:
     return state._replace(s=s, g_prev=g_new)
 
 
-def inner_step(
+def inner_transmit(
+    compressor: Compressor, key: jax.Array, value: Pytree, ref: Pytree
+) -> Pytree:
+    """The transmit half of a step: the compressed residual ``Q(value - ref)``.
+
+    This IS the per-edge message payload — every neighbor receives the same
+    residual and applies it to its copy of the sender's reference point.
+    """
+    resid = jax.tree.map(jnp.subtract, value, ref)
+    return compress_stacked(compressor, key, resid)
+
+
+def inner_apply(
     state: InnerState,
     key: jax.Array,
     grad_fn: Callable[[Pytree], Pytree],
-    W: jax.Array,
     compressor: Compressor,
     gamma: float,
     eta: float,
-) -> InnerState:
+    mix_d: Pytree,
+    mix_s: Pytree,
+) -> tuple[InnerState, tuple[Pytree, Pytree]]:
+    """One inner step with the MIXING DELTAS supplied by the caller.
+
+    This is the mix/transmit split: the synchronous path feeds
+    ``mix_delta_dense`` of the current references, the async engine
+    (`repro.async_gossip`) feeds staleness-gated deltas built from reference
+    histories and per-edge arrival times.  Also returns the two transmitted
+    messages ``(q_d, q_s)`` so callers can meter exact per-message bytes
+    inside the scan (`repro.net.wire.scan_tree_bytes`).
+    """
     kd, ks = jax.random.split(key)
 
     # (1) model update: mix on REFERENCES, descend along tracker
-    mix_d = mix_delta_dense(W, state.d_hat)
     d_new = jax.tree.map(
         lambda d, md, s: d + gamma * md - eta * s, state.d, mix_d, state.s
     )
 
     # (2) reference update via compressed residual (this is the transmission)
-    resid_d = jax.tree.map(jnp.subtract, d_new, state.d_hat)
-    q_d = compress_stacked(compressor, kd, resid_d)
+    q_d = inner_transmit(compressor, kd, d_new, state.d_hat)
     d_hat_new = jax.tree.map(jnp.add, state.d_hat, q_d)
 
     # (3) tracker update: mix on tracker references + gradient delta
     g_new = grad_fn(d_new)
-    mix_s = mix_delta_dense(W, state.s_hat)
     s_new = jax.tree.map(
         lambda s, ms, gn, gp: s + gamma * ms + gn - gp,
         state.s,
@@ -108,11 +127,31 @@ def inner_step(
     )
 
     # (4) tracker reference update via compressed residual
-    resid_s = jax.tree.map(jnp.subtract, s_new, state.s_hat)
-    q_s = compress_stacked(compressor, ks, resid_s)
+    q_s = inner_transmit(compressor, ks, s_new, state.s_hat)
     s_hat_new = jax.tree.map(jnp.add, state.s_hat, q_s)
 
-    return InnerState(d=d_new, d_hat=d_hat_new, s=s_new, s_hat=s_hat_new, g_prev=g_new)
+    new_state = InnerState(
+        d=d_new, d_hat=d_hat_new, s=s_new, s_hat=s_hat_new, g_prev=g_new
+    )
+    return new_state, (q_d, q_s)
+
+
+def inner_step(
+    state: InnerState,
+    key: jax.Array,
+    grad_fn: Callable[[Pytree], Pytree],
+    W: jax.Array,
+    compressor: Compressor,
+    gamma: float,
+    eta: float,
+) -> InnerState:
+    """Synchronous step: mix on the current references, then apply."""
+    mix_d = mix_delta_dense(W, state.d_hat)
+    mix_s = mix_delta_dense(W, state.s_hat)
+    new_state, _ = inner_apply(
+        state, key, grad_fn, compressor, gamma, eta, mix_d, mix_s
+    )
+    return new_state
 
 
 def inner_loop(
@@ -129,23 +168,41 @@ def inner_loop(
 ) -> tuple[InnerState, dict]:
     """Run K compressed-GT steps via lax.scan; returns final state + metrics.
 
+    Metrics always include ``msg_bytes`` — the exact wire bytes this loop's
+    K x 2 messages put on the network (per-node broadcast accounting),
+    counted INSIDE the scan by `repro.net.wire.scan_tree_bytes` (a jit
+    nnz/byte counter), not a host-side steady-state estimate.
+
+    `repro.async_gossip.engine.async_inner_loop` mirrors this scan body
+    with a staleness-gated mix and a history carry — keep the two bodies
+    and their metrics keys in lockstep.
+
     With a ``repro.net.fabric.NetworkFabric`` (eager mode only — the fabric
     is host-side numpy), metrics additionally carry ``wire_bytes`` (exact
     integer, codec-measured on this loop's residuals) and ``sim_seconds``
     (the simulated wall clock of the K barrier phases x 2 messages)."""
+    from repro.net.wire import scan_tree_bytes
 
     def body(st, k):
-        st = inner_step(st, k, grad_fn, W, compressor, gamma, eta)
-        return st, None
+        mix_d = mix_delta_dense(W, st.d_hat)
+        mix_s = mix_delta_dense(W, st.s_hat)
+        st, (q_d, q_s) = inner_apply(
+            st, k, grad_fn, compressor, gamma, eta, mix_d, mix_s
+        )
+        nbytes = scan_tree_bytes(compressor, q_d) + scan_tree_bytes(
+            compressor, q_s
+        )
+        return st, nbytes
 
     keys = jax.random.split(key, K)
-    state, _ = jax.lax.scan(body, state, keys)
+    state, step_bytes = jax.lax.scan(body, state, keys)
     metrics = {
         "consensus_err": consensus_error(state.d),
         "compress_err": tree_sq_norm(
             jax.tree.map(jnp.subtract, state.d, state.d_hat)
         ),
         "tracker_consensus_err": consensus_error(state.s),
+        "msg_bytes": jnp.sum(step_bytes),
     }
     if fabric is not None:
         phases, labels = inner_round_phases(state, compressor, fabric.topo, key, K)

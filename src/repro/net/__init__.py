@@ -14,6 +14,7 @@ Models the wire end-to-end for the decentralized bilevel algorithms:
 
 from repro.net.dynamic import (
     BConnectedSchedule,
+    LatencyDropoutSchedule,
     LinkDropoutSchedule,
     RandomEdgeSchedule,
     StaticSchedule,
@@ -28,7 +29,7 @@ from repro.net.fabric import (
     edge_list,
     make_fabric,
 )
-from repro.net.trace import NetTrace, PhaseEvent, TransferEvent
+from repro.net.trace import NetTrace, PhaseEvent, StepEvent, TransferEvent
 from repro.net.wire import (
     BlockSparseCodec,
     DenseCodec,
@@ -38,12 +39,14 @@ from repro.net.wire import (
     codec_for,
     measure_compressed_tree_bytes,
     measure_tree_bytes,
+    scan_tree_bytes,
 )
 
 __all__ = [
     "BConnectedSchedule",
     "BlockSparseCodec",
     "DenseCodec",
+    "LatencyDropoutSchedule",
     "LinkDropoutSchedule",
     "LinkModel",
     "NetTrace",
@@ -54,6 +57,7 @@ __all__ = [
     "RandomEdgeSchedule",
     "SparseCodec",
     "StaticSchedule",
+    "StepEvent",
     "StragglerModel",
     "TopologySchedule",
     "TransferEvent",
@@ -64,4 +68,5 @@ __all__ = [
     "make_fabric",
     "measure_compressed_tree_bytes",
     "measure_tree_bytes",
+    "scan_tree_bytes",
 ]

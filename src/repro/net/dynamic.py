@@ -22,6 +22,7 @@ import networkx as nx
 import numpy as np
 
 from repro.core.topology import Topology, metropolis_weights
+from repro.net.fabric import NetworkFabric
 
 
 class TopologySchedule:
@@ -105,6 +106,46 @@ class RandomEdgeSchedule(TopologySchedule):
         G.add_nodes_from(range(self.base.m))
         G.add_edges_from(edges[k] for k in pick)
         return metropolis_weights(G, self.base.m)
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyDropoutSchedule(TopologySchedule):
+    """Fabric-aware schedule: an edge sits out a round when its SIMULATED
+    arrival time exceeds ``deadline_s`` — the link model *causes* the
+    topology dynamics instead of merely pricing them (the `dynamic`↔`fabric`
+    loop from the ROADMAP).
+
+    Per round t, each undirected base edge's one-way delivery time is priced
+    by the fabric's link model on a ``payload_bytes`` message —
+    transfer + propagation + a per-(seed, round, edge) jitter draw, exactly
+    the fabric's per-message arrival query.  Edges that would miss the
+    deadline are deactivated for the round; Metropolis weights on the
+    survivors keep every round a valid gossip operator.  Deterministic given
+    the fabric's seed (stream-separated from the fabric's own draws, so
+    pricing the resulting rounds does not perturb the schedule).
+    """
+
+    base: Topology
+    fabric: NetworkFabric = None
+    deadline_s: float = 0.05
+    payload_bytes: int = 4096
+
+    def __post_init__(self):
+        if self.fabric is None:
+            raise ValueError(
+                "LatencyDropoutSchedule needs the NetworkFabric whose link "
+                "model drives the dropout"
+            )
+
+    def weights(self, t: int) -> np.ndarray:
+        rng = self.fabric.round_rng(t, stream=0x1A7)
+        keep = nx.Graph()
+        keep.add_nodes_from(range(self.base.m))
+        for i, j in sorted(_graph_of(self.base).edges()):
+            arrive = self.fabric.message_arrival(0.0, self.payload_bytes, rng)
+            if arrive <= self.deadline_s:
+                keep.add_edge(i, j)
+        return metropolis_weights(keep, self.base.m)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -76,6 +76,10 @@ PROFILES: dict[str, LinkModel] = {
     "wan": LinkModel(latency_s=30e-3, bandwidth_Bps=12.5e6, jitter_s=2e-3),
     # intercontinental 20 Mbit/s, 120 ms one-way
     "geo": LinkModel(latency_s=120e-3, bandwidth_Bps=2.5e6, jitter_s=10e-3),
+    # ideal instantaneous fabric: every message lands the moment it departs.
+    # Under it an asynchronous run can never observe staleness, so the
+    # async engine must reproduce the synchronous trajectory (tested).
+    "zero": LinkModel(latency_s=0.0, bandwidth_Bps=float("inf")),
 }
 
 
@@ -147,8 +151,33 @@ class NetworkFabric:
         self._edges = edge_list(topo)
 
     # ------------------------------------------------------------------
-    def _round_rng(self, round_idx: int) -> np.random.Generator:
+    def round_rng(self, round_idx: int, stream: int = 0) -> np.random.Generator:
+        """Deterministic per-(seed, round[, stream]) RNG — the fabric's only
+        randomness source.  ``stream`` separates consumers (e.g. the async
+        scheduler) from the barrier simulation so neither perturbs the other."""
+        if stream:
+            return np.random.default_rng((self.seed, round_idx, stream))
         return np.random.default_rng((self.seed, round_idx))
+
+    _round_rng = round_rng
+
+    # -- per-message (non-barrier) queries ------------------------------
+    def egress_s(self, nbytes: int) -> float:
+        """Seconds a message of ``nbytes`` occupies the sender's NIC uplink."""
+        return self.link.transfer_s(nbytes)
+
+    def message_arrival(
+        self, depart_s: float, nbytes: int, rng: np.random.Generator
+    ) -> float:
+        """Absolute arrival time of ONE message put on a link at ``depart_s``.
+
+        This is the non-barrier query the async scheduler is built on: the
+        caller owns per-node clocks and NIC egress serialization (via
+        ``egress_s``); the fabric prices the flight — transfer + propagation
+        + jitter — exactly as ``simulate_phase`` does for barrier phases.
+        """
+        jitter = rng.random() * self.link.jitter_s if self.link.jitter_s else 0.0
+        return depart_s + self.link.transfer_s(nbytes) + self.link.latency_s + jitter
 
     def simulate_phase(
         self,

@@ -34,12 +34,30 @@ class PhaseEvent:
     t_end: float
 
 
+@dataclasses.dataclass(frozen=True)
+class StepEvent:
+    """One node's local compute slice in an ASYNC (non-barrier) execution:
+    node ``node`` ran step ``step`` of loop ``loop`` ("y", "z", "outer")
+    between its own gate time and its compute finish.  Emitted by
+    `repro.async_gossip.scheduler.AsyncScheduler`; in the Chrome export each
+    node gets its own lane, so staleness shows up visually as lanes drifting
+    apart."""
+
+    round: int
+    loop: str
+    step: int
+    node: int
+    t_start: float
+    t_end: float
+
+
 class NetTrace:
     """Append-only event log for one fabric simulation."""
 
     def __init__(self) -> None:
         self.transfers: list[TransferEvent] = []
         self.phases: list[PhaseEvent] = []
+        self.steps: list[StepEvent] = []
 
     def add_transfer(self, ev: TransferEvent) -> None:
         self.transfers.append(ev)
@@ -47,11 +65,15 @@ class NetTrace:
     def add_phase(self, ev: PhaseEvent) -> None:
         self.phases.append(ev)
 
+    def add_step(self, ev: StepEvent) -> None:
+        self.steps.append(ev)
+
     # -- exports ------------------------------------------------------------
     def to_json(self) -> dict[str, Any]:
         return {
             "transfers": [dataclasses.asdict(e) for e in self.transfers],
             "phases": [dataclasses.asdict(e) for e in self.phases],
+            "steps": [dataclasses.asdict(e) for e in self.steps],
         }
 
     def to_chrome_trace(self) -> list[dict[str, Any]]:
@@ -76,6 +98,17 @@ class NetTrace:
                     "ph": "X",
                     "pid": "phases",
                     "tid": e.phase,
+                    "ts": e.t_start * 1e6,
+                    "dur": (e.t_end - e.t_start) * 1e6,
+                }
+            )
+        for e in self.steps:
+            out.append(
+                {
+                    "name": f"r{e.round} {e.loop}{e.step}",
+                    "ph": "X",
+                    "pid": f"node{e.node}",
+                    "tid": e.loop,
                     "ts": e.t_start * 1e6,
                     "dur": (e.t_end - e.t_start) * 1e6,
                 }

@@ -283,3 +283,55 @@ def measure_compressed_tree_bytes(
 ) -> int:
     """Compress ``tree`` with ``compressor`` then measure the wire bytes."""
     return measure_tree_bytes(compressor, compressor.compress_tree(key, tree))
+
+
+# ---------------------------------------------------------------------------
+# jit-compatible byte counting (exact per-message bytes inside lax.scan)
+# ---------------------------------------------------------------------------
+
+
+def _is_sparse_format(compressor: C.Compressor) -> bool:
+    return isinstance(
+        compressor, (C.TopK, C.RandK, C.BlockTopK, C.KernelBlockTopK)
+    )
+
+
+def scan_tree_bytes(compressor: C.Compressor, tree: Pytree) -> jax.Array:
+    """Exact wire bytes of one node-stacked transmission, computed with jnp
+    ops so it can run INSIDE jit/lax.scan.
+
+    ``tree`` is the compressed payload (leading node axis m on every leaf);
+    the count is per-node *broadcast* accounting — each node's message
+    counted once — summed over nodes, matching
+    ``codec_for(compressor).tree_bytes`` applied per node slice (tested in
+    tests/test_async_gossip.py).  Sparse formats count the actual nonzeros
+    of the payload (an nnz counter, not the analytic k*d estimate); quant
+    and dense formats are shape-static.
+
+    Accumulates in int64 so multi-gigabyte rounds stay exact; with x64
+    disabled (the repo's test default) JAX lowers this to int32, which is
+    exact up to 2 GiB per transmission x K steps — enable
+    ``jax_enable_x64`` for LM-scale byte metering.
+    """
+    if isinstance(compressor, C.Rescaled):
+        return scan_tree_bytes(compressor.inner, tree)
+    acc_dtype = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+    total = jnp.asarray(0, acc_dtype)
+    for leaf in jax.tree.leaves(tree):
+        m = int(leaf.shape[0])
+        d = int(leaf.size // m)
+        if _is_sparse_format(compressor):
+            nnz = jnp.count_nonzero(leaf).astype(jnp.int32)
+            total = total + m * _HDR_S.size + 8 * nnz
+        elif isinstance(compressor, C.StochasticQuant):
+            total = total + m * (
+                _HDR_Q.size + 4 + -(-d * compressor.bits // 8)
+            )
+        elif isinstance(compressor, C.KernelQuant):
+            nb = -(-d // compressor.block)
+            total = total + m * (
+                _HDR_Q.size + 4 * nb + -(-d * compressor.bits // 8)
+            )
+        else:  # Identity / LowRank fallback: dense f32 reconstruction
+            total = total + m * (_HDR_D.size + 4 * d)
+    return total

@@ -1,0 +1,338 @@
+"""Async-execution invariants (ISSUE 2 acceptance criteria):
+
+* bounded-staleness runs never exceed their bound, end to end;
+* a fully-async run on a zero-latency fabric reproduces the synchronous
+  trajectory BIT-exactly;
+* the mean-dynamics invariant (Eq. 7) and the tracking invariant hold
+  under arbitrary symmetric delayed mixing;
+* under the geo profile with stragglers, bounded-stale C2DFB reaches the
+  synchronous run's final consensus error in strictly fewer simulated
+  seconds.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.async_gossip import (
+    StalenessLedger,
+    async_inner_loop,
+    run_async,
+)
+from repro.core.c2dfb import C2DFBConfig, run
+from repro.core.compression import StochasticQuant, TopK
+from repro.core.inner_loop import inner_init
+from repro.core.topology import ring, two_hop
+from repro.core.types import node_mean
+from repro.data.bilevel_tasks import coefficient_tuning_task
+from repro.net import make_fabric
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def bundle():
+    return coefficient_tuning_task(m=6, n=200, p=30, c=3, h=0.5, seed=0)
+
+
+def _sym_ages(rng, topo, K, S):
+    """Random symmetric, causal (age <= step) delay pattern."""
+    m = topo.m
+    ages = np.zeros((K, m, m), dtype=np.int32)
+    for k in range(K):
+        for i in range(m):
+            for j in topo.neighbors[i]:
+                if j < i:
+                    continue
+                a = int(rng.integers(0, min(k, S) + 1))
+                ages[k, i, j] = ages[k, j, i] = a
+    return ages
+
+
+# ---------------------------------------------------------------------------
+# Eq. 7 / tracking under delayed mixing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("comp", [TopK(ratio=0.3), StochasticQuant(bits=4)])
+@pytest.mark.parametrize("topo_fn", [ring, two_hop])
+def test_mean_dynamics_invariant_under_delay(comp, topo_fn):
+    """d_bar^{k+1} = d_bar^k - eta * s_bar^k must hold for ANY symmetric
+    staleness pattern — the pairwise-version mixing keeps the gossip term
+    mean-free exactly as the synchronous protocol does."""
+    topo = topo_fn(6)
+    m, d, K, S = topo.m, 9, 5, 2
+    W = jnp.asarray(topo.W, jnp.float32)
+    rng = np.random.default_rng(0)
+    A = jnp.asarray(
+        np.stack([np.eye(d) * (1 + 0.3 * i) for i in range(m)]), jnp.float32
+    )
+    b = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    grad_fn = lambda w: jnp.einsum("mij,mj->mi", A, w - b)
+    st0 = inner_init(
+        jnp.asarray(rng.normal(size=(m, d)), jnp.float32), grad_fn
+    )
+    gamma, eta = 0.4, 0.1
+    ages = _sym_ages(rng, topo, K, S)
+    assert ages.any()  # the pattern actually exercises staleness
+
+    # one delayed step obeys Eq. 7 exactly
+    st1, _ = async_inner_loop(
+        st0, KEY, grad_fn, W, comp, gamma, eta, 1, ages[1:2], depth=S + 1,
+        delayed=True,
+    )
+    np.testing.assert_allclose(
+        np.asarray(node_mean(st1.d)),
+        np.asarray(node_mean(st0.d)) - eta * np.asarray(node_mean(st0.s)),
+        atol=1e-5,
+    )
+    # after K delayed steps the tracking invariant still holds
+    stK, _ = async_inner_loop(
+        st0, KEY, grad_fn, W, comp, gamma, eta, K, ages, depth=S + 1,
+        delayed=True,
+    )
+    np.testing.assert_allclose(
+        np.asarray(node_mean(stK.s)),
+        np.asarray(node_mean(grad_fn(stK.d))),
+        atol=1e-3,
+    )
+
+
+def test_asymmetric_delay_would_break_mean_dynamics():
+    """Sanity check on the DESIGN: gating the matrix with one-sided
+    (asymmetric) ages does break Eq. 7 — which is why the engine insists on
+    the symmetric pairwise-version form."""
+    from repro.async_gossip import init_history, mix_delta_delayed, push_history
+
+    topo = ring(6)
+    m = topo.m
+    W = jnp.asarray(topo.W, jnp.float32)
+    key = jax.random.PRNGKey(3)
+    v_old = jax.random.normal(key, (m, 4))
+    v_new = jax.random.normal(jax.random.fold_in(key, 1), (m, 4))
+    hist = push_history(init_history(v_old, 2), v_new)
+    asym = np.zeros((m, m), np.int32)
+    asym[0, 1] = 1  # 0 sees 1 stale, 1 sees 0 fresh
+    sym = np.zeros((m, m), np.int32)
+    sym[0, 1] = sym[1, 0] = 1
+    mean_asym = np.asarray(
+        node_mean(mix_delta_delayed(W, hist, jnp.asarray(asym)))
+    )
+    mean_sym = np.asarray(
+        node_mean(mix_delta_delayed(W, hist, jnp.asarray(sym)))
+    )
+    np.testing.assert_allclose(mean_sym, 0.0, atol=1e-6)
+    assert np.abs(mean_asym).max() > 1e-4
+
+
+# ---------------------------------------------------------------------------
+# bounded staleness is enforced end to end
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bound", [0, 1, 2])
+def test_bounded_staleness_never_exceeds_bound(bundle, bound):
+    topo = ring(6)
+    cfg = C2DFBConfig(K=5, compressor="topk", comp_ratio=0.3)
+    fab = make_fabric(topo, profile="geo", straggler="lognormal", sigma=0.8,
+                      compute_s=0.05, seed=1)
+    led = StalenessLedger()
+    _, mets = run(bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=3,
+                  key=KEY, fabric=fab, async_mode="bounded",
+                  staleness_bound=bound, ledger=led)
+    assert led.max_age() <= bound
+    assert (np.asarray(mets["staleness_max"]) <= bound).all()
+    # histograms account for every recorded directed-edge age
+    hist = np.asarray(mets["staleness_hist"])
+    assert hist.shape[1] == max(bound + 1, 1)
+    assert (hist.sum(axis=1) > 0).all()
+
+
+def test_fully_async_geo_sees_staleness(bundle):
+    """Under geo latency the fully-async engine must actually observe
+    nonzero reference-point ages (otherwise the subsystem isn't exercising
+    anything)."""
+    topo = ring(6)
+    cfg = C2DFBConfig(K=5, compressor="topk", comp_ratio=0.3)
+    fab = make_fabric(topo, profile="geo", straggler="lognormal", sigma=0.8,
+                      compute_s=0.05, seed=1)
+    _, mets = run(bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=3,
+                  key=KEY, fabric=fab, async_mode="full")
+    assert np.asarray(mets["staleness_max"]).max() >= 1
+    assert np.isfinite(np.asarray(mets["hypergrad_norm"])).all()
+
+
+# ---------------------------------------------------------------------------
+# zero latency == synchronous, bit for bit
+# ---------------------------------------------------------------------------
+
+
+def test_zero_latency_async_matches_sync_bit_exactly(bundle):
+    topo = ring(6)
+    cfg = C2DFBConfig(K=4, compressor="topk", comp_ratio=0.3)
+    st_sync, m_sync = run(bundle.problem, topo, cfg, bundle.x0, bundle.y0,
+                          T=4, key=KEY)
+    fab = make_fabric(topo, profile="zero", straggler="none",
+                      compute_s=0.01, seed=0)
+    st_async, m_async = run(bundle.problem, topo, cfg, bundle.x0, bundle.y0,
+                            T=4, key=KEY, fabric=fab, async_mode="full")
+    # no staleness can exist on an instantaneous fabric...
+    assert np.asarray(m_async["staleness_max"]).max() == 0
+    # ...so the trajectory is the synchronous one, bit for bit
+    np.testing.assert_array_equal(np.asarray(st_sync.x), np.asarray(st_async.x))
+    np.testing.assert_array_equal(
+        np.asarray(st_sync.s_x), np.asarray(st_async.s_x)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(st_sync.inner_y.d), np.asarray(st_async.inner_y.d)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(st_sync.inner_z.d), np.asarray(st_async.inner_z.d)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(m_sync["hypergrad_norm"]),
+        np.asarray(m_async["hypergrad_norm"]),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(m_sync["measured_bytes"]),
+        np.asarray(m_async["measured_bytes"]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# acceptance: bounded-stale beats the barrier on time-to-consensus (geo)
+# ---------------------------------------------------------------------------
+
+
+def test_bounded_stale_reaches_sync_consensus_in_fewer_seconds(bundle):
+    """ISSUE 2 acceptance: under the geo profile with stragglers, bounded
+    staleness reaches the synchronous run's final consensus error in
+    STRICTLY fewer simulated seconds (identical hyperparameters both
+    modes).
+
+    The mixing step is gamma_in = 0.3: delayed gossip trades contraction
+    for wall clock, and its stability margin shrinks with gamma * staleness
+    (see test_delayed_consensus_stability) — at 0.3 the age-1 mixing keeps
+    nearly the synchronous per-round rate while rounds finish ~2x faster
+    (no per-step geo-latency barrier)."""
+    topo = ring(6)
+    cfg = C2DFBConfig(lam=10.0, eta_out=0.3, gamma_out=0.5, eta_in=0.3,
+                      gamma_in=0.3, K=6, compressor="topk", comp_ratio=0.5)
+    T_sync = 6
+    mk = lambda s: make_fabric(topo, profile="geo", straggler="lognormal",
+                               sigma=0.8, compute_s=0.05, seed=s)
+    st_s, m_s = run(bundle.problem, topo, cfg, bundle.x0, bundle.y0,
+                    T=T_sync, key=KEY, fabric=mk(1), async_mode="sync")
+    sync_final_err = float(np.asarray(m_s["y_consensus_err"])[-1])
+    sync_total_s = float(np.asarray(m_s["sim_seconds"]).sum())
+
+    st_b, m_b = run(bundle.problem, topo, cfg, bundle.x0, bundle.y0,
+                    T=3 * T_sync, key=KEY, fabric=mk(1), async_mode="bounded",
+                    staleness_bound=1)
+    err_b = np.asarray(m_b["y_consensus_err"], dtype=np.float64)
+    t_b = np.cumsum(np.asarray(m_b["sim_seconds"]))
+    hit = np.nonzero(err_b <= sync_final_err)[0]
+    assert hit.size, (
+        f"bounded-stale never reached sync consensus err {sync_final_err}"
+    )
+    t_hit = float(t_b[hit[0]])
+    assert t_hit < sync_total_s, (
+        f"bounded-stale took {t_hit:.2f}s vs sync {sync_total_s:.2f}s"
+    )
+
+
+# ---------------------------------------------------------------------------
+# baselines under the scheduler
+# ---------------------------------------------------------------------------
+
+
+def test_async_baselines_zero_latency_match_sync(bundle):
+    """MADSBO/MDBO through the async engine on an instantaneous fabric must
+    reproduce their synchronous rounds bit-exactly (value gossip has no
+    reference points; the zero-age fast path is op-identical)."""
+    from repro.async_gossip import run_baseline_async
+    from repro.core.baselines import (
+        MADSBOConfig, MDBOConfig, madsbo_init, madsbo_round, mdbo_init,
+        mdbo_round,
+    )
+
+    topo = ring(6)
+    mcfg = MADSBOConfig(K=3, Q=3)
+    fab = make_fabric(topo, profile="zero", straggler="none",
+                      compute_s=0.01, seed=0)
+    st_a, mets = run_baseline_async(
+        "madsbo", bundle.problem, topo, mcfg, bundle.x0, bundle.y0, 3, fab,
+        policy="full",
+    )
+    assert mets["ledger"].max_age() == 0
+    st_s = madsbo_init(bundle.problem, bundle.x0, bundle.y0)
+    for _ in range(3):
+        st_s, _ = madsbo_round(st_s, bundle.problem, topo, mcfg)
+    np.testing.assert_array_equal(np.asarray(st_a.x), np.asarray(st_s.x))
+    np.testing.assert_array_equal(np.asarray(st_a.y), np.asarray(st_s.y))
+
+    dcfg = MDBOConfig(K=3, neumann_N=3)
+    fab = make_fabric(topo, profile="zero", straggler="none",
+                      compute_s=0.01, seed=0)
+    st_a, _ = run_baseline_async(
+        "mdbo", bundle.problem, topo, dcfg, bundle.x0, bundle.y0, 2, fab,
+        policy="full",
+    )
+    st_s = mdbo_init(bundle.x0, bundle.y0)
+    for _ in range(2):
+        st_s, _ = mdbo_round(st_s, bundle.problem, topo, dcfg)
+    np.testing.assert_array_equal(np.asarray(st_a.x), np.asarray(st_s.x))
+
+
+def test_async_baseline_bounded_geo(bundle):
+    """Bounded MADSBO under geo: staleness shows up, stays within bound,
+    and the run converges in consensus."""
+    from repro.async_gossip import run_baseline_async
+    from repro.core.baselines import MADSBOConfig
+
+    topo = ring(6)
+    mcfg = MADSBOConfig(K=4, Q=4)
+    fab = make_fabric(topo, profile="geo", straggler="lognormal", sigma=0.8,
+                      compute_s=0.05, seed=1)
+    st, mets = run_baseline_async(
+        "madsbo", bundle.problem, topo, mcfg, bundle.x0, bundle.y0, 4, fab,
+        policy="bounded", bound=1,
+    )
+    led = mets["ledger"]
+    assert 1 <= led.max_age() <= 1
+    assert np.isfinite(np.asarray(mets["hypergrad_norm"])).all()
+    assert (np.asarray(mets["sim_seconds"]) > 0).all()
+
+
+def test_delayed_consensus_stability():
+    """Pure delayed gossip x <- x + gamma * mix_delayed(x): contraction
+    survives age-1 staleness at gamma = 0.5 and age-2 at gamma = 0.3, but
+    NOT age-2 at gamma = 0.5 — the classic gamma x staleness stability
+    trade-off the bounded policy's bound must be chosen against."""
+    from repro.async_gossip import init_history, mix_delta_delayed, push_history
+
+    topo = ring(6)
+    W = jnp.asarray(topo.W, jnp.float32)
+
+    def final_err(S, gamma, steps=60):
+        x = jnp.asarray(
+            np.random.default_rng(0).normal(size=(6, 4)), jnp.float32
+        )
+        err0 = float(jnp.sum((x - x.mean(0, keepdims=True)) ** 2))
+        hist = init_history(x, S + 1)
+        base = np.zeros((6, 6), np.int32)
+        for i in range(6):
+            for j in topo.neighbors[i]:
+                base[i, j] = S
+        for k in range(steps):
+            a = jnp.minimum(jnp.asarray(base), k)
+            x = jax.tree.map(
+                lambda v, d: v + gamma * d, x, mix_delta_delayed(W, hist, a)
+            )
+            hist = push_history(hist, x)
+        return float(jnp.sum((x - x.mean(0, keepdims=True)) ** 2)) / err0
+
+    assert final_err(1, 0.5) < 1e-6
+    assert final_err(2, 0.3) < 1e-4
+    assert final_err(2, 0.5) > 1e-2  # past the stability limit
