@@ -18,7 +18,12 @@ policies pipeline flight time behind compute at a bounded staleness cost.
 Also exports a Chrome trace (one lane per node) of one geo round under each
 policy to ``bench_async_trace.json`` — the CI uploads it as an artifact.
 
-    PYTHONPATH=src python benchmarks/bench_async.py [--smoke] [--full]
+``--adaptive`` adds the staleness-adaptive damping axis: the non-barrier
+policies rerun with inverse-age / exp-decay weight damping at a LARGE
+mixing step (gamma_in = 0.5) — the regime where undamped fully-async
+gossip diverges and the damped runs stay convergent.
+
+    PYTHONPATH=src python benchmarks/bench_async.py [--smoke] [--full] [--adaptive]
     PYTHONPATH=src python -m benchmarks.run --only async
 """
 
@@ -54,18 +59,30 @@ NET_PROFILES = [
     ),
 ]
 
-#: (label, async_mode, staleness bound) — bound chosen inside the
-#: gamma*staleness stability margin (tests/test_async_invariants.py).
+#: (label, async_mode, staleness bound, mixing_damping) — bound chosen
+#: inside the gamma*staleness stability margin
+#: (tests/test_async_invariants.py).
 POLICIES = [
-    ("sync", "sync", 0),
-    ("bounded1", "bounded", 1),
-    ("full", "full", 0),
+    ("sync", "sync", 0, "none"),
+    ("bounded1", "bounded", 1, "none"),
+    ("full", "full", 0, "none"),
+]
+
+#: --adaptive axis: the same non-barrier policies with staleness-adaptive
+#: weight damping.  The interesting read-out is fully-async at a LARGE
+#: mixing step (gamma_in = 0.5): undamped it diverges on the geo profile,
+#: inverse-age keeps it convergent (the ISSUE 3 acceptance demo, engine
+#: form in tests/test_async_invariants.py).
+ADAPTIVE_POLICIES = [
+    ("bounded1_invage", "bounded", 1, "inverse-age"),
+    ("full_invage", "full", 0, "inverse-age"),
+    ("full_expdecay", "full", 0, "exp-decay"),
 ]
 
 TRACE_PATH = "bench_async_trace.json"
 
 
-def run_suite(fast: bool = True, smoke: bool = False):
+def run_suite(fast: bool = True, smoke: bool = False, adaptive: bool = False):
     m = 6 if smoke else 10
     T = 3 if smoke else (8 if fast else 20)
     K = 4 if smoke else 6
@@ -74,23 +91,28 @@ def run_suite(fast: bool = True, smoke: bool = False):
         h=0.8, seed=0,
     )
     topo = ring(m)
+    # gamma_in: with the adaptive axis on, run at the LARGE mixing step the
+    # damping policies are built to rescue (undamped full-async diverges
+    # there on geo — that divergence is part of the read-out)
     cfg = C2DFBConfig(
-        lam=10.0, eta_out=0.3, gamma_out=0.5, eta_in=0.3, gamma_in=0.3,
+        lam=10.0, eta_out=0.3, gamma_out=0.5, eta_in=0.3,
+        gamma_in=0.5 if adaptive else 0.3,
         K=K, compressor="topk", comp_ratio=0.5,
     )
     key = jax.random.PRNGKey(0)
     trace_out = {}
+    policies = POLICIES + (ADAPTIVE_POLICIES if adaptive else [])
 
     for net_name, net_kw in NET_PROFILES:
         sync_err = sync_t = None
-        for label, mode, bound in POLICIES:
+        for label, mode, bound, damping in policies:
             tr = NetTrace() if net_name == "geo_straggler" else None
             fabric = make_fabric(topo, seed=0, trace=tr, **net_kw)
             t0 = time.time()
             _, mets = c2dfb_run(
                 bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=T,
                 key=key, fabric=fabric, async_mode=mode,
-                staleness_bound=bound,
+                staleness_bound=bound, mixing_damping=damping,
             )
             dt = time.time() - t0
             err = np.asarray(mets["y_consensus_err"], dtype=np.float64)
@@ -106,7 +128,8 @@ def run_suite(fast: bool = True, smoke: bool = False):
                 dt * 1e6 / max(T, 1),
                 f"simulated_seconds={float(sim[-1]):.2f};"
                 f"t_to_sync_err={t_hit:.2f};"
-                f"final_consensus_err={float(err[-1]):.5f};"
+                f"final_consensus_err={float(err[-1]):.5g};"
+                f"damping={damping};"
                 f"staleness_max={int(np.asarray(mets['staleness_max']).max())};"
                 f"staleness_mean={float(np.asarray(mets['staleness_mean']).mean()):.2f};"
                 f"wire_bytes={int(np.asarray(mets['wire_bytes']).sum())}",
@@ -139,9 +162,12 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny settings for CI (seconds, not minutes)")
     ap.add_argument("--full", action="store_true", help="paper-scale settings")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="add the staleness-adaptive damping axis (and run "
+                         "at the large gamma_in the damping rescues)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run_suite(fast=not args.full, smoke=args.smoke)
+    run_suite(fast=not args.full, smoke=args.smoke, adaptive=args.adaptive)
 
 
 if __name__ == "__main__":

@@ -7,12 +7,16 @@ event-driven execution model over the `repro.net` fabric:
 * ``scheduler`` — `AsyncScheduler`: per-node clocks, per-message arrivals
   (NIC egress + link model + stragglers), and the sync / bounded-staleness
   / fully-async gating policies.  Produces per-step per-edge version AGES.
-* ``mixing``   — jit/scan-side delayed gossip: reference-point histories
-  and the symmetric age-gated operator that preserves the paper's
-  mean-dynamics invariant (Eq. 7) under any delay pattern.
+* ``mixing``   — jit/scan-side delayed gossip: reference-point histories,
+  the symmetric age-gated operator that preserves the paper's
+  mean-dynamics invariant (Eq. 7) under any delay pattern, and the
+  staleness-adaptive damping policies (``DAMPING_POLICIES``) that keep it
+  contractive at large ``gamma_in`` x staleness products.
 * ``engine``   — `run_async` (C2DFB rounds under staleness, reached via
-  ``c2dfb.run(async_mode=...)``) and `run_baseline_async` (MADSBO / MDBO
-  value-gossip loops under the same scheduler).
+  ``c2dfb.run(async_mode=...)``, composing with `repro.net.dynamic`
+  topology schedules: dropped edges freeze their reference history and
+  re-enter with their true version age) and `run_baseline_async`
+  (MADSBO / MDBO value-gossip loops under the same scheduler).
 * ``ledger``   — `StalenessLedger`: per-edge age histograms and the
   consensus-error-vs-simulated-seconds curves time-to-accuracy
   comparisons are read off of.
@@ -27,18 +31,25 @@ from repro.async_gossip.engine import (
 )
 from repro.async_gossip.ledger import LoopRecord, StalenessLedger
 from repro.async_gossip.mixing import (
+    DAMPING_POLICIES,
+    damp_weights,
+    damping_factor,
     init_history,
     mix_delta_delayed,
     push_history,
+    validate_damping,
 )
 from repro.async_gossip.scheduler import POLICIES, AsyncScheduler, AsyncTimeline
 
 __all__ = [
+    "DAMPING_POLICIES",
     "POLICIES",
     "AsyncScheduler",
     "AsyncTimeline",
     "LoopRecord",
     "StalenessLedger",
+    "damp_weights",
+    "damping_factor",
     "async_c2dfb_round",
     "async_inner_loop",
     "delayed_value_scan",
@@ -47,4 +58,5 @@ __all__ = [
     "push_history",
     "run_async",
     "run_baseline_async",
+    "validate_damping",
 ]

@@ -66,7 +66,11 @@ def async_inner_loop(
     ages: jax.Array,
     depth: int,
     delayed: bool = True,
-) -> tuple[InnerState, dict]:
+    damping: str = "none",
+    decay: float = 0.5,
+    hist0: tuple | None = None,
+    return_hist: bool = False,
+) -> tuple:
     """Algorithm 2 under staleness: K steps where the mixing deltas come
     from age-gated reference HISTORIES instead of the current references.
 
@@ -74,6 +78,15 @@ def async_inner_loop(
     of age ``ages[k, i, j]``.  With ``delayed=False`` (all ages zero) this
     IS the synchronous `inner_loop` — same function, so zero-staleness
     rounds are bit-identical to the sync path and carry no dead history.
+
+    ``damping`` applies the staleness-adaptive weight policy
+    (`mixing.DAMPING_POLICIES`) per step on the realized ages.  ``hist0``
+    (a ``(hist_d, hist_s)`` pair) seeds the reference histories instead of
+    re-initializing them from the current references — the schedule-
+    composed engine carries histories ACROSS rounds so edges that sat
+    rounds out can still mix their true, frozen version (their re-entry
+    age points past the current round's pushes).  With ``return_hist`` the
+    post-loop histories ride back to the caller as a third result.
 
     The delayed branch mirrors `inner_loop`'s scan body with the history
     carry added; keep the two in lockstep (same `inner_apply` call, same
@@ -83,18 +96,23 @@ def async_inner_loop(
     from repro.net.wire import scan_tree_bytes
 
     if not delayed:
+        if return_hist:
+            raise ValueError("return_hist requires the delayed branch")
         return inner_loop(
             state, key, grad_fn, W, compressor, gamma, eta, K
         )
 
-    hist_d = init_history(state.d_hat, depth)
-    hist_s = init_history(state.s_hat, depth)
+    if hist0 is None:
+        hist_d = init_history(state.d_hat, depth)
+        hist_s = init_history(state.s_hat, depth)
+    else:
+        hist_d, hist_s = hist0
 
     def body(carry, inp):
         st, hd, hs = carry
         k, age_k = inp
-        mix_d = mix_delta_delayed(W, hd, age_k)
-        mix_s = mix_delta_delayed(W, hs, age_k)
+        mix_d = mix_delta_delayed(W, hd, age_k, damping, decay)
+        mix_s = mix_delta_delayed(W, hs, age_k, damping, decay)
         st, (q_d, q_s) = inner_apply(
             st, k, grad_fn, compressor, gamma, eta, mix_d, mix_s
         )
@@ -107,7 +125,7 @@ def async_inner_loop(
 
     keys = jax.random.split(key, K)
     ages = jnp.asarray(ages, jnp.int32)
-    (state, _, _), step_bytes = jax.lax.scan(
+    (state, hist_d, hist_s), step_bytes = jax.lax.scan(
         body, (state, hist_d, hist_s), (keys, ages)
     )
     metrics = {
@@ -118,6 +136,8 @@ def async_inner_loop(
         "tracker_consensus_err": consensus_error(state.s),
         "msg_bytes": jnp.sum(step_bytes),
     }
+    if return_hist:
+        return state, metrics, (hist_d, hist_s)
     return state, metrics
 
 
@@ -131,22 +151,47 @@ def async_c2dfb_round(
     ages_z: jax.Array,
     depth: int,
     delayed: bool = True,
-) -> tuple[C2DFBState, dict]:
+    W: jax.Array | None = None,
+    damping: str = "none",
+    decay: float = 0.5,
+    hists: dict | None = None,
+) -> tuple:
     """One outer round with staleness-gated inner loops: the shared
     `c2dfb_round_core` body with `async_inner_loop` plugged in.  Outer
     x / s_x updates stay synchronous (the round boundary is a barrier), so
-    zero ages reproduce the synchronous round exactly."""
-    W = jnp.asarray(topo.W, dtype=jnp.float32)
+    zero ages reproduce the synchronous round exactly.
+
+    ``W`` overrides the static mixing matrix with a schedule round's
+    matrix (outer AND inner mixing — inactive edges carry zero weight,
+    so their ages never contribute).  ``hists`` maps loop tag ("y" / "z")
+    to a cross-round ``(hist_d, hist_s)`` history pair; when given, the
+    round returns ``(state, metrics, hists_out)`` with the post-loop
+    histories so the engine can thread them into the next round."""
+    Wm = jnp.asarray(topo.W if W is None else W, dtype=jnp.float32)
     compressor = cfg.make_compressor()
     ages = {"y": ages_y, "z": ages_z}
+    hists_out: dict = {}
 
     def inner_fn(st, k, grad_fn, eta, tag):
-        return async_inner_loop(
-            st, k, grad_fn, W, compressor, cfg.gamma_in, eta, cfg.K,
-            ages[tag], depth, delayed,
+        if hists is None:
+            return async_inner_loop(
+                st, k, grad_fn, Wm, compressor, cfg.gamma_in, eta, cfg.K,
+                ages[tag], depth, delayed, damping=damping, decay=decay,
+            )
+        st, mets, h = async_inner_loop(
+            st, k, grad_fn, Wm, compressor, cfg.gamma_in, eta, cfg.K,
+            ages[tag], depth, delayed, damping=damping, decay=decay,
+            hist0=hists[tag], return_hist=True,
         )
+        hists_out[tag] = h
+        return st, mets
 
-    return c2dfb_round_core(state, key, problem, W, cfg, inner_fn)
+    new_state, metrics = c2dfb_round_core(
+        state, key, problem, Wm, cfg, inner_fn
+    )
+    if hists is None:
+        return new_state, metrics
+    return new_state, metrics, hists_out
 
 
 def _dense_node_bytes(tree: Pytree) -> int:
@@ -155,6 +200,22 @@ def _dense_node_bytes(tree: Pytree) -> int:
 
     one = jax.tree.map(lambda v: v[0], tree)
     return codec_for(make_compressor("identity")).tree_bytes(one)
+
+
+def _history_depth(scheduler: AsyncScheduler, K: int, max_lag: int) -> int:
+    """History slots the delayed mixing must carry when re-entry lags can
+    reach ``max_lag`` versions: every realizable age is bounded by
+    (K - 1) + max_lag for the never-waiting full policy, and by the bound
+    for bounded (whose gate also admits lag-old versions while
+    lag <= bound - k)."""
+    if max_lag <= 0:
+        return scheduler.depth_for(K)
+    max_possible_age = K - 1 + max_lag
+    if scheduler.policy == "full":
+        return max_possible_age + 1
+    if scheduler.policy == "bounded":
+        return min(scheduler.bound, max_possible_age) + 1
+    return scheduler.depth_for(K)  # sync: ages provably zero
 
 
 def _loop_start(tl, fallback: float) -> float:
@@ -177,6 +238,9 @@ def run_async(
     bound: int = 2,
     ledger: StalenessLedger | None = None,
     scheduler: AsyncScheduler | None = None,
+    schedule=None,
+    mixing_damping: str = "none",
+    damping_decay: float = 0.5,
 ) -> tuple[C2DFBState, dict]:
     """T outer rounds of C2DFB under the async engine.
 
@@ -186,9 +250,23 @@ def run_async(
     (active directed edges only) and ``staleness_hist`` (T, depth) age
     histograms.  ``policy="sync"`` is the barrier reference; "bounded"
     enforces ``age <= bound`` by gating; "full" never waits.
+
+    ``schedule`` (a `repro.net.dynamic.TopologySchedule`) composes the
+    async engine with per-round mixing matrices: each round runs on the
+    schedule's active edge set; an edge that sits rounds out freezes its
+    reference history and re-enters with its true version age (the
+    scheduler's persistent ``version_lag``), paying a dense catch-up
+    transfer before in-round residuals apply.  Reference histories are
+    carried ACROSS rounds so the frozen versions stay addressable.
+    ``mixing_damping`` selects the staleness-adaptive weight policy
+    (`mixing.DAMPING_POLICIES`) — ``"inverse-age"`` keeps the fully-async
+    policy contractive at mixing steps where undamped delayed gossip
+    diverges (tests/test_async_schedule_compose.py).
     """
+    from repro.async_gossip.mixing import validate_damping
     from repro.net.fabric import edge_list
 
+    validate_damping(mixing_damping)
     scheduler = scheduler or AsyncScheduler(fabric, policy=policy, bound=bound)
     ledger = ledger if ledger is not None else StalenessLedger()
     state = init_state(problem, cfg, x0, y0)
@@ -200,21 +278,80 @@ def run_async(
     )
     edges = edge_list(topo)
 
+    Ws = masks = None
+    hists = None
+    catchup_bytes = 0
+    # an injected scheduler may carry unresolved version lag from a prior
+    # schedule-composed run (edges still dropped at that run's end); a
+    # static follow-up run must honor it — those edges re-enter at their
+    # true age with a priced catch-up, not silently at age 0
+    carried_lag = int(scheduler.version_lag.max())
+    if schedule is None and carried_lag > 0:
+        catchup_bytes = 2 * _dense_node_bytes(state.inner_y.d_hat)
+        depth = _history_depth(scheduler, cfg.K, carried_lag)
+    if schedule is not None:
+        from repro.net.dynamic import (
+            active_edge_masks,
+            schedule_version_lags,
+            validate_schedule_stack,
+        )
+
+        Ws = validate_schedule_stack(schedule.stack(T), T, topo.m, base=topo)
+        masks = active_edge_masks(Ws)
+        _, max_lag = schedule_version_lags(masks, cfg.K)
+        # an injected scheduler may carry version_lag from a previous run;
+        # every realizable age is bounded by the replayed lag plus that
+        # carried offset (conservative: a carried edge's re-entry lag is
+        # its replayed lag + at most its entry lag)
+        depth = _history_depth(scheduler, cfg.K, int(max_lag) + carried_lag)
+        # re-entering edges exchange both dense reference trees first
+        catchup_bytes = 2 * _dense_node_bytes(state.inner_y.d_hat)
+        hists = {
+            "y": (
+                init_history(state.inner_y.d_hat, depth),
+                init_history(state.inner_y.s_hat, depth),
+            ),
+            "z": (
+                init_history(state.inner_z.d_hat, depth),
+                init_history(state.inner_z.s_hat, depth),
+            ),
+        }
+
     round_fns = {}
 
     def round_fn(delayed: bool):
         if delayed not in round_fns:
             round_fns[delayed] = jax.jit(
                 lambda st, k, ay, az, _d=delayed: async_c2dfb_round(
-                    st, k, problem, topo, cfg, ay, az, depth, delayed=_d
+                    st, k, problem, topo, cfg, ay, az, depth, delayed=_d,
+                    damping=mixing_damping, decay=damping_decay,
                 )
             )
         return round_fns[delayed]
 
-    idx = tuple(zip(*edges))
+    sched_round = None
+    if schedule is not None:
+        # W, ages and the cross-round histories all ride as traced
+        # arguments, so every schedule round shares one compilation
+        sched_round = jax.jit(
+            lambda st, k, Wt, ay, az, hs: async_c2dfb_round(
+                st, k, problem, topo, cfg, ay, az, depth, delayed=True,
+                W=Wt, damping=mixing_damping, decay=damping_decay, hists=hs,
+            )
+        )
+
     keys = jax.random.split(key, T)
     rows: list[dict] = []
+    track_lag = schedule is not None or carried_lag > 0
     for t in range(T):
+        active_t = masks[t] if masks is not None else None
+        lag_t = scheduler.version_lag if track_lag else None
+        if active_t is not None:
+            act_edges = tuple(
+                (i, j) for i, j in edges if active_t[i, j]
+            )
+        else:
+            act_edges = edges
         t_start = float(scheduler.clock.max())
         # honest per-node packet sizes: serialize the CURRENT residuals
         kb = jax.random.fold_in(keys[t], 0xB17E)  # metering-only key
@@ -225,37 +362,54 @@ def run_async(
         bytes_z = np.asarray(bd) + np.asarray(bs)
 
         scheduler.barrier_phase(
-            outer_node_bytes, t, compute_s=compute_step, label="x"
+            outer_node_bytes, t, compute_s=compute_step, label="x",
+            active=active_t,
         )
         ty0 = float(scheduler.clock.max())
         tl_y = scheduler.run_loop(
-            cfg.K, bytes_y, t, compute_step, loop="y"
+            cfg.K, bytes_y, t, compute_step, loop="y",
+            active=active_t, lag=lag_t, catchup_bytes=catchup_bytes,
         )
         tl_z = scheduler.run_loop(
-            cfg.K, bytes_z, t, compute_step, loop="z"
+            cfg.K, bytes_z, t, compute_step, loop="z",
+            active=active_t, lag=lag_t, catchup_bytes=catchup_bytes,
         )
         scheduler.drain(max(tl_y.end_s, tl_z.end_s))
         t_end = scheduler.barrier_phase(
-            outer_node_bytes, t, compute_s=compute_step, label="s_x"
+            outer_node_bytes, t, compute_s=compute_step, label="s_x",
+            active=active_t,
         )
+        if track_lag:
+            scheduler.advance_lag(active_t, cfg.K)
 
-        delayed = bool(tl_y.ages.any() or tl_z.ages.any())
-        state, mets = round_fn(delayed)(
-            state, keys[t], jnp.asarray(tl_y.ages), jnp.asarray(tl_z.ages)
-        )
+        if schedule is not None:
+            state, mets, hists = sched_round(
+                state, keys[t], jnp.asarray(Ws[t], jnp.float32),
+                jnp.asarray(tl_y.ages), jnp.asarray(tl_z.ages), hists,
+            )
+        else:
+            delayed = bool(tl_y.ages.any() or tl_z.ages.any())
+            state, mets = round_fn(delayed)(
+                state, keys[t], jnp.asarray(tl_y.ages),
+                jnp.asarray(tl_z.ages),
+            )
 
         ledger.record_loop(t, "y", tl_y.ages, _loop_start(tl_y, ty0),
-                           tl_y.end_s)
+                           tl_y.end_s, edges=act_edges)
         ledger.record_loop(t, "z", tl_z.ages, _loop_start(tl_z, tl_y.end_s),
-                           tl_z.end_s)
+                           tl_z.end_s, edges=act_edges)
         x_err = float(mets["x_consensus_err"])
         ledger.record_point(t_end, x_err)
 
-        edge_ages = np.concatenate(
-            [tl_y.ages[:, idx[0], idx[1]].reshape(-1),
-             tl_z.ages[:, idx[0], idx[1]].reshape(-1)]
-        )
-        outer_wire = 2 * outer_node_bytes * len(edges)
+        if act_edges:
+            idx_t = tuple(zip(*act_edges))
+            edge_ages = np.concatenate(
+                [tl_y.ages[:, idx_t[0], idx_t[1]].reshape(-1),
+                 tl_z.ages[:, idx_t[0], idx_t[1]].reshape(-1)]
+            )
+        else:
+            edge_ages = np.zeros(0, np.int32)
+        outer_wire = 2 * outer_node_bytes * len(act_edges)
         row = {k: np.asarray(v) for k, v in mets.items()}
         row["sim_seconds"] = np.float64(t_end - t_start)
         row["wire_bytes"] = np.int64(
@@ -290,17 +444,21 @@ def delayed_value_scan(
     ages: jax.Array,
     depth: int,
     local_update,
+    damping: str = "none",
+    decay: float = 0.5,
 ) -> Pytree:
     """Staleness-gated twin of `repro.core.baselines.value_gossip_scan`:
     K steps of  v <- local_update(v + gamma * mix(views), v_pre)  where the
     views are age-gated versions of the transmitted iterate (dense value
     gossip — each step transmits the iterate itself).  ``local_update``
-    has the same (mixed, pre) contract as the synchronous scan."""
+    has the same (mixed, pre) contract as the synchronous scan.
+    ``damping`` applies the same staleness-adaptive weight policy as the
+    C2DFB engine (`mixing.DAMPING_POLICIES`)."""
     hist = init_history(value, depth)
 
     def body(carry, age_k):
         v, h = carry
-        delta = mix_delta_delayed(W, h, age_k)
+        delta = mix_delta_delayed(W, h, age_k, damping, decay)
         mixed = jax.tree.map(lambda a, d_: a + gamma * d_, v, delta)
         v_new = local_update(mixed, v)
         h = push_history(h, v_new)
@@ -324,17 +482,23 @@ def run_baseline_async(
     policy: str = "bounded",
     bound: int = 2,
     ledger: StalenessLedger | None = None,
+    mixing_damping: str = "none",
+    damping_decay: float = 0.5,
 ) -> tuple[object, dict]:
     """MADSBO / MDBO rounds driven by the AsyncScheduler: their dense
     value-gossip loops run event-driven with age-gated mixing; the
     hypergradient assembly and upper-level update stay at the (barrier)
-    round boundary, mirroring the sync baselines."""
+    round boundary, mirroring the sync baselines.  ``mixing_damping``
+    applies the staleness-adaptive weight policy to the value-gossip
+    loops, same contract as `run_async`."""
+    from repro.async_gossip.mixing import validate_damping
     from repro.core.baselines import (
         madsbo_init, madsbo_round_async, mdbo_init, mdbo_round_async,
     )
 
     if alg not in ("madsbo", "mdbo"):
         raise ValueError(f"unknown async baseline {alg!r}")
+    validate_damping(mixing_damping)
     scheduler = AsyncScheduler(fabric, policy=policy, bound=bound)
     ledger = ledger if ledger is not None else StalenessLedger()
     dy_bytes = _dense_node_bytes(y0)
@@ -357,13 +521,15 @@ def run_baseline_async(
             if alg == "madsbo":
                 round_fns[delayed] = jax.jit(
                     lambda st, all_, ah, _d=delayed: madsbo_round_async(
-                        st, problem, topo, cfg, all_, ah, depth, delayed=_d
+                        st, problem, topo, cfg, all_, ah, depth, delayed=_d,
+                        damping=mixing_damping, decay=damping_decay,
                     )
                 )
             else:
                 round_fns[delayed] = jax.jit(
                     lambda st, all_, _d=delayed: mdbo_round_async(
-                        st, problem, topo, cfg, all_, depth, delayed=_d
+                        st, problem, topo, cfg, all_, depth, delayed=_d,
+                        damping=mixing_damping, decay=damping_decay,
                     )
                 )
         return round_fns[delayed]

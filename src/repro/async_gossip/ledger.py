@@ -25,6 +25,10 @@ class LoopRecord:
     ages: np.ndarray       # (K, m, m) int32, symmetric
     t_start: float
     t_end: float
+    #: directed edges that were ACTIVE for this loop (None = the full
+    #: graph); under a topology schedule only these positions of ``ages``
+    #: are meaningful — inactive edges carry no traffic and record 0
+    edges: tuple | None = None
 
 
 class StalenessLedger:
@@ -38,13 +42,14 @@ class StalenessLedger:
     # -- recording ----------------------------------------------------------
     def record_loop(
         self, round_idx: int, loop: str, ages: np.ndarray,
-        t_start: float, t_end: float,
+        t_start: float, t_end: float, edges: tuple | None = None,
     ) -> None:
         self.loops.append(
             LoopRecord(
                 round=round_idx, loop=loop,
                 ages=np.asarray(ages, dtype=np.int32),
                 t_start=float(t_start), t_end=float(t_end),
+                edges=tuple(edges) if edges is not None else None,
             )
         )
 
@@ -68,31 +73,39 @@ class StalenessLedger:
     def max_age(self) -> int:
         return max((int(r.ages.max()) for r in self.loops), default=0)
 
+    @staticmethod
+    def _record_ages(r: LoopRecord, edges) -> np.ndarray:
+        """A record's age samples: explicit ``edges`` wins, else the
+        record's own active-edge set (schedule runs), else every entry."""
+        use = edges if edges is not None else r.edges
+        if use is None:
+            return r.ages.reshape(-1)
+        if not use:
+            return np.zeros(0, np.int32)
+        idx = tuple(zip(*use))
+        return r.ages[:, idx[0], idx[1]].reshape(-1)
+
     def mean_age(self, edges=None) -> float:
         """Mean age over recorded steps; restrict to ``edges`` (directed
-        pairs) when given so idle (i, i) / non-edge zeros don't dilute it."""
+        pairs) when given so idle (i, i) / non-edge zeros don't dilute it.
+        Records carrying their own active-edge set (schedule-composed
+        runs) are masked to it automatically."""
         if not self.loops:
             return 0.0
-        if edges is None:
-            vals = np.concatenate([r.ages.reshape(-1) for r in self.loops])
-        else:
-            idx = tuple(zip(*edges))
-            vals = np.concatenate(
-                [r.ages[:, idx[0], idx[1]].reshape(-1) for r in self.loops]
-            )
+        vals = np.concatenate(
+            [self._record_ages(r, edges) for r in self.loops]
+        )
         return float(vals.mean()) if vals.size else 0.0
 
     def histogram(self, max_age: int | None = None, edges=None) -> np.ndarray:
-        """Counts of observed ages 0..max_age over all recorded steps."""
+        """Counts of observed ages 0..max_age over all recorded steps
+        (masked to each record's active edges like ``mean_age``)."""
         if max_age is None:
             max_age = self.max_age()
         counts = np.zeros(max_age + 1, dtype=np.int64)
         for r in self.loops:
-            a = r.ages
-            if edges is not None:
-                idx = tuple(zip(*edges))
-                a = a[:, idx[0], idx[1]]
-            c = np.bincount(a.reshape(-1), minlength=max_age + 1)
+            a = self._record_ages(r, edges)
+            c = np.bincount(a, minlength=max_age + 1)
             counts += c[: max_age + 1]
         return counts
 

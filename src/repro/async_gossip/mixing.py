@@ -24,6 +24,26 @@ holds under ANY symmetric delay pattern, exactly as in the synchronous
 protocol (property-tested in tests/test_async_invariants.py).  With all
 ages zero the operator reduces to ``mix_delta_dense`` on the current
 references.
+
+STALENESS-ADAPTIVE DAMPING.  Delayed gossip is only contractive while
+``gamma * staleness`` stays small (test_delayed_consensus_stability): an
+age-a edge applies an old disagreement direction, and a large mixing step
+along it overshoots.  ``damp_weights`` therefore scales each edge's weight
+by a decreasing function of its CURRENT age —
+
+    none         w_ij                      (the undamped PR-2 operator)
+    inverse-age  w_ij / (1 + a_ij)
+    exp-decay    w_ij * decay ** a_ij      (decay in (0, 1], default 0.5)
+
+— and renormalizes by absorbing the removed mass into the diagonal
+(W'_ii = 1 - sum_{j != i} W'_ij), so every per-step realized matrix stays
+symmetric, row-stochastic and non-negative: each step remains a valid
+Assumption-1 gossip operator.  Because the ages are symmetric, the damping
+factor is symmetric too, so the pairwise cancellation above — and with it
+the Eq. 7 mean-dynamics invariant — is preserved by construction.  Zero
+ages give a damping factor of exactly 1.0, so the damped operator is
+BIT-exact with the undamped one (property-tested in
+tests/test_adaptive_mixing_property.py).
 """
 
 from __future__ import annotations
@@ -32,6 +52,53 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.types import Pytree
+
+#: Staleness-adaptive damping policies for the delayed mixing operator.
+DAMPING_POLICIES = ("none", "inverse-age", "exp-decay")
+
+
+def validate_damping(policy: str) -> str:
+    """Reject unknown damping policies up front (before a run starts),
+    with the one canonical error message; returns the policy."""
+    if policy not in DAMPING_POLICIES:
+        raise ValueError(
+            f"unknown mixing_damping {policy!r}; have {DAMPING_POLICIES}"
+        )
+    return policy
+
+
+def damping_factor(
+    ages: jax.Array, policy: str, decay: float = 0.5
+) -> jax.Array:
+    """Per-edge weight multiplier phi(a) in (0, 1], with phi(0) == 1.0
+    exactly (IEEE: x * 1.0 == x, so zero-age edges are undamped bit-for-
+    bit).  ``ages`` is any integer array; the factor has its shape."""
+    validate_damping(policy)
+    a = jnp.asarray(ages, jnp.float32)
+    if policy == "none":
+        return jnp.ones_like(a)
+    if policy == "inverse-age":
+        return 1.0 / (1.0 + a)
+    if not 0.0 < decay <= 1.0:
+        raise ValueError(f"exp-decay needs decay in (0, 1], got {decay}")
+    return jnp.asarray(decay, jnp.float32) ** a
+
+
+def damp_weights(
+    W: jax.Array, ages: jax.Array, policy: str, decay: float = 0.5
+) -> jax.Array:
+    """The realized age-damped mixing matrix: off-diagonal
+    ``W'_ij = W_ij * phi(a_ij)``, diagonal renormalized to
+    ``1 - sum_{j != i} W'_ij``.  Symmetric (ages and W are), row- and
+    column-stochastic, non-negative — phi <= 1 only moves mass onto the
+    diagonal.  With ``policy="none"`` returns ``W`` unchanged (bit-exact
+    fast path)."""
+    if policy == "none":
+        return W
+    m = W.shape[0]
+    eye = jnp.eye(m, dtype=W.dtype)
+    off = W * (1.0 - eye) * damping_factor(ages, policy, decay).astype(W.dtype)
+    return off + jnp.diag(1.0 - off.sum(axis=1))
 
 
 def init_history(tree: Pytree, depth: int) -> Pytree:
@@ -53,23 +120,36 @@ def push_history(hist: Pytree, new: Pytree) -> Pytree:
     )
 
 
-def mix_delta_delayed(W: jax.Array, hist: Pytree, ages: jax.Array) -> Pytree:
-    """sum_j w_ij (h[a_ij, j] - h[a_ij, i]) for a history pytree.
+def mix_delta_delayed(
+    W: jax.Array,
+    hist: Pytree,
+    ages: jax.Array,
+    damping: str = "none",
+    decay: float = 0.5,
+) -> Pytree:
+    """sum_j w'_ij (h[a_ij, j] - h[a_ij, i]) for a history pytree.
 
     ``ages`` is an (m, m) int array of per-edge version ages, symmetric and
     < history depth; entries on non-edges (w_ij = 0) and the diagonal are
-    ignored by the weighting.  Arithmetic in f32, emitted at the leaf dtype
-    (same contract as ``mix_delta_dense``).
+    ignored by the weighting.  ``damping`` selects the staleness-adaptive
+    weight policy (``DAMPING_POLICIES``); the diagonal renormalization of
+    `damp_weights` never enters the delta form (the i == i term is zero),
+    so the realized operator is exactly ``I + (W' - I)`` applied to the
+    age-gated views.  Arithmetic in f32, emitted at the leaf dtype (same
+    contract as ``mix_delta_dense``).
     """
     m = ages.shape[0]
     rows = jnp.arange(m)[:, None]
     cols = jnp.arange(m)[None, :]
+    Wf = W.astype(jnp.float32)
+    if damping != "none":
+        Wf = Wf * damping_factor(ages, damping, decay)
 
     def leaf(h):
         flat = h.reshape(h.shape[0], m, -1).astype(jnp.float32)
         theirs = flat[ages, cols]  # (m, m, d): h[a_ij, j]
         mine = flat[ages, rows]    # (m, m, d): h[a_ij, i]
-        out = jnp.einsum("ij,ijd->id", W.astype(jnp.float32), theirs - mine)
+        out = jnp.einsum("ij,ijd->id", Wf, theirs - mine)
         return out.reshape(h.shape[1:]).astype(h.dtype)
 
     return jax.tree.map(leaf, hist)

@@ -48,8 +48,24 @@ the ROADMAP's "causally-priced version agreement" follow-up.
 
 The round boundary DRAINS the wire: the outer barrier waits for every
 in-flight residual, so the next round's version-0 reference points are
-globally consistent — which is why per-round age arrays satisfy
-``age[k] <= k`` and histories can restart each round.
+globally consistent ACROSS THE ACTIVE EDGES — which is why, on a static
+graph, per-round age arrays satisfy ``age[k] <= k`` and histories can
+restart each round.
+
+TIME-VARYING EDGE SETS.  ``run_loop(active=...)`` restricts a loop to a
+round's active subgraph (a `repro.net.dynamic` schedule step).  Edges that
+sit a round out carry no traffic, and the round-boundary drain cannot
+refresh them — so the scheduler keeps a persistent per-edge ``version_lag``
+(how many reference versions behind round-start the pair's common holding
+is).  An edge absent for r rounds of a K-step loop re-enters with
+``lag = r * K``: its first mixes see ``age = k + lag``, never age 0.
+Because the inner protocol transmits CUMULATIVE residuals, a re-entering
+edge must first exchange a dense catch-up of the current references
+(version-0 packet, priced at ``catchup_bytes``) before any in-round
+residual is applicable; the bounded gate waits for that catch-up (which is
+how the bound stays enforced under churn), the full policy mixes the
+frozen lag-old history until it lands.  ``advance_lag`` is the per-round
+bookkeeping step the engine drives.
 """
 
 from __future__ import annotations
@@ -69,11 +85,15 @@ class AsyncTimeline:
     """One K-step loop's simulated execution.
 
     ages        (K, m, m) int32 — per-step per-edge version age used by the
-                mixing (symmetric; 0 on non-edges and the diagonal)
+                mixing (symmetric; 0 on non-edges, inactive edges and the
+                diagonal).  Under edge churn an edge re-entering with
+                version lag L sees ``age = k + L`` until its catch-up
+                packet lands.
     mix_s       (K, m) absolute sim time of each node's step-k mix
     finish_s    (K, m) absolute compute-finish times
     end_s       when the loop (incl. in-flight packets) has fully drained
-    wire_bytes  total bytes put on all links (per-link accounting)
+    wire_bytes  total bytes put on all links (per-link accounting,
+                including re-entry catch-up packets)
     """
 
     ages: np.ndarray
@@ -108,6 +128,11 @@ class AsyncScheduler:
         m = fabric.topo.m
         self.clock = np.zeros(m)        # per-node absolute clocks
         self.egress_free = np.zeros(m)  # per-node NIC availability
+        # per-edge reference-version lag (symmetric, versions behind
+        # round-start); stays all-zero on a static graph, grows while a
+        # schedule keeps an edge inactive, resets when the drain catches a
+        # re-entered edge up
+        self.version_lag = np.zeros((m, m), dtype=np.int64)
         self._mult_round: int | None = None
         self._mult: np.ndarray | None = None
         self._rng = None
@@ -127,7 +152,35 @@ class AsyncScheduler:
     def reset(self) -> None:
         self.clock[:] = 0.0
         self.egress_free[:] = 0.0
+        self.version_lag[:] = 0
         self._mult_round = None
+
+    # ------------------------------------------------------------------
+    def _active_neighbors(self, active: np.ndarray | None):
+        """Per-node neighbor lists restricted to ``active`` (same iteration
+        order as the base topology so static-graph runs draw the fabric RNG
+        identically with or without an all-true mask)."""
+        neighbors = self.fabric.topo.neighbors
+        if active is None:
+            return neighbors
+        return [
+            [j for j in neigh if active[i, j]]
+            for i, neigh in enumerate(neighbors)
+        ]
+
+    def advance_lag(self, active: np.ndarray | None, versions: int) -> None:
+        """Per-round age bookkeeping across edge churn: the round-boundary
+        drain catches ACTIVE edges up (lag -> 0); every inactive base edge
+        falls ``versions`` further behind (the reference versions its
+        endpoints produced but never exchanged).  An edge absent for r
+        rounds therefore re-enters with lag r * versions — never age 0."""
+        topo = self.fabric.topo
+        for i in range(topo.m):
+            for j in topo.neighbors[i]:
+                if active is None or active[i, j]:
+                    self.version_lag[i, j] = 0
+                else:
+                    self.version_lag[i, j] += versions
 
     @property
     def history_depth(self) -> int:
@@ -149,46 +202,109 @@ class AsyncScheduler:
         compute_s_step: float = 0.0,
         loop: str = "loop",
         trace: bool = True,
+        active: np.ndarray | None = None,
+        lag: np.ndarray | None = None,
+        catchup_bytes: int = 0,
     ) -> AsyncTimeline:
         """Execute K gossip steps; ``node_bytes`` is the per-node packet
         size (int or length-m sequence) — each node sends that many bytes
-        to each neighbor each step."""
+        to each neighbor each step.
+
+        ``active`` ((m, m) bool, symmetric) restricts the loop to a
+        schedule round's edge set; ``lag`` ((m, m) int, symmetric —
+        typically ``self.version_lag``) is each pair's reference-version
+        lag at loop start.  Active edges with positive lag first exchange a
+        dense version-0 catch-up packet of ``catchup_bytes`` (cumulative
+        residuals are useless without it); until it lands the edge mixes
+        its frozen history at ``age = k + lag``."""
         topo = self.fabric.topo
         m = topo.m
-        neighbors = topo.neighbors
+        neighbors = self._active_neighbors(active)
         mult, rng = self._round_state(round_idx)
         if np.isscalar(node_bytes):
             node_bytes = np.full(m, int(node_bytes))
         else:
             node_bytes = np.asarray(node_bytes, dtype=np.int64)
+        if lag is None:
+            lag = np.zeros((m, m), dtype=np.int64)
+        else:
+            lag = np.asarray(lag, dtype=np.int64)
         S = 0 if self.policy == "sync" else self.bound
 
-        # arrive[v-1, j, i]: absolute arrival at i of j's version-v packet
-        arrive = np.full((K, m, m), np.inf)
+        if catchup_bytes <= 0 and any(
+            lag[i, j] > 0 for i in range(m) for j in neighbors[i]
+        ):
+            raise ValueError(
+                "run_loop: an active edge has version lag > 0 but "
+                "catchup_bytes is 0 — a re-entering edge must exchange a "
+                "dense catch-up before residuals apply (otherwise the "
+                "sync/bounded gates would wait forever); pass the dense "
+                "per-node reference size as catchup_bytes"
+            )
+
+        # arrive[v, j, i]: absolute arrival at i of j's version-v packet.
+        # Slot 0 is the round-start version: already held (-inf) on edges
+        # with zero lag, else the re-entry catch-up packet's arrival.
+        arrive = np.full((K + 1, m, m), np.inf)
+        for i in range(m):
+            for j in neighbors[i]:
+                if lag[i, j] == 0:
+                    arrive[0, i, j] = -np.inf
         mix_t = np.zeros((K, m))
         finish_t = np.zeros((K, m))
         ages = np.zeros((K, m, m), dtype=np.int32)
         total_bytes = 0
         tr = self.fabric.trace if trace else None
 
+        # ---- re-entry catch-up: dense version-0 refs on lagged edges ------
+        for i in range(m):
+            for j in neighbors[i]:
+                if lag[i, j] == 0 or catchup_bytes <= 0:
+                    continue
+                nbytes = int(catchup_bytes)
+                depart = max(self.egress_free[i], self.clock[i])
+                self.egress_free[i] = depart + self.fabric.egress_s(nbytes)
+                arrive[0, i, j] = self.fabric.message_arrival(
+                    depart, nbytes, rng
+                )
+                total_bytes += nbytes
+                if tr is not None:
+                    tr.add_transfer(
+                        TransferEvent(
+                            round=round_idx, phase=-2, src=i, dst=j,
+                            bytes=nbytes, t_start=depart,
+                            t_end=arrive[0, i, j],
+                        )
+                    )
+
         for k in range(K):
             # ---- gate + mix time ------------------------------------------
             if self.policy == "sync":
                 # global barrier: all clocks and all version-k arrivals
+                # (incl. outstanding catch-ups at k = 0)
                 t = float(self.clock.max())
-                if k >= 1:
-                    for i in range(m):
-                        for j in neighbors[i]:
-                            t = max(t, arrive[k - 1, j, i])
+                for i in range(m):
+                    for j in neighbors[i]:
+                        if k >= 1:
+                            t = max(t, arrive[k, j, i])
+                        elif lag[i, j] > 0:
+                            t = max(t, arrive[0, j, i])
                 mix_t[k, :] = t
             else:
                 for i in range(m):
                     t = self.clock[i]
                     if self.policy == "bounded":
                         need = k - S  # oldest version i may mix at step k
-                        if need >= 1:
-                            for j in neighbors[i]:
-                                t = max(t, arrive[need - 1, j, i])
+                        for j in neighbors[i]:
+                            if lag[j, i] > 0 and need > -int(lag[j, i]):
+                                # the frozen pre-dropout version is too old
+                                # for the bound, and residuals are useless
+                                # without their catch-up base — wait for it
+                                # at EVERY such step (jitter can land it
+                                # after later residual packets)
+                                t = max(t, arrive[0, j, i])
+                            if need >= 1:
+                                t = max(t, arrive[need, j, i])
                     mix_t[k, i] = t
 
             # ---- compute + transmit ---------------------------------------
@@ -208,7 +324,7 @@ class AsyncScheduler:
                     nbytes = int(node_bytes[i])
                     depart = max(self.egress_free[i], finish_t[k, i])
                     self.egress_free[i] = depart + self.fabric.egress_s(nbytes)
-                    arrive[k, i, j] = self.fabric.message_arrival(
+                    arrive[k + 1, i, j] = self.fabric.message_arrival(
                         depart, nbytes, rng
                     )
                     total_bytes += nbytes
@@ -217,37 +333,50 @@ class AsyncScheduler:
                             TransferEvent(
                                 round=round_idx, phase=k, src=i, dst=j,
                                 bytes=nbytes, t_start=depart,
-                                t_end=arrive[k, i, j],
+                                t_end=arrive[k + 1, i, j],
                             )
                         )
 
         # ---- per-edge version ages (symmetric -> Eq. 7 preserved) ---------
         # held[k, j, i] = newest version from j that i holds at its step-k
         # mix; the edge mixes on the newest COMMON version min(held both
-        # ways, k), as with sequence-numbered acks.
+        # ways, k), as with sequence-numbered acks.  In-round residuals
+        # (v >= 1) only count once the catch-up / round-start version is
+        # held (cumulative residuals need the full prefix base); with
+        # nothing held the pair falls back to its frozen pre-dropout
+        # common version, lag versions behind round start.
         for k in range(K):
             for i in range(m):
                 for j in neighbors[i]:
                     if j < i:
                         continue  # fill symmetric pairs once
-                    held_i = 0
-                    for v in range(min(k, K), 0, -1):
-                        if arrive[v - 1, j, i] <= mix_t[k, i]:
-                            held_i = v
-                            break
-                    held_j = 0
-                    for v in range(min(k, K), 0, -1):
-                        if arrive[v - 1, i, j] <= mix_t[k, j]:
-                            held_j = v
-                            break
-                    common = min(held_i, held_j, k)
+                    held_i = held_j = None
+                    if arrive[0, j, i] <= mix_t[k, i]:
+                        held_i = 0
+                        for v in range(min(k, K), 0, -1):
+                            if arrive[v, j, i] <= mix_t[k, i]:
+                                held_i = v
+                                break
+                    if arrive[0, i, j] <= mix_t[k, j]:
+                        held_j = 0
+                        for v in range(min(k, K), 0, -1):
+                            if arrive[v, i, j] <= mix_t[k, j]:
+                                held_j = v
+                                break
+                    if held_i is None or held_j is None:
+                        common = -int(lag[i, j])
+                    else:
+                        common = min(held_i, held_j, k)
                     ages[k, i, j] = ages[k, j, i] = k - common
 
         # ---- drain: the loop is over when every packet has landed ---------
         end = float(self.clock.max()) if m else 0.0
         for i in range(m):
             for j in neighbors[i]:
-                end = max(end, float(arrive[:, i, j].max(initial=end)))
+                landed = arrive[:, i, j]
+                landed = landed[np.isfinite(landed)]
+                if landed.size:
+                    end = max(end, float(landed.max()))
         return AsyncTimeline(
             ages=ages, mix_s=mix_t, finish_s=finish_t, end_s=end,
             wire_bytes=total_bytes,
@@ -260,12 +389,16 @@ class AsyncScheduler:
         round_idx: int,
         compute_s: float = 0.0,
         label: str = "outer",
+        active: np.ndarray | None = None,
     ) -> float:
         """One barrier-synchronized dense exchange (the outer x / s_x
         broadcasts stay synchronous — Algorithm 1's round boundary).  All
-        clocks join at the phase end; returns the phase end time."""
+        clocks join at the phase end; returns the phase end time.
+        ``active`` restricts the exchange to a schedule round's edge set
+        (dropped links carry no outer traffic either)."""
         topo = self.fabric.topo
         m = topo.m
+        neighbors = self._active_neighbors(active)
         mult, rng = self._round_state(round_idx)
         if np.isscalar(node_bytes):
             node_bytes = np.full(m, int(node_bytes))
@@ -283,7 +416,7 @@ class AsyncScheduler:
             self.clock[i] = ready
             end = max(end, ready)
         for i in range(m):
-            for j in topo.neighbors[i]:
+            for j in neighbors[i]:
                 nbytes = int(node_bytes[i])
                 depart = max(self.egress_free[i], self.clock[i])
                 self.egress_free[i] = depart + self.fabric.egress_s(nbytes)

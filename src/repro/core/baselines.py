@@ -353,22 +353,25 @@ def madsbo_round_async(
     ages_higp: jax.Array,
     depth: int,
     delayed: bool = True,
+    damping: str = "none",
+    decay: float = 0.5,
 ) -> tuple[MADSBOState, dict]:
     """MADSBO round accepting the AsyncScheduler's per-step edge ages: the
     LL and HIGP gossip loops mix age-gated VERSIONS of the transmitted
     iterates (dense value gossip — no reference points); everything else is
     the shared `_madsbo_round_core`.  With ``delayed=False`` the
     synchronous scans are used, so zero-age rounds are bit-identical to
-    ``madsbo_round``."""
+    ``madsbo_round``.  ``damping`` applies the staleness-adaptive mixing
+    policy (`repro.async_gossip.mixing.DAMPING_POLICIES`)."""
     from repro.async_gossip.engine import delayed_value_scan
 
     W = jnp.asarray(topo.W, jnp.float32)
     if delayed:
         ll_fn = lambda y0, upd: delayed_value_scan(
-            y0, W, cfg.gamma, ages_ll, depth, upd
+            y0, W, cfg.gamma, ages_ll, depth, upd, damping, decay
         )
         higp_fn = lambda v0, upd: delayed_value_scan(
-            v0, W, cfg.gamma, ages_higp, depth, upd
+            v0, W, cfg.gamma, ages_higp, depth, upd, damping, decay
         )
     else:
         ll_fn = lambda y0, upd: value_gossip_scan(y0, W, cfg.gamma, cfg.K, upd)
@@ -384,17 +387,19 @@ def mdbo_round_async(
     ages_ll: jax.Array,
     depth: int,
     delayed: bool = True,
+    damping: str = "none",
+    decay: float = 0.5,
 ) -> tuple[MDBOState, dict]:
     """MDBO round with a staleness-gated LL gossip loop; the Neumann series
     is local compute (no gossip in this realization) and the UL update
     stays at the barrier round boundary — both live in the shared
-    `_mdbo_round_core`."""
+    `_mdbo_round_core`.  ``damping`` as in `madsbo_round_async`."""
     from repro.async_gossip.engine import delayed_value_scan
 
     W = jnp.asarray(topo.W, jnp.float32)
     if delayed:
         ll_fn = lambda y0, upd: delayed_value_scan(
-            y0, W, cfg.gamma, ages_ll, depth, upd
+            y0, W, cfg.gamma, ages_ll, depth, upd, damping, decay
         )
     else:
         ll_fn = lambda y0, upd: value_gossip_scan(y0, W, cfg.gamma, cfg.K, upd)

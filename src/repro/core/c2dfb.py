@@ -286,6 +286,8 @@ def run(
     async_mode: str | None = None,
     staleness_bound: int = 2,
     ledger=None,
+    mixing_damping: str = "none",
+    damping_decay: float = 0.5,
 ) -> tuple[C2DFBState, dict]:
     """Run T outer rounds under lax.scan; returns final state + stacked metrics.
 
@@ -304,19 +306,32 @@ def run(
     timing), "bounded" (nodes run ahead up to ``staleness_bound`` inner
     steps), or "full" (never wait; mix whatever reference points have
     arrived).  Requires ``fabric``; ``ledger`` (a
-    `repro.async_gossip.StalenessLedger`) records per-edge staleness."""
+    `repro.async_gossip.StalenessLedger`) records per-edge staleness.
+    ``async_mode`` COMPOSES with ``schedule``: each round runs on the
+    schedule's active edge set, dropped edges freeze their reference
+    history and re-enter with their true version age (see
+    `repro.async_gossip.engine.run_async`).  ``mixing_damping`` damps each
+    edge's weight by its current staleness ("none" / "inverse-age" /
+    "exp-decay", async modes only) — inverse-age keeps the fully-async
+    policy contractive at mixing steps where undamped delayed gossip
+    diverges."""
     if async_mode is not None:
         from repro.async_gossip.engine import run_async
 
         if fabric is None:
             raise ValueError("async_mode requires a NetworkFabric")
-        if schedule is not None:
-            raise ValueError(
-                "async_mode does not compose with topology schedules yet"
-            )
         return run_async(
             problem, topo, cfg, x0, y0, T, key, fabric,
             policy=async_mode, bound=staleness_bound, ledger=ledger,
+            schedule=schedule, mixing_damping=mixing_damping,
+            damping_decay=damping_decay,
+        )
+    if mixing_damping != "none":
+        raise ValueError(
+            "mixing_damping is a staleness policy: it needs per-edge ages, "
+            "which only the async engine produces — pass async_mode="
+            '"sync"/"bounded"/"full" (synchronous gossip has zero ages, so '
+            "damping would be a silent no-op)"
         )
     state = init_state(problem, cfg, x0, y0)
 
@@ -326,13 +341,23 @@ def run(
         return st, metrics
 
     keys = jax.random.split(key, T)
-    Ws = (
-        jnp.asarray(schedule.stack(T), jnp.float32)
-        if schedule is not None
-        else jnp.broadcast_to(
+    if schedule is not None:
+        from repro.net.dynamic import validate_schedule_stack
+
+        # the base-edge subset check only binds when a fabric prices the
+        # run (non-base edges cannot be priced); pure-math scans accept
+        # any valid gossip matrix
+        Ws = jnp.asarray(
+            validate_schedule_stack(
+                schedule.stack(T), T, topo.m,
+                base=topo if fabric is not None else None,
+            ),
+            jnp.float32,
+        )
+    else:
+        Ws = jnp.broadcast_to(
             jnp.asarray(topo.W, jnp.float32), (T,) + topo.W.shape
         )
-    )
     scan = jax.jit(lambda s: jax.lax.scan(body, s, (keys, Ws))) if jit else (
         lambda s: jax.lax.scan(body, s, (keys, Ws))
     )

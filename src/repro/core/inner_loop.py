@@ -101,7 +101,8 @@ def inner_apply(
     This is the mix/transmit split: the synchronous path feeds
     ``mix_delta_dense`` of the current references, the async engine
     (`repro.async_gossip`) feeds staleness-gated deltas built from reference
-    histories and per-edge arrival times.  Also returns the two transmitted
+    histories and per-edge arrival times (optionally with age-damped
+    weights — `mixing.DAMPING_POLICIES`).  Also returns the two transmitted
     messages ``(q_d, q_s)`` so callers can meter exact per-message bytes
     inside the scan (`repro.net.wire.scan_tree_bytes`).
     """
@@ -174,8 +175,9 @@ def inner_loop(
     nnz/byte counter), not a host-side steady-state estimate.
 
     `repro.async_gossip.engine.async_inner_loop` mirrors this scan body
-    with a staleness-gated mix and a history carry — keep the two bodies
-    and their metrics keys in lockstep.
+    with a staleness-gated (and optionally age-damped) mix plus a history
+    carry that can persist ACROSS rounds under topology schedules — keep
+    the two bodies and their metrics keys in lockstep.
 
     With a ``repro.net.fabric.NetworkFabric`` (eager mode only — the fabric
     is host-side numpy), metrics additionally carry ``wire_bytes`` (exact

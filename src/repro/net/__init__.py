@@ -19,7 +19,10 @@ from repro.net.dynamic import (
     RandomEdgeSchedule,
     StaticSchedule,
     TopologySchedule,
+    active_edge_masks,
     is_jointly_connected,
+    schedule_version_lags,
+    validate_schedule_stack,
 )
 from repro.net.fabric import (
     PROFILES,
@@ -62,6 +65,7 @@ __all__ = [
     "TopologySchedule",
     "TransferEvent",
     "WireCodec",
+    "active_edge_masks",
     "codec_for",
     "edge_list",
     "is_jointly_connected",
@@ -69,4 +73,6 @@ __all__ = [
     "measure_compressed_tree_bytes",
     "measure_tree_bytes",
     "scan_tree_bytes",
+    "schedule_version_lags",
+    "validate_schedule_stack",
 ]

@@ -35,10 +35,11 @@ class TopologySchedule:
         raise NotImplementedError
 
     def active_edges(self, t: int) -> tuple[tuple[int, int], ...]:
-        """Directed edges carrying traffic in round t (derived from W)."""
+        """Directed edges carrying traffic in round t (derived from W via
+        the shared ``active_edge_masks`` threshold)."""
         W = self.weights(t)
         m = W.shape[0]
-        off = (W > 1e-12) & ~np.eye(m, dtype=bool)
+        off = active_edge_masks(W[None])[0]
         return tuple((i, j) for i in range(m) for j in range(m) if off[i, j])
 
     def stack(self, T: int) -> np.ndarray:
@@ -165,6 +166,93 @@ class BConnectedSchedule(TopologySchedule):
         return metropolis_weights(G, self.base.m)
 
 
+#: Weight threshold below which an off-diagonal entry counts as "no edge"
+#: — shared by every activity derivation in this module so the engine's
+#: simulated edge set can never disagree with the fabric-facing one.
+ACTIVE_EDGE_EPS = 1e-12
+
+
+def validate_schedule_stack(
+    Ws: np.ndarray, T: int, m: int, atol: float = 1e-8, base=None
+) -> np.ndarray:
+    """Check a stacked (T, m, m) schedule before it drives a run; raises a
+    ValueError naming the exact defect (the async engine and `c2dfb.run`
+    call this so malformed schedule/async combos fail loudly, not with a
+    shape error three layers down a scan).  ``base`` (a Topology) also
+    rejects rounds activating edges OUTSIDE the base graph — the
+    scheduler's timelines, lag bookkeeping and wire pricing only cover
+    base edges, so a phantom edge would mix at permanent zero age for
+    free."""
+    Ws = np.asarray(Ws, dtype=np.float64)
+    if Ws.ndim != 3 or Ws.shape[0] != T or Ws.shape[1:] != (m, m):
+        raise ValueError(
+            f"schedule stack has shape {Ws.shape}; expected ({T}, {m}, {m}) "
+            f"— one symmetric mixing matrix per round for {m} nodes"
+        )
+    base_mask = None
+    if base is not None:
+        base_mask = np.zeros((m, m), dtype=bool)
+        for i, neigh in enumerate(base.neighbors):
+            base_mask[i, list(neigh)] = True
+    for t in range(T):
+        W = Ws[t]
+        if not np.allclose(W, W.T, atol=atol):
+            raise ValueError(
+                f"schedule round {t}: mixing matrix is not symmetric "
+                f"(max |W - W^T| = {np.abs(W - W.T).max():.3g}); gossip "
+                "under Assumption 1 needs symmetric doubly-stochastic W"
+            )
+        if not np.allclose(W.sum(axis=1), 1.0, atol=atol):
+            raise ValueError(
+                f"schedule round {t}: rows do not sum to 1 "
+                f"(max |row_sum - 1| = {np.abs(W.sum(axis=1) - 1).max():.3g})"
+            )
+        if W.min() < -atol:
+            raise ValueError(
+                f"schedule round {t}: negative weight {W.min():.3g}"
+            )
+        if base_mask is not None:
+            phantom = active_edge_masks(W[None])[0] & ~base_mask
+            if phantom.any():
+                i, j = np.argwhere(phantom)[0]
+                raise ValueError(
+                    f"schedule round {t}: edge ({i}, {j}) carries weight "
+                    f"{W[i, j]:.3g} but is not in the base topology — the "
+                    "network only prices base edges, so it would mix as a "
+                    "free zero-latency link"
+                )
+    return Ws
+
+
+def active_edge_masks(Ws: np.ndarray) -> np.ndarray:
+    """(T, m, m) boolean masks of the edges carrying traffic each round
+    (off-diagonal entries above ``ACTIVE_EDGE_EPS``)."""
+    Ws = np.asarray(Ws)
+    m = Ws.shape[-1]
+    return (Ws > ACTIVE_EDGE_EPS) & ~np.eye(m, dtype=bool)
+
+
+def schedule_version_lags(masks: np.ndarray, versions_per_round: int):
+    """Replay the scheduler's lag bookkeeping over a whole schedule:
+    returns ``(lags, max_active_lag)`` where ``lags[t]`` is each edge
+    pair's reference-version lag AT THE START of round t (an edge inactive
+    for r consecutive rounds accumulates ``r * versions_per_round``), and
+    ``max_active_lag`` is the largest lag any ACTIVE edge ever re-enters
+    with — the extra history depth the delayed mixing operator must carry.
+    """
+    T, m, _ = masks.shape
+    lag = np.zeros((m, m), dtype=np.int64)
+    lags = np.zeros((T, m, m), dtype=np.int64)
+    max_active = 0
+    for t in range(T):
+        lags[t] = lag
+        act = masks[t]
+        if act.any():
+            max_active = max(max_active, int(lag[act].max()))
+        lag = np.where(act, 0, lag + versions_per_round)
+    return lags, max_active
+
+
 def is_jointly_connected(
     schedule: TopologySchedule, t0: int, window: int
 ) -> bool:
@@ -173,7 +261,6 @@ def is_jointly_connected(
     G = nx.Graph()
     G.add_nodes_from(range(m))
     for t in range(t0, t0 + window):
-        W = schedule.weights(t)
-        off = (W > 1e-12) & ~np.eye(m, dtype=bool)
+        off = active_edge_masks(schedule.weights(t)[None])[0]
         G.add_edges_from(zip(*np.nonzero(off)))
     return nx.is_connected(G)

@@ -11,3 +11,17 @@ os.environ.setdefault("JAX_ENABLE_X64", "0")
 import jax  # noqa: E402
 
 jax.config.update("jax_default_matmul_precision", "highest")
+
+# Fixed-seed hypothesis profile for the property suites: CI exports
+# HYPOTHESIS_PROFILE=ci so `pytest -m property` is reproducible run-to-run
+# (derandomize pins the example stream; no deadline — jit warmup is slow).
+try:
+    from hypothesis import settings as _hyp_settings
+
+    _hyp_settings.register_profile(
+        "ci", max_examples=25, derandomize=True, deadline=None
+    )
+    if os.environ.get("HYPOTHESIS_PROFILE"):
+        _hyp_settings.load_profile(os.environ["HYPOTHESIS_PROFILE"])
+except ImportError:
+    pass

@@ -1,0 +1,174 @@
+"""Property-based invariant suite for staleness-adaptive mixing (ISSUE 3).
+
+For randomly drawn topologies, dropout patterns, symmetric age tensors and
+damping policies, the realized per-step mixing operator must ALWAYS be
+
+* symmetric and row-stochastic (valid Assumption-1 gossip operator — the
+  diagonal renormalization absorbs exactly the damped-away mass),
+* non-negative,
+* mean-free in delta form (the Eq. 7 mean-dynamics invariant survives any
+  symmetric age pattern AND any damping policy),
+* and BIT-exact with the undamped PR-2 operator when every age is zero.
+
+Runs under hypothesis when installed (CI registers a fixed-seed ``ci``
+profile in conftest.py); otherwise `_hypothesis_compat` replays the same
+strategies as seeded deterministic draws so the invariants stay covered.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.async_gossip import (
+    DAMPING_POLICIES,
+    damp_weights,
+    damping_factor,
+    init_history,
+    mix_delta_delayed,
+    push_history,
+)
+from repro.core.topology import erdos_renyi, metropolis_weights, ring, two_hop
+from repro.core.types import node_mean
+
+pytestmark = pytest.mark.property
+
+
+def _topo(kind: str, m: int):
+    return {"ring": ring, "two_hop": two_hop}.get(
+        kind, lambda m_: erdos_renyi(m_, 0.5, seed=1)
+    )(m)
+
+
+def _random_dropout_W(topo, rng, p_drop: float = 0.3) -> np.ndarray:
+    """Metropolis weights on a random surviving subgraph — one schedule
+    round's realized matrix (possibly disconnected: still a valid
+    operator)."""
+    import networkx as nx
+
+    G = nx.Graph()
+    G.add_nodes_from(range(topo.m))
+    for i, neigh in enumerate(topo.neighbors):
+        for j in neigh:
+            if j > i and rng.random() >= p_drop:
+                G.add_edge(i, j)
+    return metropolis_weights(G, topo.m)
+
+
+def _random_sym_ages(rng, m: int, max_age: int) -> np.ndarray:
+    a = rng.integers(0, max_age + 1, size=(m, m))
+    a = np.triu(a, k=1)
+    return (a + a.T).astype(np.int32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.sampled_from(["ring", "two_hop", "er"]),
+    st.integers(min_value=4, max_value=10),
+    st.integers(min_value=0, max_value=6),
+    st.sampled_from(DAMPING_POLICIES),
+    st.floats(min_value=0.1, max_value=1.0),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_damped_operator_stays_valid_gossip_matrix(
+    kind, m, max_age, policy, decay, seed
+):
+    """Realized matrix: symmetric, row- AND column-stochastic, >= 0 under
+    every (dropout pattern, age tensor, policy, decay) draw."""
+    rng = np.random.default_rng(seed)
+    topo = _topo(kind, m)
+    W = _random_dropout_W(topo, rng)
+    ages = _random_sym_ages(rng, topo.m, max_age)
+    Wd = np.asarray(
+        damp_weights(jnp.asarray(W, jnp.float32), jnp.asarray(ages), policy,
+                     decay)
+    )
+    np.testing.assert_allclose(Wd, Wd.T, atol=1e-6)
+    np.testing.assert_allclose(Wd.sum(axis=1), 1.0, atol=1e-5)
+    np.testing.assert_allclose(Wd.sum(axis=0), 1.0, atol=1e-5)
+    assert Wd.min() >= -1e-7
+    # damping never strengthens an edge, and kills no zero-age edge
+    off = ~np.eye(topo.m, dtype=bool)
+    assert (Wd[off] <= W[off] + 1e-7).all()
+    np.testing.assert_array_equal(Wd[off & (ages == 0)],
+                                  W.astype(np.float32)[off & (ages == 0)])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.sampled_from(["ring", "two_hop", "er"]),
+    st.integers(min_value=4, max_value=10),
+    st.integers(min_value=2, max_value=24),
+    st.sampled_from(DAMPING_POLICIES),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_zero_ages_reproduce_undamped_operator_bit_exactly(
+    kind, m, d, policy, seed
+):
+    """age == 0 everywhere => the damped operator IS the PR-2 operator,
+    bit for bit (damping_factor(0) == 1.0 exactly)."""
+    rng = np.random.default_rng(seed)
+    topo = _topo(kind, m)
+    W = jnp.asarray(topo.W, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(topo.m, d)), jnp.float32)
+    hist = push_history(
+        init_history(x, 3), jnp.asarray(rng.normal(size=x.shape), jnp.float32)
+    )
+    zeros = jnp.zeros((topo.m, topo.m), jnp.int32)
+    want = mix_delta_delayed(W, hist, zeros, "none")
+    got = mix_delta_delayed(W, hist, zeros, policy)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.sampled_from(["ring", "two_hop", "er"]),
+    st.integers(min_value=4, max_value=10),
+    st.integers(min_value=1, max_value=4),
+    st.sampled_from(DAMPING_POLICIES),
+    st.floats(min_value=0.1, max_value=1.0),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_damped_delta_is_mean_free(kind, m, max_age, policy, decay, seed):
+    """The Eq. 7 invariant's engine: for symmetric ages the damped delta
+    has zero node-mean — damping is symmetric in (i, j), so the pairwise
+    cancellation survives every policy."""
+    rng = np.random.default_rng(seed)
+    topo = _topo(kind, m)
+    W = jnp.asarray(_random_dropout_W(rng=rng, topo=topo), jnp.float32)
+    depth = max_age + 1
+    hist = init_history(
+        jnp.asarray(rng.normal(size=(topo.m, 7)), jnp.float32), depth
+    )
+    for _ in range(max_age):
+        hist = push_history(
+            hist, jnp.asarray(rng.normal(size=(topo.m, 7)), jnp.float32)
+        )
+    ages = jnp.asarray(_random_sym_ages(rng, topo.m, max_age))
+    delta = mix_delta_delayed(W, hist, ages, policy, decay)
+    np.testing.assert_allclose(
+        np.asarray(node_mean(delta)), 0.0, atol=1e-5
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=12),
+    st.sampled_from(DAMPING_POLICIES),
+    st.floats(min_value=0.1, max_value=1.0),
+)
+def test_damping_factor_monotone_in_age(age, policy, decay):
+    """phi(0) == 1 exactly; phi is non-increasing and stays positive."""
+    f0 = float(damping_factor(jnp.asarray(0), policy, decay))
+    fa = float(damping_factor(jnp.asarray(age), policy, decay))
+    fa1 = float(damping_factor(jnp.asarray(age + 1), policy, decay))
+    assert f0 == 1.0
+    assert 0.0 < fa1 <= fa <= 1.0
+
+
+def test_unknown_damping_policy_rejected():
+    with pytest.raises(ValueError, match="damping"):
+        damping_factor(jnp.asarray(1), "quadratic-age")
+    with pytest.raises(ValueError, match="decay"):
+        damping_factor(jnp.asarray(1), "exp-decay", decay=0.0)

@@ -305,34 +305,75 @@ def test_async_baseline_bounded_geo(bundle):
     assert (np.asarray(mets["sim_seconds"]) > 0).all()
 
 
-def test_delayed_consensus_stability():
-    """Pure delayed gossip x <- x + gamma * mix_delayed(x): contraction
-    survives age-1 staleness at gamma = 0.5 and age-2 at gamma = 0.3, but
-    NOT age-2 at gamma = 0.5 — the classic gamma x staleness stability
-    trade-off the bounded policy's bound must be chosen against."""
+def _delayed_gossip_final_err(S, gamma, damping="none", steps=60):
+    """Pure delayed gossip x <- x + gamma * mix_delayed(x) with uniform
+    age-S staleness; returns final/initial consensus error (< 1 means the
+    operator still contracts)."""
     from repro.async_gossip import init_history, mix_delta_delayed, push_history
 
     topo = ring(6)
     W = jnp.asarray(topo.W, jnp.float32)
-
-    def final_err(S, gamma, steps=60):
-        x = jnp.asarray(
-            np.random.default_rng(0).normal(size=(6, 4)), jnp.float32
+    x = jnp.asarray(
+        np.random.default_rng(0).normal(size=(6, 4)), jnp.float32
+    )
+    err0 = float(jnp.sum((x - x.mean(0, keepdims=True)) ** 2))
+    hist = init_history(x, S + 1)
+    base = np.zeros((6, 6), np.int32)
+    for i in range(6):
+        for j in topo.neighbors[i]:
+            base[i, j] = S
+    for k in range(steps):
+        a = jnp.minimum(jnp.asarray(base), k)
+        x = jax.tree.map(
+            lambda v, d: v + gamma * d,
+            x, mix_delta_delayed(W, hist, a, damping),
         )
-        err0 = float(jnp.sum((x - x.mean(0, keepdims=True)) ** 2))
-        hist = init_history(x, S + 1)
-        base = np.zeros((6, 6), np.int32)
-        for i in range(6):
-            for j in topo.neighbors[i]:
-                base[i, j] = S
-        for k in range(steps):
-            a = jnp.minimum(jnp.asarray(base), k)
-            x = jax.tree.map(
-                lambda v, d: v + gamma * d, x, mix_delta_delayed(W, hist, a)
-            )
-            hist = push_history(hist, x)
-        return float(jnp.sum((x - x.mean(0, keepdims=True)) ** 2)) / err0
+        hist = push_history(hist, x)
+    return float(jnp.sum((x - x.mean(0, keepdims=True)) ** 2)) / err0
 
-    assert final_err(1, 0.5) < 1e-6
-    assert final_err(2, 0.3) < 1e-4
-    assert final_err(2, 0.5) > 1e-2  # past the stability limit
+
+def test_delayed_consensus_stability():
+    """Contraction survives age-1 staleness at gamma = 0.5 and age-2 at
+    gamma = 0.3, but NOT age-2 at gamma = 0.5 — the classic
+    gamma x staleness stability trade-off the bounded policy's bound must
+    be chosen against."""
+    assert _delayed_gossip_final_err(1, 0.5) < 1e-6
+    assert _delayed_gossip_final_err(2, 0.3) < 1e-4
+    assert _delayed_gossip_final_err(2, 0.5) > 1e-2  # past the limit
+
+
+def test_adaptive_damping_extends_stability_envelope():
+    """ISSUE 3 acceptance (operator level): at gamma x staleness products
+    where the UNDAMPED delayed operator diverges outright, inverse-age
+    damping restores contraction — the damped effective step
+    gamma / (1 + a) re-enters the stability margin while zero-age edges
+    keep the full step."""
+    assert _delayed_gossip_final_err(2, 0.7, "none") > 1e2   # diverges
+    assert _delayed_gossip_final_err(3, 0.5, "none") > 1e2   # diverges
+    assert _delayed_gossip_final_err(2, 0.7, "inverse-age") < 1e-4
+    assert _delayed_gossip_final_err(3, 0.5, "inverse-age") < 1e-2
+    assert _delayed_gossip_final_err(2, 0.7, "exp-decay") < 1e-3
+
+
+def test_inverse_age_damping_rescues_fully_async_c2dfb(bundle):
+    """ISSUE 3 acceptance (end to end): at gamma_in = 0.5 — a mixing step
+    the SYNCHRONOUS protocol is perfectly happy with — the fully-async
+    engine under geo latency + stragglers diverges undamped, and converges
+    with inverse-age damping, identical hyperparameters otherwise."""
+    topo = ring(6)
+    cfg = C2DFBConfig(lam=10.0, eta_out=0.3, gamma_out=0.5, eta_in=0.3,
+                      gamma_in=0.5, K=6, compressor="topk", comp_ratio=0.5)
+    mk = lambda: make_fabric(topo, profile="geo", straggler="lognormal",
+                             sigma=0.8, compute_s=0.05, seed=1)
+    _, m_raw = run(bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=6,
+                   key=KEY, fabric=mk(), async_mode="full")
+    _, m_damp = run(bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=6,
+                    key=KEY, fabric=mk(), async_mode="full",
+                    mixing_damping="inverse-age")
+    # both runs actually experienced staleness (the regime being tested)
+    assert np.asarray(m_raw["staleness_max"]).max() >= 2
+    err_raw = float(np.asarray(m_raw["y_consensus_err"])[-1])
+    err_damp = float(np.asarray(m_damp["y_consensus_err"])[-1])
+    assert not (err_raw < 1e3), f"undamped unexpectedly stable: {err_raw}"
+    assert err_damp < 1.0, f"inverse-age failed to stabilize: {err_damp}"
+    assert np.isfinite(np.asarray(m_damp["hypergrad_norm"])).all()

@@ -1,0 +1,320 @@
+"""Async engine x time-varying topology composition (ISSUE 3).
+
+`c2dfb.run(async_mode=..., schedule=...)` now composes: each round runs on
+the schedule's active edge set, and the scheduler carries age bookkeeping
+across edge churn — an edge that sits rounds out freezes its reference
+history and re-enters with its TRUE version age (paying a dense catch-up
+transfer), never age 0.  These tests pin the composition semantics, the
+bounded policy's guarantee under churn, and the useful-error contract for
+malformed schedule/async combos.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.async_gossip import StalenessLedger
+from repro.core.c2dfb import C2DFBConfig, run
+from repro.core.topology import metropolis_weights, ring, two_hop
+from repro.data.bilevel_tasks import coefficient_tuning_task
+from repro.net import (
+    LatencyDropoutSchedule,
+    StaticSchedule,
+    TopologySchedule,
+    active_edge_masks,
+    make_fabric,
+    schedule_version_lags,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def bundle():
+    return coefficient_tuning_task(m=6, n=150, p=24, c=3, h=0.5, seed=0)
+
+
+@dataclasses.dataclass(frozen=True)
+class DropWindowSchedule(TopologySchedule):
+    """Deterministic churn: ``edge`` is inactive for rounds in
+    [t_drop, t_drop + n_rounds), full base graph otherwise."""
+
+    base: object
+    edge: tuple = (0, 1)
+    t_drop: int = 1
+    n_rounds: int = 3
+
+    def weights(self, t: int) -> np.ndarray:
+        import networkx as nx
+
+        G = nx.Graph()
+        G.add_nodes_from(range(self.base.m))
+        dropped = self.t_drop <= t < self.t_drop + self.n_rounds
+        for i, neigh in enumerate(self.base.neighbors):
+            for j in neigh:
+                if j > i and not (dropped and {i, j} == set(self.edge)):
+                    G.add_edge(i, j)
+        return metropolis_weights(G, self.base.m)
+
+
+# ---------------------------------------------------------------------------
+# age bookkeeping across churn
+# ---------------------------------------------------------------------------
+
+
+def test_edge_reenters_with_true_version_age(bundle):
+    """An edge absent for r rounds re-enters with age >= r (in fact
+    r * K reference versions behind) — never reset to 0.  The full policy
+    mixes the frozen history at that true age until the catch-up lands."""
+    topo = ring(6)
+    cfg = C2DFBConfig(K=3, compressor="topk", comp_ratio=0.3,
+                      gamma_in=0.3, eta_in=0.3)
+    fab = make_fabric(topo, profile="wan", compute_s=0.01, seed=1)
+    sched = DropWindowSchedule(topo, edge=(0, 1), t_drop=1, n_rounds=3)
+    led = StalenessLedger()
+    _, mets = run(bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=6,
+                  key=KEY, fabric=fab, async_mode="full", schedule=sched,
+                  ledger=led)
+    reentry = [r for r in led.loops if r.round == 4]
+    assert reentry and all((0, 1) in r.edges for r in reentry)
+    for r in reentry:
+        # absent n_rounds = 3 => lag = 3 * K versions; first mix after
+        # re-entry sees the full true age (WAN latency >> step compute, so
+        # the catch-up cannot have landed by the step-0 mix)
+        assert r.ages[0, 0, 1] >= 3 * cfg.K
+        assert r.ages[0, 0, 1] >= sched.n_rounds  # the ISSUE's weak form
+        assert r.ages[0, 1, 0] == r.ages[0, 0, 1]  # symmetric
+    # while dropped, the edge is excluded from the records' active sets
+    for r in led.loops:
+        if 1 <= r.round < 4:
+            assert (0, 1) not in r.edges and (1, 0) not in r.edges
+            assert r.ages[:, 0, 1].max() == 0  # no traffic, no age
+    assert np.isfinite(np.asarray(mets["hypergrad_norm"])).all()
+
+
+def test_lag_replay_matches_engine_bookkeeping():
+    """`schedule_version_lags` (the depth-sizing precompute) replays the
+    scheduler's advance_lag dynamics exactly for the drop-window case."""
+    topo = ring(4)
+    sched = DropWindowSchedule(topo, edge=(0, 1), t_drop=1, n_rounds=2)
+    masks = active_edge_masks(sched.stack(5))
+    lags, max_lag = schedule_version_lags(masks, versions_per_round=3)
+    assert lags[0, 0, 1] == 0 and lags[1, 0, 1] == 0
+    assert lags[2, 0, 1] == 3 and lags[3, 0, 1] == 6
+    assert max_lag == 6  # the lag the edge re-enters with at round 3
+    assert lags[4, 0, 1] == 0  # re-entry round drained it
+
+
+@pytest.mark.parametrize("bound", [0, 1, 2])
+def test_bounded_plus_dropout_schedule_respects_bound(bundle, bound):
+    """LatencyDropoutSchedule + async_mode="bounded" composition NEVER
+    exceeds staleness_bound: re-entering edges must wait for their dense
+    catch-up before mixing, so churn cannot smuggle age past the gate."""
+    topo = two_hop(6)
+    cfg = C2DFBConfig(K=4, compressor="topk", comp_ratio=0.3,
+                      gamma_in=0.3, eta_in=0.3)
+    fab = make_fabric(topo, profile="wan", compute_s=0.01, seed=3)
+    sched = LatencyDropoutSchedule(topo, fabric=fab, deadline_s=0.0313,
+                                   payload_bytes=4096)
+    # the schedule actually churns (otherwise this tests nothing)
+    n_active = {len(sched.active_edges(t)) for t in range(6)}
+    assert len(n_active) > 1
+    led = StalenessLedger()
+    _, mets = run(bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=6,
+                  key=KEY, fabric=fab, async_mode="bounded",
+                  staleness_bound=bound, schedule=sched, ledger=led)
+    assert led.max_age() <= bound
+    assert (np.asarray(mets["staleness_max"]) <= bound).all()
+    assert np.isfinite(np.asarray(mets["hypergrad_norm"])).all()
+
+
+def test_bound_larger_than_K_addresses_reentry_versions(bundle):
+    """bound >= K regression: a re-entering edge's age (k + lag) can
+    exceed K - 1, so the history depth must follow the realizable age,
+    not min(bound + 1, K) — the bounded gate admits lag-old versions
+    whenever lag <= bound - k, and the mixing must address them."""
+    topo = ring(6)
+    cfg = C2DFBConfig(K=2, compressor="topk", comp_ratio=0.3,
+                      gamma_in=0.3, eta_in=0.3)
+    fab = make_fabric(topo, profile="wan", compute_s=0.01, seed=1)
+    sched = DropWindowSchedule(topo, edge=(0, 1), t_drop=1, n_rounds=1)
+    led = StalenessLedger()
+    _, mets = run(bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=4,
+                  key=KEY, fabric=fab, async_mode="bounded",
+                  staleness_bound=4, schedule=sched, ledger=led)
+    reentry = [r for r in led.loops if r.round == 2]
+    # absent 1 round of K=2 => lag 2; step-0 age = 2 > K - 1 = 1
+    assert max(r.ages[0, 0, 1] for r in reentry) >= cfg.K
+    assert led.max_age() <= 4
+    assert np.isfinite(np.asarray(mets["hypergrad_norm"])).all()
+
+
+def test_reused_scheduler_carries_lag_into_next_run(bundle):
+    """An injected AsyncScheduler persists version_lag across run_async
+    calls: a schedule that ENDS with an edge dropped hands the next run a
+    nonzero entry lag, which must extend the history depth (ages beyond
+    this run's own replay) instead of silently clamping versions."""
+    from repro.async_gossip import AsyncScheduler, run_async
+
+    topo = ring(6)
+    cfg = C2DFBConfig(K=2, compressor="topk", comp_ratio=0.3,
+                      gamma_in=0.3, eta_in=0.3)
+    fab = make_fabric(topo, profile="wan", compute_s=0.01, seed=1)
+    scheduler = AsyncScheduler(fab, policy="full")
+    # run 1 ends with (0, 1) still dropped => carried lag = 2 * K
+    drop_tail = DropWindowSchedule(topo, edge=(0, 1), t_drop=1, n_rounds=2)
+    run_async(bundle.problem, topo, cfg, bundle.x0, bundle.y0, 3, KEY, fab,
+              policy="full", scheduler=scheduler, schedule=drop_tail)
+    assert scheduler.version_lag[0, 1] == 2 * cfg.K
+    # run 2 re-activates it in round 0: true age includes the carried lag
+    led = StalenessLedger()
+    _, mets = run_async(bundle.problem, topo, cfg, bundle.x0, bundle.y0, 2,
+                        KEY, fab, policy="full", scheduler=scheduler,
+                        schedule=StaticSchedule(topo), ledger=led)
+    first = [r for r in led.loops if r.round == 0]
+    assert max(r.ages[0, 0, 1] for r in first) >= 2 * cfg.K
+    assert scheduler.version_lag[0, 1] == 0  # caught up again
+    assert np.isfinite(np.asarray(mets["hypergrad_norm"])).all()
+
+    # a SCHEDULE-LESS follow-up must honor carried lag the same way: the
+    # stale edge re-enters at its true age (not silently 0) and is caught
+    # up by round 0's catch-up + drain
+    scheduler2 = AsyncScheduler(fab, policy="full")
+    run_async(bundle.problem, topo, cfg, bundle.x0, bundle.y0, 3, KEY, fab,
+              policy="full", scheduler=scheduler2, schedule=drop_tail)
+    assert scheduler2.version_lag[0, 1] == 2 * cfg.K
+    led2 = StalenessLedger()
+    _, mets2 = run_async(bundle.problem, topo, cfg, bundle.x0, bundle.y0, 2,
+                         KEY, fab, policy="full", scheduler=scheduler2,
+                         ledger=led2)
+    first2 = [r for r in led2.loops if r.round == 0]
+    assert max(r.ages[0, 0, 1] for r in first2) >= 2 * cfg.K
+    assert scheduler2.version_lag[0, 1] == 0
+    assert np.isfinite(np.asarray(mets2["hypergrad_norm"])).all()
+
+
+def test_static_schedule_zero_latency_matches_sync(bundle):
+    """The degenerate composition — StaticSchedule on an instantaneous
+    fabric — must reproduce the synchronous trajectory (the carried
+    histories and always-delayed branch change op order, so to tolerance,
+    not bitwise)."""
+    topo = ring(6)
+    cfg = C2DFBConfig(K=3, compressor="topk", comp_ratio=0.3)
+    st_sync, m_sync = run(bundle.problem, topo, cfg, bundle.x0, bundle.y0,
+                          T=3, key=KEY)
+    fab = make_fabric(topo, profile="zero", straggler="none",
+                      compute_s=0.01, seed=0)
+    st_cmp, m_cmp = run(bundle.problem, topo, cfg, bundle.x0, bundle.y0,
+                        T=3, key=KEY, fabric=fab, async_mode="full",
+                        schedule=StaticSchedule(topo))
+    assert np.asarray(m_cmp["staleness_max"]).max() == 0
+    np.testing.assert_allclose(
+        np.asarray(st_cmp.x), np.asarray(st_sync.x), rtol=1e-5, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(m_cmp["hypergrad_norm"]),
+        np.asarray(m_sync["hypergrad_norm"]), rtol=1e-4,
+    )
+
+
+def test_schedule_composed_damping_runs_end_to_end(bundle):
+    """The full ISSUE 3 acceptance surface in one call:
+    run(async_mode="full", schedule=..., mixing_damping="inverse-age")."""
+    topo = ring(6)
+    cfg = C2DFBConfig(K=3, compressor="topk", comp_ratio=0.3,
+                      gamma_in=0.3, eta_in=0.3)
+    fab = make_fabric(topo, profile="geo", straggler="lognormal", sigma=0.8,
+                      compute_s=0.05, seed=1)
+    sched = DropWindowSchedule(topo, edge=(2, 3), t_drop=1, n_rounds=2)
+    _, mets = run(bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=5,
+                  key=KEY, fabric=fab, async_mode="full", schedule=sched,
+                  mixing_damping="inverse-age")
+    assert np.asarray(mets["staleness_max"]).max() >= 1
+    assert np.isfinite(np.asarray(mets["hypergrad_norm"])).all()
+    assert np.isfinite(np.asarray(mets["y_consensus_err"])).all()
+
+
+# ---------------------------------------------------------------------------
+# useful errors for malformed combos
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _AsymmetricSchedule(TopologySchedule):
+    base: object
+
+    def weights(self, t: int) -> np.ndarray:
+        W = np.array(self.base.W)
+        W[0, 1] += 0.05  # directed-looking weight: invalid gossip operator
+        return W
+
+
+@dataclasses.dataclass(frozen=True)
+class _PhantomEdgeSchedule(TopologySchedule):
+    """Activates a chord the base topology does not have — the network
+    layer cannot price it, so the run must refuse it."""
+
+    base: object
+
+    def weights(self, t: int) -> np.ndarray:
+        import networkx as nx
+
+        G = nx.Graph()
+        G.add_nodes_from(range(self.base.m))
+        for i, neigh in enumerate(self.base.neighbors):
+            for j in neigh:
+                if j > i:
+                    G.add_edge(i, j)
+        G.add_edge(0, 3)  # not a ring edge
+        return metropolis_weights(G, self.base.m)
+
+
+@dataclasses.dataclass(frozen=True)
+class _WrongLengthSchedule(TopologySchedule):
+    base: object
+
+    def weights(self, t: int) -> np.ndarray:
+        return self.base.W
+
+    def stack(self, T: int) -> np.ndarray:
+        return np.stack([self.base.W] * max(1, T - 1))  # off by one
+
+
+def test_malformed_schedules_raise_useful_errors(bundle):
+    topo = ring(6)
+    cfg = C2DFBConfig(K=2)
+    fab = make_fabric(topo, profile="zero", seed=0)
+    common = dict(T=3, key=KEY, fabric=fab, async_mode="full")
+    with pytest.raises(ValueError, match="not symmetric"):
+        run(bundle.problem, topo, cfg, bundle.x0, bundle.y0,
+            schedule=_AsymmetricSchedule(topo), **common)
+    with pytest.raises(ValueError, match="shape"):
+        run(bundle.problem, topo, cfg, bundle.x0, bundle.y0,
+            schedule=_WrongLengthSchedule(topo), **common)
+    with pytest.raises(ValueError, match="not in the base topology"):
+        run(bundle.problem, topo, cfg, bundle.x0, bundle.y0,
+            schedule=_PhantomEdgeSchedule(topo), **common)
+    # ...but a pure-math scan (no fabric prices the wire) accepts any
+    # valid gossip matrix, base edge or not — as it always did
+    _, mets = run(bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=2,
+                  key=KEY, schedule=_PhantomEdgeSchedule(topo))
+    assert np.isfinite(np.asarray(mets["hypergrad_norm"])).all()
+    # the same validation guards the jitted (non-async) schedule path
+    with pytest.raises(ValueError, match="not symmetric"):
+        run(bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=3, key=KEY,
+            schedule=_AsymmetricSchedule(topo))
+
+
+def test_malformed_damping_raises_useful_errors(bundle):
+    topo = ring(6)
+    cfg = C2DFBConfig(K=2)
+    fab = make_fabric(topo, profile="zero", seed=0)
+    with pytest.raises(ValueError, match="mixing_damping"):
+        run(bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=2, key=KEY,
+            fabric=fab, async_mode="full", mixing_damping="quadratic")
+    # damping without the async engine is a silent no-op: refuse it loudly
+    with pytest.raises(ValueError, match="async"):
+        run(bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=2, key=KEY,
+            mixing_damping="inverse-age")

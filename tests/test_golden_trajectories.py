@@ -1,0 +1,168 @@
+"""Golden-trajectory regression tests (ISSUE 3).
+
+Small committed ``.npz`` traces pin the MATH of three canonical runs on
+the toy task — synchronous C2DFB, bounded-stale async, and the
+schedule-composed async engine (time-varying graph + staleness-adaptive
+damping).  Tier-1 asserts the current code reproduces each trace to tight
+tolerance, so a refactor that silently changes the trajectory (a reordered
+mix, a dropped damping term, an off-by-one age) fails loudly instead of
+shipping.
+
+Regenerate after an INTENTIONAL math change (and say so in the PR):
+
+    PYTHONPATH=src python tests/test_golden_trajectories.py --regen
+
+On mismatch each failing case writes ``golden_trajectory_diff_<case>.npz``
+(got/want pairs) to the working directory; CI uploads these as artifacts.
+"""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+#: assert_allclose bounds: tight enough to catch any real math change,
+#: loose enough for BLAS/compiler reassociation across CI machines
+RTOL, ATOL = 1e-4, 1e-6
+
+
+def _jax():
+    import jax
+
+    return jax
+
+
+def _setup():
+    from repro.core.c2dfb import C2DFBConfig
+    from repro.core.topology import ring
+    from repro.data.bilevel_tasks import coefficient_tuning_task
+
+    bundle = coefficient_tuning_task(m=4, n=80, p=12, c=3, h=0.5, seed=0)
+    topo = ring(4)
+    cfg = C2DFBConfig(
+        K=3, compressor="topk", comp_ratio=0.3, gamma_in=0.3, eta_in=0.3
+    )
+    return bundle, topo, cfg
+
+
+def _trace(state, mets, extra_keys=()) -> dict:
+    out = {
+        "x": np.asarray(state.x),
+        "s_x": np.asarray(state.s_x),
+        "y": np.asarray(state.inner_y.d),
+        "z": np.asarray(state.inner_z.d),
+        "hypergrad_norm": np.asarray(mets["hypergrad_norm"]),
+        "x_consensus_err": np.asarray(mets["x_consensus_err"]),
+        "y_consensus_err": np.asarray(mets["y_consensus_err"]),
+    }
+    for k in extra_keys:
+        out[k] = np.asarray(mets[k])
+    return out
+
+
+def _run_sync() -> dict:
+    from repro.core.c2dfb import run
+
+    bundle, topo, cfg = _setup()
+    state, mets = run(
+        bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=3,
+        key=_jax().random.PRNGKey(0),
+    )
+    return _trace(state, mets, extra_keys=("measured_bytes",))
+
+
+def _run_bounded() -> dict:
+    from repro.core.c2dfb import run
+    from repro.net import make_fabric
+
+    bundle, topo, cfg = _setup()
+    fab = make_fabric(topo, profile="geo", straggler="lognormal", sigma=0.8,
+                      compute_s=0.05, seed=1)
+    state, mets = run(
+        bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=3,
+        key=_jax().random.PRNGKey(0), fabric=fab, async_mode="bounded",
+        staleness_bound=1,
+    )
+    return _trace(state, mets, extra_keys=("staleness_max", "wire_bytes"))
+
+
+def _run_schedule_composed() -> dict:
+    from repro.core.c2dfb import run
+    from repro.net import BConnectedSchedule, make_fabric
+
+    bundle, topo, cfg = _setup()
+    fab = make_fabric(topo, profile="wan", compute_s=0.01, seed=1)
+    sched = BConnectedSchedule(topo, B=2)
+    state, mets = run(
+        bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=4,
+        key=_jax().random.PRNGKey(0), fabric=fab, async_mode="full",
+        schedule=sched, mixing_damping="inverse-age",
+    )
+    return _trace(state, mets, extra_keys=("staleness_max", "wire_bytes"))
+
+
+CASES = {
+    "sync": _run_sync,
+    "bounded_stale": _run_bounded,
+    "schedule_composed": _run_schedule_composed,
+}
+
+
+def _golden_path(case: str) -> str:
+    return os.path.join(GOLDEN_DIR, f"{case}.npz")
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_trajectory_matches_golden(case):
+    path = _golden_path(case)
+    assert os.path.exists(path), (
+        f"missing golden trace {path}; regenerate with "
+        "`PYTHONPATH=src python tests/test_golden_trajectories.py --regen`"
+    )
+    want = dict(np.load(path))
+    got = CASES[case]()
+    assert set(got) == set(want), (
+        f"{case}: trace keys changed: {sorted(got)} vs golden "
+        f"{sorted(want)} — regenerate if intentional"
+    )
+    bad = {}
+    for k in sorted(want):
+        try:
+            np.testing.assert_allclose(
+                got[k], want[k], rtol=RTOL, atol=ATOL,
+                err_msg=f"{case}/{k} drifted from the golden trace",
+            )
+        except AssertionError as e:
+            bad[k] = e
+    if bad:
+        # diff artifact for CI: got/want side by side per drifted key
+        diff_path = f"golden_trajectory_diff_{case}.npz"
+        np.savez(
+            diff_path,
+            **{f"got_{k}": got[k] for k in bad},
+            **{f"want_{k}": want[k] for k in bad},
+        )
+        raise AssertionError(
+            f"{case}: {sorted(bad)} drifted from the golden trace "
+            f"(diff artifact: {diff_path}).  If the math change is "
+            "intentional, regenerate via --regen and justify it in the "
+            "PR.\n\n" + "\n".join(str(e) for e in bad.values())
+        )
+
+
+def regenerate() -> None:
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    for case, fn in CASES.items():
+        path = _golden_path(case)
+        np.savez(path, **fn())
+        size = os.path.getsize(path)
+        print(f"wrote {path} ({size} bytes)")
+
+
+if __name__ == "__main__":
+    if "--regen" in sys.argv:
+        regenerate()
+    else:
+        print(__doc__)

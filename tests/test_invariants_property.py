@@ -10,6 +10,8 @@ import pytest
 pytest.importorskip("hypothesis")  # optional dev dep; skip cleanly when absent
 from hypothesis import given, settings, strategies as st
 
+pytestmark = pytest.mark.property  # runs in CI's `pytest -m property` job
+
 from repro.core.compression import LowRank, StochasticQuant, TopK
 from repro.core.inner_loop import inner_init, inner_step
 from repro.core.topology import erdos_renyi, ring, torus2d, two_hop
