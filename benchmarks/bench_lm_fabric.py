@@ -1,0 +1,124 @@
+"""LM-scale fabric pricing (ROADMAP "LM-scale fabric runs").
+
+Prices the `repro.core.lm_bilevel` workload's wire traffic on the network
+fabric for the first time: a C2DFB round on the hyper-representation split
+broadcasts the dense BACKBONE (x, s_x — the transformer minus its head)
+once per node per round and exchanges 2K compressed HEAD residuals, so
+transformer-sized pytrees hit the codec where its per-leaf headers hurt.
+The ``--profile {lan,wan,geo}`` axis reports, per profile:
+
+    wire_bytes / simulated_seconds   per outer round, codec-measured
+    chunked_saving_bytes             per-leaf headers minus per-chunk
+                                     headers (`wire.encode_tree_chunked`)
+
+    PYTHONPATH=src python benchmarks/bench_lm_fabric.py [--profile wan] [--full]
+    PYTHONPATH=src python -m benchmarks.run --only lm
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+if __package__ in (None, ""):  # `python benchmarks/bench_lm_fabric.py`
+    sys.path.insert(
+        0, os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    )
+
+from benchmarks.common import emit
+from repro.configs.base import ModelConfig
+from repro.core.compression import make_compressor
+from repro.core.lm_bilevel import split_params
+from repro.core.topology import ring
+from repro.models.transformer import init_lm_params
+from repro.net import make_fabric
+from repro.net.fabric import edge_list
+from repro.net.wire import codec_for, measure_tree_bytes_chunked
+
+PROFILES = ("lan", "wan", "geo")
+
+#: pricing-only model sizes: "fast" is CI-friendly, "full" is a real
+#: multi-hundred-leaf block stack (still CPU-tractable to serialize)
+def _cfg(fast: bool) -> ModelConfig:
+    return ModelConfig(
+        name="lm-fabric", arch_type="dense", pattern=("full",),
+        mlp_type="swiglu",
+        num_layers=2 if fast else 8,
+        d_model=96 if fast else 256,
+        num_heads=4, num_kv_heads=2, head_dim=24 if fast else 64,
+        d_ff=192 if fast else 704,
+        vocab_size=256 if fast else 2048,
+    )
+
+
+def run(fast: bool = True, profile: str | None = None, K: int = 8,
+        chunk: int = 1 << 16):
+    m = 4
+    topo = ring(m)
+    edges = edge_list(topo)
+    cfg = _cfg(fast)
+    params, _ = init_lm_params(cfg, jax.random.PRNGKey(0))
+    x, y = split_params(params)
+    comp = make_compressor("topk", ratio=0.2)
+    dense = codec_for(make_compressor("identity"))
+
+    t0 = time.time()
+    # per-node payloads of one outer round: 2 dense backbone broadcasts +
+    # 2K compressed head residual messages (y and z trees are head-shaped)
+    q = comp.compress_tree(
+        jax.random.PRNGKey(1),
+        jax.tree.map(lambda v: 0.01 * v.astype(jnp.float32), y),
+    )
+    x_leaf = dense.tree_bytes(x)
+    x_chunk = dense.tree_bytes_chunked(x, chunk)
+    q_leaf = codec_for(comp).tree_bytes(q)
+    q_chunk = measure_tree_bytes_chunked(comp, q, chunk)
+    meas_s = time.time() - t0
+
+    n_leaves = len(jax.tree.leaves(x)) + len(jax.tree.leaves(q))
+    # a C2DFB round = 2 dense outer broadcasts + TWO inner loops (y and z)
+    # x K steps x 2 messages each = 2 + 4K phases (c2dfb.round_phases)
+    saving = (x_leaf - x_chunk) + 4 * K * (q_leaf - q_chunk)
+    phases = [{e: x_chunk for e in edges}] * 2 + [
+        {e: q_chunk for e in edges}
+    ] * (4 * K)
+    labels = ["out/x", "out/s_x"] + [
+        f"{loop}/in{k}/{t}"
+        for loop in ("y", "z")
+        for k in range(K)
+        for t in ("d", "s")
+    ]
+
+    for prof in ([profile] if profile else PROFILES):
+        fabric = make_fabric(topo, profile=prof, seed=0, compute_s=0.05)
+        rep = fabric.simulate_round(phases, 0, labels=labels)
+        emit(
+            f"lm_fabric/{prof}",
+            meas_s * 1e6,
+            f"params={cfg.param_count()};leaves={n_leaves};"
+            f"round_wire_bytes={rep['wire_bytes']};"
+            f"simulated_seconds={rep['sim_seconds']:.2f};"
+            f"backbone_bytes={x_chunk};head_msg_bytes={q_chunk};"
+            f"chunked_saving_bytes={saving}",
+        )
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--profile", default=None, choices=PROFILES,
+                    help="single profile (default: all three)")
+    ap.add_argument("--full", action="store_true",
+                    help="larger transformer (more/bigger leaves)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(fast=not args.full, profile=args.profile)
+
+
+if __name__ == "__main__":
+    main()

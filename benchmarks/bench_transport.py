@@ -1,0 +1,133 @@
+"""Sim vs device transport backends on one C2DFB config.
+
+Runs the IDENTICAL algorithm through both `repro.transport` backends —
+`SimTransport` (the priced simulation) and `DeviceTransport` (executed
+`shard_map` collectives, one node per device, wire-codec round trip per
+message) — and reports, per backend:
+
+    wall_us_per_round    host wall clock (device: real collective execution)
+    wire_bytes           per-link bytes.  Sim prices `round_phases`
+                         (headerless dense outer + steady-state inner
+                         sizes); device counts executed codec encodes of
+                         every message — the honest integers differ by
+                         the outer DenseCodec headers and per-round nnz,
+                         a sub-percent delta (exact per-payload parity
+                         with `wire.measure_tree_bytes` is asserted in
+                         tests/test_transport.py)
+    measured_bytes       the broadcast-accounted inner+outer meter — the
+                         SAME accounting in both backends, integer-equal
+                         when the trajectories agree
+    simulated_seconds    both backends price on the same link model
+    final_consensus_err  trajectory agreement check (fp32 tolerance)
+
+Needs one device per node: on CPU the script forces 8 virtual devices
+(XLA_FLAGS) when run as a main; under `benchmarks.run` it skips if the
+process was started without enough devices.
+
+    PYTHONPATH=src python benchmarks/bench_transport.py --smoke
+    PYTHONPATH=src python -m benchmarks.run --only transport
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+if __name__ == "__main__":  # force virtual devices BEFORE importing jax
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8"
+        ).strip()
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    sys.path.insert(
+        0, os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    )
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.c2dfb import C2DFBConfig
+from repro.core.c2dfb import run as c2dfb_run
+from repro.core.topology import ring
+from repro.data.bilevel_tasks import coefficient_tuning_task
+from repro.net import make_fabric
+from repro.transport import DeviceTransport, SimTransport
+
+PROFILE = "wan"
+
+
+def run_suite(fast: bool = True, smoke: bool = False):
+    m = 4 if smoke else 8
+    if len(jax.devices()) < m:
+        emit(
+            "transport/skipped", 0.0,
+            f"need {m} devices, have {len(jax.devices())}; run "
+            "benchmarks/bench_transport.py as a script (it forces CPU "
+            "virtual devices) or set XLA_FLAGS",
+        )
+        return
+    T = 3 if smoke else (6 if fast else 20)
+    K = 4 if smoke else 8
+    bundle = coefficient_tuning_task(
+        m=m, n=200 if smoke else 1000, p=30 if smoke else 80, c=5,
+        h=0.8, seed=0,
+    )
+    topo = ring(m)
+    cfg = C2DFBConfig(
+        lam=10.0, eta_out=0.3, gamma_out=0.5, eta_in=0.3, gamma_in=0.3,
+        K=K, compressor="topk", comp_ratio=0.3,
+    )
+    key = jax.random.PRNGKey(0)
+
+    results = {}
+    for name, transport in (
+        ("sim", SimTransport(make_fabric(topo, profile=PROFILE, seed=0))),
+        ("device", DeviceTransport(link=PROFILE, seed=0)),
+    ):
+        t0 = time.time()
+        state, mets = c2dfb_run(
+            bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=T, key=key,
+            transport=transport,
+        )
+        dt = time.time() - t0
+        err = float(np.asarray(mets["y_consensus_err"])[-1])
+        wire = int(np.asarray(mets["wire_bytes"]).sum())
+        sim_s = float(np.asarray(mets["sim_seconds"]).sum())
+        results[name] = dict(err=err, wire=wire)
+        emit(
+            f"transport/{name}",
+            dt * 1e6 / T,
+            f"wire_bytes={wire};simulated_seconds={sim_s:.2f};"
+            f"measured_bytes={int(np.asarray(mets['measured_bytes']).sum())};"
+            f"final_consensus_err={err:.5g}",
+        )
+    # the two backends run the same math: trajectories agree to fp32
+    ref, dev = results["sim"]["err"], results["device"]["err"]
+    agree = np.isclose(ref, dev, rtol=1e-3, atol=1e-7)
+    emit("transport/parity", 0.0,
+         f"consensus_err_sim={ref:.6g};consensus_err_device={dev:.6g};"
+         f"agree={bool(agree)}")
+
+
+def run(fast: bool = True, **_kw):  # benchmarks.run harness entry point
+    run_suite(fast=fast)
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny settings for CI (seconds, not minutes)")
+    ap.add_argument("--full", action="store_true", help="larger settings")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run_suite(fast=not args.full, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,7 +16,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true", help="paper-scale settings")
     ap.add_argument("--only", default=None,
                     help="comma list: comm,topology,hyperrep,sensitivity,"
-                         "kernels,roofline,network,async")
+                         "kernels,roofline,network,async,lm,transport")
     args = ap.parse_args()
     fast = not args.full
 
@@ -25,10 +25,12 @@ def main() -> None:
         bench_comm_volume,
         bench_hyperrep,
         bench_kernels,
+        bench_lm_fabric,
         bench_network,
         bench_roofline,
         bench_sensitivity,
         bench_topology,
+        bench_transport,
     )
 
     suites = {
@@ -40,6 +42,8 @@ def main() -> None:
         "roofline": bench_roofline.run,
         "network": bench_network.run,
         "async": bench_async.run,
+        "lm": bench_lm_fabric.run,
+        "transport": bench_transport.run,
     }
     wanted = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")

@@ -265,9 +265,18 @@ def run_async(
     """
     from repro.async_gossip.mixing import validate_damping
     from repro.net.fabric import edge_list
+    from repro.transport.base import as_transport
 
     validate_damping(mixing_damping)
-    scheduler = scheduler or AsyncScheduler(fabric, policy=policy, bound=bound)
+    # accept a Transport wherever a fabric is accepted; the scheduler
+    # consumes arrival times through the transport face either way
+    transport = as_transport(fabric)
+    if transport is not None:
+        transport.bind(topo)
+        fabric = transport.fabric
+    scheduler = scheduler or AsyncScheduler(
+        transport, policy=policy, bound=bound
+    )
     ledger = ledger if ledger is not None else StalenessLedger()
     state = init_state(problem, cfg, x0, y0)
     comp = cfg.make_compressor()
@@ -499,7 +508,11 @@ def run_baseline_async(
     if alg not in ("madsbo", "mdbo"):
         raise ValueError(f"unknown async baseline {alg!r}")
     validate_damping(mixing_damping)
-    scheduler = AsyncScheduler(fabric, policy=policy, bound=bound)
+    from repro.transport.base import as_transport
+
+    transport = as_transport(fabric).bind(topo)
+    fabric = transport.fabric
+    scheduler = AsyncScheduler(transport, policy=policy, bound=bound)
     ledger = ledger if ledger is not None else StalenessLedger()
     dy_bytes = _dense_node_bytes(y0)
     dx_bytes = _dense_node_bytes(x0)

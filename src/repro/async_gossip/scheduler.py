@@ -110,7 +110,14 @@ class AsyncTimeline:
 class AsyncScheduler:
     """Drives non-barrier gossip loops on a fabric, with per-node clocks
     persisting across loops and rounds (so a straggler's lag carries over
-    until a barrier catches it up)."""
+    until a barrier catches it up).
+
+    ``fabric`` may be a `NetworkFabric` or any `repro.transport.Transport`
+    — the scheduler consumes arrival times (``egress_s`` /
+    ``message_arrival`` / ``round_rng``) through the transport interface,
+    so a backend that executes messages for real can feed the same gating
+    logic.  A bare fabric is wrapped in a `SimTransport` (pure delegation,
+    bit-exact with the pre-transport code path)."""
 
     def __init__(
         self,
@@ -118,14 +125,22 @@ class AsyncScheduler:
         policy: str = "bounded",
         bound: int = 2,
     ) -> None:
+        from repro.transport.base import as_transport
+
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; have {POLICIES}")
         if policy == "bounded" and bound < 0:
             raise ValueError("staleness bound must be >= 0")
-        self.fabric = fabric
+        self.transport = as_transport(fabric)
+        if self.transport is None:
+            raise ValueError(
+                "AsyncScheduler needs a NetworkFabric or a bound Transport"
+            )
+        self.transport._require_bound()  # unbound transports get the named
+        self.fabric = self.transport.fabric  # "call bind(topo)" ValueError
         self.policy = policy
         self.bound = bound
-        m = fabric.topo.m
+        m = self.fabric.topo.m
         self.clock = np.zeros(m)        # per-node absolute clocks
         self.egress_free = np.zeros(m)  # per-node NIC availability
         # per-edge reference-version lag (symmetric, versions behind
@@ -142,8 +157,8 @@ class AsyncScheduler:
         """Per-round straggler multipliers + jitter RNG (stream-separated
         from the fabric's own barrier draws)."""
         if self._mult_round != round_idx:
-            self._rng = self.fabric.round_rng(round_idx, stream=0xA5)
-            self._mult = self.fabric.straggler.sample(
+            self._rng = self.transport.round_rng(round_idx, stream=0xA5)
+            self._mult = self.transport.straggler.sample(
                 self._rng, self.fabric.topo.m
             )
             self._mult_round = round_idx
@@ -263,8 +278,8 @@ class AsyncScheduler:
                     continue
                 nbytes = int(catchup_bytes)
                 depart = max(self.egress_free[i], self.clock[i])
-                self.egress_free[i] = depart + self.fabric.egress_s(nbytes)
-                arrive[0, i, j] = self.fabric.message_arrival(
+                self.egress_free[i] = depart + self.transport.egress_s(nbytes)
+                arrive[0, i, j] = self.transport.message_arrival(
                     depart, nbytes, rng
                 )
                 total_bytes += nbytes
@@ -323,8 +338,8 @@ class AsyncScheduler:
                 for j in neighbors[i]:
                     nbytes = int(node_bytes[i])
                     depart = max(self.egress_free[i], finish_t[k, i])
-                    self.egress_free[i] = depart + self.fabric.egress_s(nbytes)
-                    arrive[k + 1, i, j] = self.fabric.message_arrival(
+                    self.egress_free[i] = depart + self.transport.egress_s(nbytes)
+                    arrive[k + 1, i, j] = self.transport.message_arrival(
                         depart, nbytes, rng
                     )
                     total_bytes += nbytes
@@ -419,8 +434,8 @@ class AsyncScheduler:
             for j in neighbors[i]:
                 nbytes = int(node_bytes[i])
                 depart = max(self.egress_free[i], self.clock[i])
-                self.egress_free[i] = depart + self.fabric.egress_s(nbytes)
-                t_arr = self.fabric.message_arrival(depart, nbytes, rng)
+                self.egress_free[i] = depart + self.transport.egress_s(nbytes)
+                t_arr = self.transport.message_arrival(depart, nbytes, rng)
                 end = max(end, t_arr)
                 if tr is not None:
                     tr.add_transfer(

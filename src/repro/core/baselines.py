@@ -159,7 +159,15 @@ def mdbo_round(
     W: jax.Array | None = None,
     fabric=None,
     round_idx: int = 0,
+    transport=None,
 ) -> tuple[MDBOState, dict]:
+    """``transport`` (a `repro.transport.Transport`) prices the round
+    through the transport's fabric-mirroring face — same metrics keys as
+    ``fabric``, backend-agnostic."""
+    if transport is not None:
+        if fabric is not None:
+            raise ValueError("pass fabric OR transport, not both")
+        fabric = transport.bind(topo)
     W_override = W
     W = jnp.asarray(topo.W if W is None else W, jnp.float32)
     new_state, metrics = _mdbo_round_core(
@@ -299,7 +307,14 @@ def madsbo_round(
     W: jax.Array | None = None,
     fabric=None,
     round_idx: int = 0,
+    transport=None,
 ) -> tuple[MADSBOState, dict]:
+    """``transport`` as in `mdbo_round`: the `repro.transport` pricing
+    face in place of a bare fabric."""
+    if transport is not None:
+        if fabric is not None:
+            raise ValueError("pass fabric OR transport, not both")
+        fabric = transport.bind(topo)
     W_override = W
     W = jnp.asarray(topo.W if W is None else W, jnp.float32)
     new_state, metrics = _madsbo_round_core(

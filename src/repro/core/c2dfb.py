@@ -177,13 +177,21 @@ def c2dfb_round(
     W: jax.Array | None = None,
     fabric=None,
     round_idx: int = 0,
+    transport=None,
 ) -> tuple[C2DFBState, dict]:
     """One outer round.  ``W`` overrides the static mixing matrix (used by
     `repro.net.dynamic` schedules — pass the round's matrix, possibly a
     traced scan input).  ``fabric`` (a `repro.net.fabric.NetworkFabric`,
     eager mode only) adds codec-measured ``wire_bytes`` and simulated
-    ``sim_seconds`` to the round metrics."""
+    ``sim_seconds`` to the round metrics.  ``transport`` (a
+    `repro.transport.Transport`) does the same through the transport's
+    pricing face — its fabric-mirroring API makes the two code paths one;
+    for a fully EXECUTED round use `run(transport=...)` instead."""
     W_override = W
+    if transport is not None:
+        if fabric is not None:
+            raise ValueError("pass fabric OR transport, not both")
+        fabric = transport.bind(topo)
     W = jnp.asarray(topo.W if W is None else W, dtype=jnp.float32)
     compressor = cfg.make_compressor()
 
@@ -288,6 +296,7 @@ def run(
     ledger=None,
     mixing_damping: str = "none",
     damping_decay: float = 0.5,
+    transport=None,
 ) -> tuple[C2DFBState, dict]:
     """Run T outer rounds under lax.scan; returns final state + stacked metrics.
 
@@ -314,7 +323,28 @@ def run(
     edge's weight by its current staleness ("none" / "inverse-age" /
     "exp-decay", async modes only) — inverse-age keeps the fully-async
     policy contractive at mixing steps where undamped delayed gossip
-    diverges."""
+    diverges.
+
+    ``transport`` (a `repro.transport.Transport`) selects the backend the
+    round's gossip runs on: `SimTransport` is the priced simulation (this
+    function with ``fabric=transport.fabric`` — bit-exact, golden-trace
+    pinned), `DeviceTransport` EXECUTES every exchange as `shard_map`
+    collectives over a device mesh carrying the real wire-codec payloads.
+    Mutually exclusive with ``fabric``."""
+    if transport is not None:
+        if fabric is not None:
+            raise ValueError(
+                "pass fabric OR transport, not both — a transport owns its "
+                "pricing fabric"
+            )
+        from repro.transport.engine import run_c2dfb_transport
+
+        return run_c2dfb_transport(
+            problem, topo, cfg, x0, y0, T, key, transport, jit=jit,
+            schedule=schedule, async_mode=async_mode,
+            staleness_bound=staleness_bound, ledger=ledger,
+            mixing_damping=mixing_damping, damping_decay=damping_decay,
+        )
     if async_mode is not None:
         from repro.async_gossip.engine import run_async
 

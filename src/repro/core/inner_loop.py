@@ -166,6 +166,7 @@ def inner_loop(
     K: int,
     fabric=None,
     round_idx: int = 0,
+    transport=None,
 ) -> tuple[InnerState, dict]:
     """Run K compressed-GT steps via lax.scan; returns final state + metrics.
 
@@ -182,8 +183,18 @@ def inner_loop(
     With a ``repro.net.fabric.NetworkFabric`` (eager mode only — the fabric
     is host-side numpy), metrics additionally carry ``wire_bytes`` (exact
     integer, codec-measured on this loop's residuals) and ``sim_seconds``
-    (the simulated wall clock of the K barrier phases x 2 messages)."""
+    (the simulated wall clock of the K barrier phases x 2 messages).
+    ``transport`` (a `repro.transport.Transport`) prices the loop through
+    the transport's fabric-mirroring face instead — same metrics, backend-
+    agnostic; for a device-EXECUTED loop see
+    `repro.transport.device.make_device_round` (its `_device_inner_loop`
+    mirrors this scan body)."""
     from repro.net.wire import scan_tree_bytes
+
+    if transport is not None:
+        if fabric is not None:
+            raise ValueError("pass fabric OR transport, not both")
+        fabric = transport  # Transport mirrors the fabric pricing API
 
     def body(st, k):
         mix_d = mix_delta_dense(W, st.d_hat)

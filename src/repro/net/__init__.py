@@ -42,6 +42,7 @@ from repro.net.wire import (
     codec_for,
     measure_compressed_tree_bytes,
     measure_tree_bytes,
+    measure_tree_bytes_chunked,
     scan_tree_bytes,
 )
 
@@ -72,6 +73,7 @@ __all__ = [
     "make_fabric",
     "measure_compressed_tree_bytes",
     "measure_tree_bytes",
+    "measure_tree_bytes_chunked",
     "scan_tree_bytes",
     "schedule_version_lags",
     "validate_schedule_stack",

@@ -1,0 +1,35 @@
+"""repro.transport — pluggable gossip transport backends.
+
+One protocol (`Transport`: the `NetworkFabric` pricing API + an executed
+message-exchange primitive), two backends:
+
+* `SimTransport`    — the priced simulation, bit-exact with passing a
+  fabric to `c2dfb.run` directly;
+* `DeviceTransport` — in-process multi-device execution over a
+  `jax.sharding.Mesh`: gossip as `shard_map` / `lax.ppermute` collectives
+  carrying the actual wire-codec payloads.
+
+`c2dfb.run(transport=...)` runs the identical algorithm code path on
+either; a future multi-process backend (jax.distributed send/recv, UCX)
+implements the same protocol and inherits the whole test/bench surface.
+"""
+
+from repro.transport.base import ExchangeReport, Transport, as_transport
+from repro.transport.device import (
+    DeviceTransport,
+    make_device_round,
+    mesh_for_nodes,
+)
+from repro.transport.engine import run_c2dfb_transport
+from repro.transport.sim import SimTransport
+
+__all__ = [
+    "DeviceTransport",
+    "ExchangeReport",
+    "SimTransport",
+    "Transport",
+    "as_transport",
+    "make_device_round",
+    "mesh_for_nodes",
+    "run_c2dfb_transport",
+]

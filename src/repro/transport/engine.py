@@ -1,0 +1,179 @@
+"""Transport-generic C2DFB (and baseline) drivers.
+
+`run_c2dfb_transport` is what `c2dfb.run(transport=...)` dispatches to:
+
+* a non-executing transport (`SimTransport`) routes straight back into the
+  priced-simulation path with its wrapped fabric — BIT-EXACT with calling
+  `run(fabric=...)` directly, including the async engine and topology
+  schedules (the committed golden traces pin this);
+* an executing transport (`DeviceTransport`) drives the jitted
+  `make_device_round` eagerly round-by-round: state and data live sharded
+  one node per mesh device, every gossip exchange is a collective, and
+  after each round the executed payload stacks make the wire-codec round
+  trip (`meter_round`) so ``wire_bytes`` / ``sim_seconds`` are measured on
+  real messages.  Metric keys match the synchronous `run` (plus
+  ``wall_seconds``) so benchmarks compare backends column-for-column.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bilevel_problem import BilevelProblem
+from repro.core.c2dfb import C2DFBState, init_state
+from repro.core.topology import Topology
+from repro.core.types import (
+    Pytree,
+    consensus_error,
+    node_mean,
+    tree_count,
+    tree_sq_norm,
+)
+from repro.transport.base import Transport
+from repro.transport.device import DeviceTransport, make_device_round
+
+
+def run_c2dfb_transport(
+    problem: BilevelProblem,
+    topo: Topology,
+    cfg,
+    x0: Pytree,
+    y0: Pytree,
+    T: int,
+    key: jax.Array,
+    transport: Transport,
+    jit: bool = True,
+    schedule=None,
+    async_mode: str | None = None,
+    staleness_bound: int = 2,
+    ledger=None,
+    mixing_damping: str = "none",
+    damping_decay: float = 0.5,
+    return_payloads: bool = False,
+) -> tuple[C2DFBState, dict]:
+    """T outer rounds of C2DFB over a `Transport`.  See module docstring;
+    ``return_payloads`` additionally stashes the executed per-round inner
+    payload stacks in ``metrics["payloads"]`` (device backend only —
+    that is what the byte-parity acceptance test audits)."""
+    transport.bind(topo)
+    if not transport.executes:
+        from repro.core.c2dfb import run
+
+        return run(
+            problem, topo, cfg, x0, y0, T, key, jit=jit,
+            schedule=schedule, fabric=transport.fabric,
+            async_mode=async_mode, staleness_bound=staleness_bound,
+            ledger=ledger, mixing_damping=mixing_damping,
+            damping_decay=damping_decay,
+        )
+
+    if async_mode is not None:
+        raise NotImplementedError(
+            "DeviceTransport executes synchronous rounds; async_mode needs "
+            "the priced SimTransport — a real asynchronous multi-process "
+            "backend is the ROADMAP follow-on"
+        )
+    if schedule is not None:
+        raise NotImplementedError(
+            "DeviceTransport does not execute time-varying topologies yet "
+            "— run schedules through SimTransport (the collective pattern "
+            "is compiled per graph; per-round graphs need the follow-on "
+            "jax.distributed backend)"
+        )
+    if mixing_damping != "none":
+        raise ValueError(
+            "mixing_damping is a staleness policy; the device backend is "
+            "synchronous (all ages zero) so damping would be a silent no-op"
+        )
+    assert isinstance(transport, DeviceTransport)
+
+    state = init_state(problem, cfg, x0, y0)
+    compressor = cfg.make_compressor()
+    round_fn = make_device_round(
+        problem, topo, cfg, transport.mesh, transport.axis, jit=jit
+    )
+    parts = (
+        transport.shard(state.x),
+        transport.shard(state.s_x),
+        transport.shard(state.u_prev),
+        transport.shard(state.inner_y),
+        transport.shard(state.inner_z),
+    )
+    data_f = transport.shard(problem.data_f)
+    data_g = transport.shard(problem.data_g)
+    m = topo.m
+    outer_bytes = 2 * tree_count(state.x) * 4 * m
+
+    keys = jax.random.split(key, T)
+    rows: list[dict] = []
+    payload_log: list = []
+    for t in range(T):
+        x_prev, s_prev = parts[0], parts[1]
+        t0 = time.perf_counter()
+        x, s_x, u_new, inner_y, inner_z, (q_y, q_z) = round_fn(
+            *parts, keys[t], data_f, data_g
+        )
+        jax.block_until_ready(x)
+        wall = time.perf_counter() - t0
+        parts = (x, s_x, u_new, inner_y, inner_z)
+
+        rep = transport.meter_round(
+            [("out/x", x_prev), ("out/s_x", s_prev)],
+            [("y", q_y), ("z", q_z)],
+            compressor,
+            t,
+        )
+        row = {
+            "hypergrad_norm": np.sqrt(
+                float(tree_sq_norm(node_mean(u_new)))
+            ),
+            "x_consensus_err": float(consensus_error(x)),
+            "sx_consensus_err": float(consensus_error(s_x)),
+            "y_consensus_err": float(consensus_error(inner_y.d)),
+            "y_compress_err": float(
+                tree_sq_norm(
+                    jax.tree.map(jnp.subtract, inner_y.d, inner_y.d_hat)
+                )
+            ),
+            "z_consensus_err": float(consensus_error(inner_z.d)),
+            # broadcast accounting, same as the simulator's in-scan meter:
+            # each inner message counted once per sender (meter_round's
+            # executed per-node bytes — codec truth, not a re-count) plus
+            # the analytic dense outer term c2dfb_round_core uses
+            "measured_bytes": (
+                sum(
+                    sum(nb)
+                    for label, nb in rep["node_bytes"].items()
+                    if not label.startswith("out/")
+                )
+                + outer_bytes
+            ),
+            "wire_bytes": int(rep["wire_bytes"]),
+            "sim_seconds": float(rep["sim_seconds"]),
+            "wall_seconds": wall,
+        }
+        rows.append(row)
+        if return_payloads:
+            payload_log.append(
+                {
+                    "y": jax.tree.map(np.asarray, q_y),
+                    "z": jax.tree.map(np.asarray, q_z),
+                    "node_bytes": rep["node_bytes"],
+                }
+            )
+
+    x, s_x, u_new, inner_y, inner_z = parts
+    final = C2DFBState(
+        x=x, s_x=s_x, u_prev=u_new, inner_y=inner_y, inner_z=inner_z,
+        t=state.t + T,
+    )
+    metrics: dict = {
+        k: np.asarray([r[k] for r in rows]) for k in (rows[0] if rows else {})
+    }
+    if return_payloads:
+        metrics["payloads"] = payload_log
+    return final, metrics

@@ -123,3 +123,81 @@ def test_pack_kernel_edge_rows():
     vals, idx = pack_sparse_blocks(jnp.asarray(x), k=block, block=block)
     back = np.asarray(unpack_sparse_blocks(vals, idx, block=block))
     np.testing.assert_array_equal(back, x)
+
+
+# ---------------------------------------------------------------------------
+# chunked tree encoding (LM-scale fabric runs)
+# ---------------------------------------------------------------------------
+
+
+def _lm_like_tree(key, n_blocks=6):
+    """A transformer-shaped pytree: many leaves, mixed tiny/large sizes."""
+    keys = jax.random.split(key, 3 * n_blocks + 2)
+    tree = {"embed": jax.random.normal(keys[0], (64, 32))}
+    for b in range(n_blocks):
+        tree[f"block{b}"] = {
+            "wq": jax.random.normal(keys[3 * b + 1], (32, 48)),
+            "wo": jax.random.normal(keys[3 * b + 2], (48, 32)),
+            "norm": jax.random.normal(keys[3 * b + 3], (32,)),
+        }
+    tree["final_norm"] = jax.random.normal(keys[-1], (32,))
+    return tree
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("identity", {}),
+    ("topk", {"ratio": 0.2}),
+    ("randk", {"ratio": 0.2}),
+])
+@pytest.mark.parametrize("chunk", [64, 1000, 1 << 16])
+def test_chunked_decode_parity_with_per_leaf_path(name, kw, chunk):
+    """decode(encode_tree_chunked(q)) reproduces the compressed tree BIT-
+    exactly, element-for-element equal to the per-leaf encode/decode path."""
+    comp = make_compressor(name, **kw)
+    codec = codec_for(comp)
+    key = jax.random.PRNGKey(0)
+    q = comp.compress_tree(key, _lm_like_tree(jax.random.PRNGKey(1)))
+
+    back = codec.decode_tree_chunked(codec.encode_tree_chunked(q, chunk), q)
+    # per-leaf reference path
+    leaves = jax.tree.leaves(q)
+    per_leaf = [
+        codec.decode(p).reshape(np.shape(l))
+        for p, l in zip(codec.encode_tree(q), leaves)
+    ]
+    for got, ref, leaf in zip(jax.tree.leaves(back), per_leaf, leaves):
+        np.testing.assert_array_equal(got, ref)
+        np.testing.assert_array_equal(got, np.asarray(leaf, np.float32))
+
+
+def test_chunked_headers_amortize():
+    """A many-leaf tree pays one header per chunk instead of per leaf, and
+    both paths carry the same number of sparse records."""
+    comp = make_compressor("topk", ratio=0.2)
+    codec = codec_for(comp)
+    q = comp.compress_tree(jax.random.PRNGKey(0), _lm_like_tree(jax.random.PRNGKey(1)))
+    n_leaves = len(jax.tree.leaves(q))
+    total = sum(int(np.size(l)) for l in jax.tree.leaves(q))
+    nnz = sum(int(np.count_nonzero(l)) for l in jax.tree.leaves(q))
+    chunk = 1 << 16  # whole tree in one chunk
+    per_leaf = codec.tree_bytes(q)
+    chunked = codec.tree_bytes_chunked(q, chunk)
+    hdr = 9  # _HDR_S
+    n_chunks = -(-total // chunk)
+    assert per_leaf == n_leaves * hdr + 8 * nnz
+    assert chunked == n_chunks * hdr + 8 * nnz
+    assert chunked < per_leaf
+
+
+def test_chunked_quant_rejected():
+    codec = QuantCodec(bits=4, block=0)
+    with pytest.raises(ValueError, match="chunked"):
+        codec.encode_tree_chunked({"a": np.ones(8, np.float32)}, 4)
+
+
+def test_chunked_wrong_size_rejected():
+    codec = SparseCodec()
+    tree = {"a": np.zeros(16, np.float32)}
+    payloads = codec.encode_tree_chunked(tree, 8)
+    with pytest.raises(ValueError, match="elements"):
+        codec.decode_tree_chunked(payloads, {"a": np.zeros(17, np.float32)})

@@ -1,0 +1,335 @@
+"""repro.transport acceptance suite (ISSUE 4).
+
+* protocol conformance for both backends (pricing face == the fabric API,
+  exchange face delivers payloads with codec-true byte reports);
+* `SimTransport` is BIT-exact with the pre-transport priced path —
+  `run(transport=SimTransport(fabric))` == `run(fabric=fabric)` array for
+  array, sync and async (the committed golden traces stay untouched);
+* `DeviceTransport` (subprocess, 8 forced host devices) reproduces the
+  sequential sync trajectory within fp32 tolerance on both collective
+  engines (ring -> ppermute, star -> all_gather), and its per-round
+  EXECUTED payload bytes equal `wire.measure_tree_bytes` exactly.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.c2dfb import C2DFBConfig, run
+from repro.core.compression import make_compressor
+from repro.core.topology import ring, star
+from repro.data.bilevel_tasks import coefficient_tuning_task
+from repro.net import make_fabric
+from repro.net.wire import measure_tree_bytes
+from repro.transport import ExchangeReport, SimTransport, Transport
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(m=4):
+    bundle = coefficient_tuning_task(m=m, n=80, p=12, c=3, h=0.5, seed=0)
+    topo = ring(m)
+    cfg = C2DFBConfig(
+        K=3, compressor="topk", comp_ratio=0.3, gamma_in=0.3, eta_in=0.3
+    )
+    return bundle, topo, cfg
+
+
+def _assert_tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# protocol conformance
+# ---------------------------------------------------------------------------
+
+
+def test_transport_is_abstract():
+    with pytest.raises(TypeError):
+        Transport()  # bind/executes/exchange are abstract
+
+
+def test_sim_transport_mirrors_fabric_pricing():
+    """Every pricing query answered through the transport face equals the
+    fabric's own answer (same seed, same streams)."""
+    _, topo, _ = _setup()
+    fabric = make_fabric(topo, profile="wan", seed=7, compute_s=0.01)
+    t = SimTransport(make_fabric(topo, profile="wan", seed=7, compute_s=0.01))
+    t.bind(topo)
+    assert t.topo is t.fabric.topo
+    assert t.egress_s(1000) == fabric.egress_s(1000)
+    r1, r2 = fabric.round_rng(3), t.round_rng(3)
+    assert fabric.message_arrival(1.0, 500, r1) == t.message_arrival(
+        1.0, 500, r2
+    )
+    rep_f = fabric.simulate_round([1000, 2000], 5, labels=["a", "b"])
+    rep_t = t.simulate_round([1000, 2000], 5, labels=["a", "b"])
+    assert rep_f["sim_seconds"] == rep_t["sim_seconds"]
+    assert rep_f["wire_bytes"] == rep_t["wire_bytes"]
+    assert fabric.clock_s == t.clock_s
+    t.reset()
+    assert t.clock_s == 0.0
+
+
+def test_sim_exchange_delivers_identity_with_codec_bytes():
+    bundle, topo, cfg = _setup()
+    comp = cfg.make_compressor()
+    t = SimTransport(make_fabric(topo, profile="lan", seed=0)).bind(topo)
+    payload = comp.compress_tree(
+        KEY, jax.tree.map(lambda v: v * 0.1, bundle.y0)
+    )
+    delivered, rep = t.exchange(payload, comp, round_idx=0)
+    _assert_tree_equal(delivered, payload)
+    assert isinstance(rep, ExchangeReport)
+    m = topo.m
+    for i in range(m):
+        sl = jax.tree.map(lambda v, i=i: v[i][None], payload)
+        assert rep.node_bytes[i] == measure_tree_bytes(comp, sl)
+    deg = [len(topo.neighbors[i]) for i in range(m)]
+    assert rep.wire_bytes == sum(d * b for d, b in zip(deg, rep.node_bytes))
+    assert rep.duration_s > 0.0 and rep.wall_s == 0.0
+
+
+def test_transport_usage_errors():
+    bundle, topo, cfg = _setup()
+    t = SimTransport()
+    with pytest.raises(ValueError, match="not bound"):
+        t.simulate_round([100], 0)
+    with pytest.raises(ValueError, match="fabric OR transport"):
+        run(
+            bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=1, key=KEY,
+            fabric=make_fabric(topo), transport=SimTransport(),
+        )
+    with pytest.raises(ValueError, match="fabric OR profile kwargs"):
+        SimTransport(make_fabric(topo), profile="wan")
+    bound = SimTransport(make_fabric(topo)).bind(topo)
+    with pytest.raises(ValueError, match="bound to topology"):
+        bound.bind(star(6))
+    from repro.async_gossip.scheduler import AsyncScheduler
+
+    with pytest.raises(ValueError, match="not bound"):
+        AsyncScheduler(SimTransport())  # unbound transport, named error
+
+
+def test_device_transport_device_count_error():
+    from repro.transport import mesh_for_nodes
+
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        mesh_for_nodes(4096)
+
+
+# ---------------------------------------------------------------------------
+# SimTransport: bit-exact with the existing priced path
+# ---------------------------------------------------------------------------
+
+
+def test_sim_transport_sync_run_bit_exact():
+    bundle, topo, cfg = _setup()
+    s1, m1 = run(
+        bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=3, key=KEY,
+        fabric=make_fabric(topo, profile="wan", seed=0),
+    )
+    s2, m2 = run(
+        bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=3, key=KEY,
+        transport=SimTransport(make_fabric(topo, profile="wan", seed=0)),
+    )
+    assert set(m1) == set(m2)
+    for k in m1:
+        np.testing.assert_array_equal(np.asarray(m1[k]), np.asarray(m2[k]))
+    _assert_tree_equal(s1.x, s2.x)
+    _assert_tree_equal(s1.inner_y.d, s2.inner_y.d)
+
+
+def test_sim_transport_async_run_bit_exact():
+    bundle, topo, cfg = _setup()
+    kw = dict(async_mode="bounded", staleness_bound=1)
+    s1, m1 = run(
+        bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=3, key=KEY,
+        fabric=make_fabric(topo, profile="geo", straggler="lognormal",
+                           compute_s=0.01, seed=0),
+        **kw,
+    )
+    s2, m2 = run(
+        bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=3, key=KEY,
+        transport=SimTransport(
+            make_fabric(topo, profile="geo", straggler="lognormal",
+                        compute_s=0.01, seed=0)
+        ),
+        **kw,
+    )
+    for k in m1:
+        if k == "ledger":
+            continue
+        np.testing.assert_array_equal(np.asarray(m1[k]), np.asarray(m2[k]))
+    _assert_tree_equal(s1.x, s2.x)
+
+
+def test_inner_loop_and_baseline_transport_pricing_match_fabric():
+    from repro.core.baselines import MDBOConfig, mdbo_init, mdbo_round
+    from repro.core.inner_loop import inner_init, inner_loop
+
+    bundle, topo, cfg = _setup()
+    comp = cfg.make_compressor()
+    W = jnp.asarray(topo.W, jnp.float32)
+    grad = lambda d: jax.tree.map(lambda v: v * 0.1, d)
+    st0 = inner_init(bundle.y0, grad)
+    _, mf = inner_loop(
+        st0, KEY, grad, W, comp, 0.3, 0.1, 3,
+        fabric=make_fabric(topo, profile="wan", seed=0),
+    )
+    _, mt = inner_loop(
+        st0, KEY, grad, W, comp, 0.3, 0.1, 3,
+        transport=SimTransport(
+            make_fabric(topo, profile="wan", seed=0)
+        ).bind(topo),
+    )
+    assert mf["wire_bytes"] == mt["wire_bytes"]
+    assert mf["sim_seconds"] == mt["sim_seconds"]
+
+    dcfg = MDBOConfig(K=2, neumann_N=2)
+    st = mdbo_init(bundle.x0, bundle.y0)
+    _, bf = mdbo_round(
+        st, bundle.problem, topo, dcfg,
+        fabric=make_fabric(topo, profile="wan", seed=0),
+    )
+    _, bt = mdbo_round(
+        st, bundle.problem, topo, dcfg,
+        transport=SimTransport(make_fabric(topo, profile="wan", seed=0)),
+    )
+    assert bf["wire_bytes"] == bt["wire_bytes"]
+    assert bf["sim_seconds"] == bt["sim_seconds"]
+
+
+# ---------------------------------------------------------------------------
+# DeviceTransport: executed collectives (subprocess, 8 virtual devices)
+# ---------------------------------------------------------------------------
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import json
+import jax
+import numpy as np
+from repro.core.c2dfb import C2DFBConfig, run
+from repro.core.topology import ring, star
+from repro.data.bilevel_tasks import coefficient_tuning_task
+from repro.net.wire import measure_tree_bytes
+from repro.transport import DeviceTransport
+from repro.transport.engine import run_c2dfb_transport
+
+m = 4
+bundle = coefficient_tuning_task(m=m, n=80, p=12, c=3, h=0.5, seed=0)
+cfg = C2DFBConfig(K=3, compressor="topk", comp_ratio=0.3, gamma_in=0.3,
+                  eta_in=0.3)
+key = jax.random.PRNGKey(0)
+comp = cfg.make_compressor()
+out = {}
+for topo, name in [(ring(m), "ring"), (star(m), "star")]:
+    ref_state, ref_mets = run(
+        bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=3, key=key
+    )
+    tr = DeviceTransport()
+    st, mets = run_c2dfb_transport(
+        bundle.problem, topo, cfg, bundle.x0, bundle.y0, 3, key, tr,
+        return_payloads=True,
+    )
+    dx = float(np.max(np.abs(np.asarray(st.x) - np.asarray(ref_state.x))))
+    dy = float(np.max(np.abs(
+        np.asarray(st.inner_y.d) - np.asarray(ref_state.inner_y.d)
+    )))
+    ds = float(np.max(np.abs(
+        np.asarray(st.s_x) - np.asarray(ref_state.s_x)
+    )))
+    # AC: per-round executed payload bytes == wire.measure_tree_bytes
+    byte_parity = True
+    for t, pl in enumerate(mets["payloads"]):
+        for tag in ("y", "z"):
+            q_d, q_s = pl[tag]
+            for k in range(cfg.K):
+                for lname, stack in (("d", q_d), ("s", q_s)):
+                    nb = pl["node_bytes"][f"{tag}/in{k}/{lname}"]
+                    for i in range(m):
+                        sl = jax.tree.map(lambda v: v[k, i][None], stack)
+                        byte_parity &= (
+                            nb[i] == measure_tree_bytes(comp, sl)
+                        )
+    # wire_bytes == sum over directed edges & phases of executed bytes
+    deg = [len(topo.neighbors[i]) for i in range(m)]
+    wire_ok = True
+    for t, pl in enumerate(mets["payloads"]):
+        total = sum(
+            d * b
+            for nb in pl["node_bytes"].values()
+            for d, b in zip(deg, nb)
+        )
+        wire_ok &= total == int(mets["wire_bytes"][t])
+    out[name] = {
+        "dx": dx, "dy": dy, "ds": ds,
+        "byte_parity": bool(byte_parity),
+        "wire_ok": bool(wire_ok),
+        "measured_equal": bool(np.array_equal(
+            np.asarray(ref_mets["measured_bytes"]),
+            np.asarray(mets["measured_bytes"]),
+        )),
+    }
+
+# exchange-face conformance on the executed backend
+topo = ring(m)
+tr = DeviceTransport().bind(topo)
+payload = comp.compress_tree(
+    jax.random.PRNGKey(1),
+    jax.tree.map(lambda v: v * 0.1, bundle.y0),
+)
+delivered, rep = tr.exchange(payload, comp, round_idx=0)
+ex_exact = all(
+    np.array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(delivered), jax.tree.leaves(payload))
+)
+nb_ok = all(
+    rep.node_bytes[i] == measure_tree_bytes(
+        comp, jax.tree.map(lambda v, i=i: v[i][None], payload)
+    )
+    for i in range(m)
+)
+out["exchange"] = {"exact": bool(ex_exact), "node_bytes_ok": bool(nb_ok),
+                   "wall_positive": rep.wall_s > 0.0}
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_device_transport_parity_and_bytes():
+    """c2dfb.run over DeviceTransport on 8 virtual CPU devices: sequential
+    sync trajectory within fp32 tolerance (both collective engines), exact
+    codec byte parity of every executed payload, measured_bytes identical
+    to the simulator's in-scan counter."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep)
+    )
+    res = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env=env, timeout=600,
+    )
+    assert res.returncode == 0, res.stderr[-3000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    for name in ("ring", "star"):
+        r = out[name]
+        assert r["dx"] < 1e-4 and r["dy"] < 1e-4 and r["ds"] < 1e-4, (name, r)
+        assert r["byte_parity"], (name, r)
+        assert r["wire_ok"], (name, r)
+        assert r["measured_equal"], (name, r)
+    assert out["exchange"]["exact"]
+    assert out["exchange"]["node_bytes_ok"]
+    assert out["exchange"]["wall_positive"]
