@@ -23,7 +23,23 @@ policies rerun with inverse-age / exp-decay weight damping at a LARGE
 mixing step (gamma_in = 0.5) — the regime where undamped fully-async
 gossip diverges and the damped runs stay convergent.
 
-    PYTHONPATH=src python benchmarks/bench_async.py [--smoke] [--full] [--adaptive]
+``--compiled`` adds the compiled-runtime axis (`repro.async_gossip
+.compiled`): each geo-profile policy runs through BOTH engines — the
+eager byte-accurate reference and the single-``lax.scan`` compiled
+runtime — at T = 50 (T = 12 under ``--smoke``), cold (first call,
+includes jit compile) and warm (same shapes through a shared
+``fn_cache``, steady-state wall-clock).  Columns report wall seconds and
+the per-body jit-trace counts; the axis also reruns the compiled path at
+2T with fresh caches and HARD-asserts the trace count is constant in T
+(one compile, not O(T)).
+
+Compiled-axis invocations write ``BENCH_async.json`` — wall-clock,
+speedups, trace counts and final consensus errors — the perf baseline
+future PRs regress against (CI runs ``--smoke --compiled-only`` and
+uploads it as an artifact; the committed baseline is a full
+``--compiled`` run).  Suite-only runs never touch the file.
+
+    PYTHONPATH=src python benchmarks/bench_async.py [--smoke] [--full] [--adaptive] [--compiled] [--compiled-only]
     PYTHONPATH=src python -m benchmarks.run --only async
 """
 
@@ -80,17 +96,32 @@ ADAPTIVE_POLICIES = [
 ]
 
 TRACE_PATH = "bench_async_trace.json"
+BENCH_PATH = "BENCH_async.json"
+
+#: the geo fabric the compiled axis is read on (the acceptance profile:
+#: latency >> compute, where the eager engine's host round-trips hurt most)
+GEO_KW = dict(profile="geo", straggler="lognormal", compute_s=0.05, sigma=0.8)
+
+
+def _task(smoke: bool, comm_bound: bool = False):
+    """The bench task.  ``comm_bound`` selects the compiled axis's
+    per-node data size: modest data under geo latency — the paper's
+    target regime, and the one the compiled runtime exists for.  At
+    math-bound sizes both engines spend their time in the same jitted
+    round body and the speedup asymptotes to 1 + overhead/math; in the
+    comm-bound regime the eager engine's per-round host work (residual
+    serialization, scheduler, dispatch, device sync) dominates, which is
+    exactly what phase-2-as-one-scan removes."""
+    m = 6 if smoke else 10
+    K = 4 if smoke else 6
+    n, p = (300, 40) if smoke else ((500, 30) if comm_bound else (1500, 120))
+    bundle = coefficient_tuning_task(m=m, n=n, p=p, c=5, h=0.8, seed=0)
+    return m, K, bundle, ring(m)
 
 
 def run_suite(fast: bool = True, smoke: bool = False, adaptive: bool = False):
-    m = 6 if smoke else 10
     T = 3 if smoke else (8 if fast else 20)
-    K = 4 if smoke else 6
-    bundle = coefficient_tuning_task(
-        m=m, n=300 if smoke else 1500, p=40 if smoke else 120, c=5,
-        h=0.8, seed=0,
-    )
-    topo = ring(m)
+    m, K, bundle, topo = _task(smoke)
     # gamma_in: with the adaptive axis on, run at the LARGE mixing step the
     # damping policies are built to rescue (undamped full-async diverges
     # there on geo — that divergence is part of the read-out)
@@ -101,6 +132,7 @@ def run_suite(fast: bool = True, smoke: bool = False, adaptive: bool = False):
     )
     key = jax.random.PRNGKey(0)
     trace_out = {}
+    rows = []
     policies = POLICIES + (ADAPTIVE_POLICIES if adaptive else [])
 
     for net_name, net_kw in NET_PROFILES:
@@ -134,6 +166,14 @@ def run_suite(fast: bool = True, smoke: bool = False, adaptive: bool = False):
                 f"staleness_mean={float(np.asarray(mets['staleness_mean']).mean()):.2f};"
                 f"wire_bytes={int(np.asarray(mets['wire_bytes']).sum())}",
             )
+            rows.append({
+                "profile": net_name, "policy": label, "damping": damping,
+                "T": T, "wall_s": dt,
+                "simulated_seconds": float(sim[-1]),
+                "t_to_sync_err": t_hit,
+                "final_consensus_err": float(err[-1]),
+                "wire_bytes": int(np.asarray(mets["wire_bytes"]).sum()),
+            })
             if tr is not None:
                 trace_out[label] = tr.to_chrome_trace()
 
@@ -149,9 +189,142 @@ def run_suite(fast: bool = True, smoke: bool = False, adaptive: bool = False):
             fh,
         )
     print(f"# chrome trace: {TRACE_PATH}", flush=True)
+    return rows
+
+
+def _timed_async_run(engine, bundle, topo, cfg, T, fabric_kw, policy, bound,
+                     fn_cache):
+    """One engine invocation on a fresh (identically seeded) fabric:
+    returns (wall seconds, per-body jit-trace delta, final consensus
+    err).  Passing the same ``fn_cache`` across calls reuses the jitted
+    round/scan, so the second call times the steady state."""
+    from repro.async_gossip import (
+        reset_trace_counts, run_async, run_async_compiled, trace_counts,
+    )
+
+    fabric = make_fabric(topo, seed=0, **fabric_kw)
+    runner = run_async_compiled if engine == "compiled" else run_async
+    reset_trace_counts()
+    t0 = time.time()
+    _, mets = runner(
+        bundle.problem, topo, cfg, bundle.x0, bundle.y0, T,
+        jax.random.PRNGKey(0), fabric, policy=policy, bound=bound,
+        fn_cache=fn_cache,
+    )
+    dt = time.time() - t0
+    err = np.asarray(mets["y_consensus_err"], np.float64)
+    return dt, trace_counts(), err
+
+
+def run_compiled_axis(smoke: bool = False) -> dict:
+    """The ``--compiled`` axis: eager vs compiled wall-clock on the geo
+    profile (cold = includes jit compile; warm = shared ``fn_cache``,
+    steady state), per-body jit-trace counts, and the constant-in-T
+    compile assertion (the compiled path must trace its scan ONCE however
+    large T is — rerun at 2T with fresh caches and compare)."""
+    T = 12 if smoke else 50
+    m, K, bundle, topo = _task(smoke, comm_bound=True)
+    cfg = C2DFBConfig(
+        lam=10.0, eta_out=0.3, gamma_out=0.5, eta_in=0.3, gamma_in=0.3,
+        K=K, compressor="topk", comp_ratio=0.5,
+    )
+    axis = {"T": T, "profile": "geo_straggler", "m": m, "K": K, "rows": []}
+    for label, mode, bound, _ in POLICIES:
+        row = {"policy": label, "T": T}
+        for engine in ("eager", "compiled"):
+            cache = {}
+            wall_cold, traces_cold, err = _timed_async_run(
+                engine, bundle, topo, cfg, T, GEO_KW, mode, bound, cache
+            )
+            warm_walls = []
+            for _ in range(2):  # best-of-2 warm reps damp load noise
+                wall_warm, traces_warm, err_w = _timed_async_run(
+                    engine, bundle, topo, cfg, T, GEO_KW, mode, bound,
+                    cache,
+                )
+                # equal_nan: the never-waiting full policy may genuinely
+                # diverge at this T x staleness product — deterministically
+                assert np.array_equal(err, err_w, equal_nan=True), (
+                    "warm rerun must be deterministic"
+                )
+                assert not traces_warm, (
+                    f"{engine} retraced on identical shapes: {traces_warm}"
+                )
+                warm_walls.append(wall_warm)
+            row[engine] = {
+                "wall_s_cold": wall_cold, "wall_s_warm": min(warm_walls),
+                "traces_cold": traces_cold,
+                "final_consensus_err": float(err[-1]),
+            }
+        row["speedup_cold"] = (
+            row["eager"]["wall_s_cold"] / row["compiled"]["wall_s_cold"]
+        )
+        row["speedup_warm"] = (
+            row["eager"]["wall_s_warm"] / row["compiled"]["wall_s_warm"]
+        )
+        emit(
+            f"async_compiled/geo_straggler/{label}",
+            row["compiled"]["wall_s_warm"] * 1e6 / T,
+            f"T={T};"
+            f"wall_s_eager={row['eager']['wall_s_warm']:.2f};"
+            f"wall_s_compiled={row['compiled']['wall_s_warm']:.2f};"
+            f"speedup_warm={row['speedup_warm']:.2f};"
+            f"speedup_cold={row['speedup_cold']:.2f};"
+            f"eager_traces={row['eager']['traces_cold']};"
+            f"compiled_traces={row['compiled']['traces_cold']}",
+        )
+        axis["rows"].append(row)
+
+    # ---- constant-in-T compile assertion (one compile, not O(T)) ------
+    counts = {}
+    for T_probe in (T, 2 * T):
+        _, traces, _ = _timed_async_run(
+            "compiled", bundle, topo, cfg, T_probe, GEO_KW, "bounded", 1, {}
+        )
+        counts[T_probe] = traces
+        if traces.get("compiled_scan") != 1 or traces.get("c2dfb_round") != 1:
+            raise SystemExit(
+                f"compiled path traced more than once at T={T_probe}: "
+                f"{traces}"
+            )
+    if counts[T] != counts[2 * T]:
+        raise SystemExit(
+            f"compiled trace count is not constant in T: {counts}"
+        )
+    axis["trace_counts_by_T"] = {str(k): v for k, v in counts.items()}
+    emit(
+        "async_compiled/trace_count",
+        0.0,
+        f"constant_in_T={counts[T]};probed_T={sorted(counts)}",
+    )
+    return axis
+
+
+def _json_safe(obj):
+    """RFC-8259-safe payload: non-finite floats (the full policy's
+    divergent consensus err) become None — bare NaN tokens would break
+    jq / JSON.parse consumers of the baseline artifact."""
+    if isinstance(obj, dict):
+        return {k: _json_safe(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_json_safe(v) for v in obj]
+    if isinstance(obj, float) and not np.isfinite(obj):
+        return None
+    return obj
+
+
+def _write_bench_json(payload: dict) -> None:
+    with open(BENCH_PATH, "w") as fh:
+        json.dump(_json_safe(payload), fh, indent=2, sort_keys=True,
+                  allow_nan=False)
+    print(f"# bench baseline: {BENCH_PATH}", flush=True)
 
 
 def run(fast: bool = True, **_kw):  # benchmarks.run harness entry point
+    # no BENCH_async.json here: the committed perf baseline is the
+    # `bench_async.py --compiled` CLI run's payload (suite + compiled
+    # axis + trace counts); the harness must not clobber it with a
+    # suite-only file
     run_suite(fast=fast)
 
 
@@ -165,9 +338,37 @@ def main() -> None:
     ap.add_argument("--adaptive", action="store_true",
                     help="add the staleness-adaptive damping axis (and run "
                          "at the large gamma_in the damping rescues)")
+    ap.add_argument("--compiled", action="store_true",
+                    help="add the compiled-runtime axis: eager vs one-scan "
+                         "wall-clock on geo, compile counts, constant-in-T "
+                         "assertion")
+    ap.add_argument("--compiled-only", action="store_true",
+                    help="run ONLY the compiled axis (skip the eager "
+                         "time-to-accuracy suite) — the CI perf-smoke step")
     args = ap.parse_args()
+    compiled = args.compiled or args.compiled_only
     print("name,us_per_call,derived")
-    run_suite(fast=not args.full, smoke=args.smoke, adaptive=args.adaptive)
+    payload = {
+        "meta": {
+            "smoke": args.smoke, "full": args.full,
+            "adaptive": args.adaptive, "compiled": compiled,
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+        },
+    }
+    if not args.compiled_only:
+        payload["suite"] = run_suite(
+            fast=not args.full, smoke=args.smoke, adaptive=args.adaptive
+        )
+    if compiled:
+        payload["compiled_axis"] = run_compiled_axis(smoke=args.smoke)
+        # only compiled-axis runs write the baseline (suite-only runs
+        # never touch the file).  --smoke compiled runs DO write it —
+        # CI uploads that payload as its artifact — and are flagged by
+        # meta.smoke; the committed baseline must come from a full
+        # `--compiled` run, so regenerate before committing if a smoke
+        # run overwrote it
+        _write_bench_json(payload)
 
 
 if __name__ == "__main__":

@@ -16,20 +16,45 @@ event-driven execution model over the `repro.net` fabric:
   ``c2dfb.run(async_mode=...)``, composing with `repro.net.dynamic`
   topology schedules: dropped edges freeze their reference history and
   re-enter with their true version age) and `run_baseline_async`
-  (MADSBO / MDBO value-gossip loops under the same scheduler).
+  (MADSBO / MDBO value-gossip loops under the same scheduler).  The
+  round bodies (`c2dfb_masked_round` + the baseline twin) jit once per
+  run — a ``lax.cond`` keeps zero-age rounds bit-identical to sync.
+* ``compiled`` — `run_async_compiled` (``c2dfb.run(async_mode=...,
+  compiled=True)``): replay the scheduler once with analytic payload
+  sizes, then ride all T rounds on a single jitted ``lax.scan`` with a
+  donated carry — same math as the eager engine, byte accuracy traded
+  only in the timing model.
 * ``ledger``   — `StalenessLedger`: per-edge age histograms and the
   consensus-error-vs-simulated-seconds curves time-to-accuracy
   comparisons are read off of.
 """
 
+from repro.async_gossip.compiled import (
+    run_async_compiled,
+    run_baseline_async_compiled,
+)
 from repro.async_gossip.engine import (
+    analytic_message_bytes,
     async_c2dfb_round,
     async_inner_loop,
+    baseline_masked_round,
+    c2dfb_masked_round,
+    c2dfb_schedule_round,
+    cached_jit,
     delayed_value_scan,
+    record_trace,
+    reset_trace_counts,
     run_async,
     run_baseline_async,
+    trace_counts,
 )
-from repro.async_gossip.ledger import LoopRecord, StalenessLedger
+from repro.async_gossip.ledger import (
+    LoopRecord,
+    StalenessLedger,
+    edge_age_samples,
+    replay_staleness_rows,
+    staleness_stats,
+)
 from repro.async_gossip.mixing import (
     DAMPING_POLICIES,
     damp_weights,
@@ -37,9 +62,15 @@ from repro.async_gossip.mixing import (
     init_history,
     mix_delta_delayed,
     push_history,
+    required_depth,
     validate_damping,
 )
-from repro.async_gossip.scheduler import POLICIES, AsyncScheduler, AsyncTimeline
+from repro.async_gossip.scheduler import (
+    POLICIES,
+    AsyncScheduler,
+    AsyncTimeline,
+    RoundTimeline,
+)
 
 __all__ = [
     "DAMPING_POLICIES",
@@ -47,16 +78,31 @@ __all__ = [
     "AsyncScheduler",
     "AsyncTimeline",
     "LoopRecord",
+    "RoundTimeline",
     "StalenessLedger",
-    "damp_weights",
-    "damping_factor",
+    "analytic_message_bytes",
     "async_c2dfb_round",
     "async_inner_loop",
+    "baseline_masked_round",
+    "c2dfb_masked_round",
+    "c2dfb_schedule_round",
+    "cached_jit",
+    "damp_weights",
+    "damping_factor",
     "delayed_value_scan",
+    "edge_age_samples",
     "init_history",
     "mix_delta_delayed",
     "push_history",
+    "record_trace",
+    "replay_staleness_rows",
+    "required_depth",
+    "reset_trace_counts",
     "run_async",
+    "run_async_compiled",
     "run_baseline_async",
+    "run_baseline_async_compiled",
+    "staleness_stats",
+    "trace_counts",
     "validate_damping",
 ]

@@ -9,21 +9,30 @@ Couples the three halves of the subsystem:
 * `ledger.StalenessLedger` keeps the ages and the consensus-vs-seconds
   curve as first-class round metrics.
 
-The outer loop runs EAGERLY round-by-round (the jitted work is per-round):
-each round the current residuals are serialized by the wire codec to get
-honest per-node packet sizes, the scheduler executes the two inner loops
-event-driven (outer x / s_x broadcasts stay barrier-synchronized —
-Algorithm 1's round boundary, which also drains in-flight residuals so the
-next round's version-0 references are globally consistent), and the
-resulting age tensors ride into the jitted round as scan inputs.
+The outer loop here runs EAGERLY round-by-round (the jitted work is
+per-round): each round the current residuals are serialized by the wire
+codec to get honest per-node packet sizes, the scheduler executes the two
+inner loops event-driven (outer x / s_x broadcasts stay
+barrier-synchronized — Algorithm 1's round boundary, which also drains
+in-flight residuals so the next round's version-0 references are globally
+consistent), and the resulting age tensors ride into the jitted round as
+scan inputs.  `repro.async_gossip.compiled` is the two-phase twin: it
+replays the same scheduler up front with ANALYTIC payload sizes
+(`analytic_message_bytes`) and runs all T rounds as ONE jitted
+``lax.scan`` over the stacked age tensors — same math
+(`c2dfb_masked_round` is the single round body both paths jit), byte
+accuracy traded only in the timing model.
 
 Rounds whose age tensors are all zero take a fast path that is
 OP-IDENTICAL to the synchronous `c2dfb_round` — so a zero-latency fabric
 reproduces the synchronous trajectory bit-for-bit (tested), not merely to
-tolerance.
+tolerance.  The fast path is a ``lax.cond`` branch inside the one jitted
+round body, so selecting it never retraces.
 """
 
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -52,6 +61,94 @@ from repro.core.inner_loop import (
 )
 from repro.core.topology import Topology
 from repro.core.types import Pytree, consensus_error, tree_sq_norm
+
+#: Payload-size models for the eager engine: "measured" serializes the
+#: CURRENT residuals every round (codec truth, byte-accurate timing),
+#: "analytic" prices every round with the constant
+#: `analytic_message_bytes` size — the compiled runtime's timing model,
+#: exposed here so eager-vs-compiled trajectory parity can be asserted
+#: under identical timelines.
+PAYLOAD_MODES = ("measured", "analytic")
+
+# ---------------------------------------------------------------------------
+# trace accounting + the one keyed jit cache every engine path shares
+# ---------------------------------------------------------------------------
+
+#: Python-trace counters, bumped at TRACE time inside the round bodies —
+#: a retrace shows up as an increment, so tests and benchmarks can assert
+#: the compiled path compiles once (not O(T)) and the eager path never
+#: retraces across rounds.
+_TRACE_COUNTS: dict[str, int] = {}
+
+
+def record_trace(name: str) -> None:
+    """Bump a named trace counter (called from inside traced functions, so
+    it fires once per compilation, not per execution)."""
+    _TRACE_COUNTS[name] = _TRACE_COUNTS.get(name, 0) + 1
+
+
+def trace_counts() -> dict[str, int]:
+    """Snapshot of the per-body trace counters."""
+    return dict(_TRACE_COUNTS)
+
+
+def reset_trace_counts() -> None:
+    _TRACE_COUNTS.clear()
+
+
+def cached_jit(cache: dict, key: tuple, build, **jit_kwargs):
+    """The ONE keyed jit-cache helper for every engine path (C2DFB,
+    MADSBO, MDBO, eager and compiled): ``build()`` is called once per
+    ``key`` and the jitted result memoized in ``cache``.
+
+    Each run owns a private cache by default; callers that pass the same
+    dict across runs (``fn_cache=...`` on the run functions — the
+    benchmark's warm-timing axis does) share compilations, which is safe
+    exactly when the key captures everything the closure bakes in — keys
+    therefore carry ``id(problem)`` / ``id(topo)`` plus the config and
+    policy knobs."""
+    fn = cache.get(key)
+    if fn is None:
+        fn = cache[key] = jax.jit(build(), **jit_kwargs)
+    return fn
+
+
+#: analytic packet sizes depend only on (compressor spec, leaf shapes) —
+#: memoized so repeated runs skip the probe's compress + serialize pass
+_ANALYTIC_BYTES_CACHE: dict = {}
+
+
+def analytic_message_bytes(inner: InnerState, compressor) -> int:
+    """Per-node steady-state wire bytes of one inner step's two messages
+    (d- and s-residual), from the compression SPEC alone: a dense
+    all-ones probe residual is compressed and serialized by the wire codec
+    (`repro.net.wire.measure_tree_bytes`).  Every shipped format is
+    size-deterministic on a dense probe — sparse top-k keeps exactly its
+    budget per leaf/block, quant and dense payloads are shape-static — so
+    this is the exact steady-state packet size without touching run-time
+    values.  The compiled runtime prices every round with this constant;
+    that is the one place its timing model departs from the eager
+    engine's per-round codec-measured sizes (byte accuracy traded, math
+    unchanged)."""
+    from repro.net.wire import measure_tree_bytes
+
+    leaves = jax.tree.leaves(inner.d_hat)
+    try:
+        ckey = (
+            compressor,
+            tuple((l.shape[1:], str(l.dtype)) for l in leaves),
+        )
+        cached = _ANALYTIC_BYTES_CACHE.get(ckey)
+        if cached is not None:
+            return cached
+    except TypeError:  # unhashable custom compressor: just measure
+        ckey = None
+    probe = jax.tree.map(lambda v: jnp.ones_like(v[0]), inner.d_hat)
+    q = compressor.compress_tree(jax.random.PRNGKey(0), probe)
+    nbytes = 2 * measure_tree_bytes(compressor, q)
+    if ckey is not None:
+        _ANALYTIC_BYTES_CACHE[ckey] = nbytes
+    return nbytes
 
 
 def async_inner_loop(
@@ -202,27 +299,138 @@ def _dense_node_bytes(tree: Pytree) -> int:
     return codec_for(make_compressor("identity")).tree_bytes(one)
 
 
-def _history_depth(scheduler: AsyncScheduler, K: int, max_lag: int) -> int:
-    """History slots the delayed mixing must carry when re-entry lags can
-    reach ``max_lag`` versions: every realizable age is bounded by
-    (K - 1) + max_lag for the never-waiting full policy, and by the bound
-    for bounded (whose gate also admits lag-old versions while
-    lag <= bound - k)."""
-    if max_lag <= 0:
-        return scheduler.depth_for(K)
-    max_possible_age = K - 1 + max_lag
-    if scheduler.policy == "full":
-        return max_possible_age + 1
-    if scheduler.policy == "bounded":
-        return min(scheduler.bound, max_possible_age) + 1
-    return scheduler.depth_for(K)  # sync: ages provably zero
+@dataclasses.dataclass(frozen=True)
+class _RunPlan:
+    """Everything a C2DFB async run fixes BEFORE its first round — shared
+    by the eager loop and the compiled replay so the two paths cannot
+    drift: the (static) history depth, the validated schedule stack and
+    its per-round active-edge masks, the re-entry catch-up packet size,
+    the cross-round history seed, and whether version lag must be
+    tracked."""
+
+    depth: int
+    Ws: object = None           # (T, m, m) validated schedule stack
+    masks: object = None        # (T, m, m) bool active-edge masks
+    catchup_bytes: int = 0
+    hists: dict | None = None
+    track_lag: bool = False
 
 
-def _loop_start(tl, fallback: float) -> float:
-    """A loop's true start: the earliest step-0 mix (loops overlap the
-    previous loop's in-flight packets, so the prior end_s is NOT the
-    start)."""
-    return float(tl.mix_s[0].min()) if tl.mix_s.size else float(fallback)
+def _prepare_async_run(
+    scheduler: AsyncScheduler, state, cfg, topo, T: int, schedule
+) -> _RunPlan:
+    """Size the histories and resolve the schedule/lag bookkeeping for a
+    run (see `_RunPlan`).  An injected scheduler may carry unresolved
+    version lag from a prior schedule-composed run (edges still dropped at
+    that run's end); a static follow-up run must honor it — those edges
+    re-enter at their true age with a priced catch-up, not silently at
+    age 0."""
+    depth = scheduler.depth_for(cfg.K)
+    catchup_bytes = 0
+    hists = None
+    Ws = masks = None
+    carried_lag = int(scheduler.version_lag.max())
+    if schedule is None and carried_lag > 0:
+        catchup_bytes = 2 * _dense_node_bytes(state.inner_y.d_hat)
+        depth = scheduler.depth_for(cfg.K, carried_lag)
+    if schedule is not None:
+        from repro.net.dynamic import (
+            active_edge_masks,
+            schedule_version_lags,
+            validate_schedule_stack,
+        )
+
+        Ws = validate_schedule_stack(schedule.stack(T), T, topo.m, base=topo)
+        masks = active_edge_masks(Ws)
+        _, max_lag = schedule_version_lags(masks, cfg.K)
+        # every realizable age is bounded by the replayed lag plus the
+        # carried offset (conservative: a carried edge's re-entry lag is
+        # its replayed lag + at most its entry lag)
+        depth = scheduler.depth_for(cfg.K, int(max_lag) + carried_lag)
+        # re-entering edges exchange both dense reference trees first
+        catchup_bytes = 2 * _dense_node_bytes(state.inner_y.d_hat)
+        hists = {
+            "y": (
+                init_history(state.inner_y.d_hat, depth),
+                init_history(state.inner_y.s_hat, depth),
+            ),
+            "z": (
+                init_history(state.inner_z.d_hat, depth),
+                init_history(state.inner_z.s_hat, depth),
+            ),
+        }
+    return _RunPlan(
+        depth=depth, Ws=Ws, masks=masks, catchup_bytes=catchup_bytes,
+        hists=hists, track_lag=schedule is not None or carried_lag > 0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# the single age-masked round bodies (jitted once per run, shared by the
+# eager engine and the compiled lax.scan runtime)
+# ---------------------------------------------------------------------------
+
+
+def c2dfb_masked_round(
+    state: C2DFBState,
+    key: jax.Array,
+    ages_y: jax.Array,
+    ages_z: jax.Array,
+    *,
+    problem: BilevelProblem,
+    topo: Topology,
+    cfg: C2DFBConfig,
+    depth: int,
+    damping: str = "none",
+    decay: float = 0.5,
+) -> tuple[C2DFBState, dict]:
+    """ONE C2DFB round body for every age pattern: a ``lax.cond`` on
+    "any nonzero age" selects between the delayed round and the
+    synchronous fast path, so zero-staleness rounds stay bit-identical to
+    the sync algorithm (same ops as `inner_loop`) while the whole thing
+    jits exactly once per run — no per-``delayed``-value retrace, and the
+    same body can ride a `lax.scan` with the ages as traced inputs
+    (`repro.async_gossip.compiled`)."""
+    record_trace("c2dfb_round")
+
+    def _delayed(st, k, ay, az):
+        return async_c2dfb_round(
+            st, k, problem, topo, cfg, ay, az, depth, delayed=True,
+            damping=damping, decay=decay,
+        )
+
+    def _sync(st, k, ay, az):
+        return async_c2dfb_round(
+            st, k, problem, topo, cfg, ay, az, depth, delayed=False,
+        )
+
+    stale = jnp.logical_or(jnp.any(ages_y != 0), jnp.any(ages_z != 0))
+    return jax.lax.cond(stale, _delayed, _sync, state, key, ages_y, ages_z)
+
+
+def c2dfb_schedule_round(
+    state: C2DFBState,
+    key: jax.Array,
+    W: jax.Array,
+    ages_y: jax.Array,
+    ages_z: jax.Array,
+    hists: dict,
+    *,
+    problem: BilevelProblem,
+    topo: Topology,
+    cfg: C2DFBConfig,
+    depth: int,
+    damping: str = "none",
+    decay: float = 0.5,
+) -> tuple:
+    """The schedule-composed round body: W, ages and the cross-round
+    histories all ride as traced arguments, so every schedule round (and
+    the compiled scan over all of them) shares one compilation."""
+    record_trace("c2dfb_round")
+    return async_c2dfb_round(
+        state, key, problem, topo, cfg, ages_y, ages_z, depth, delayed=True,
+        W=W, damping=damping, decay=decay, hists=hists,
+    )
 
 
 def run_async(
@@ -241,8 +449,12 @@ def run_async(
     schedule=None,
     mixing_damping: str = "none",
     damping_decay: float = 0.5,
+    payload_bytes: str = "measured",
+    fn_cache: dict | None = None,
 ) -> tuple[C2DFBState, dict]:
-    """T outer rounds of C2DFB under the async engine.
+    """T outer rounds of C2DFB under the async engine (eager outer loop —
+    the byte-accurate reference; `repro.async_gossip.compiled` is the
+    single-scan twin).
 
     Returns the final state and per-round metric arrays — the synchronous
     ``run``'s keys plus ``sim_seconds``, ``wire_bytes`` (per-link
@@ -250,6 +462,14 @@ def run_async(
     (active directed edges only) and ``staleness_hist`` (T, depth) age
     histograms.  ``policy="sync"`` is the barrier reference; "bounded"
     enforces ``age <= bound`` by gating; "full" never waits.
+
+    ``payload_bytes`` selects the timing model's packet sizes
+    (`PAYLOAD_MODES`): "measured" serializes the current residuals every
+    round, "analytic" prices every round with the compiled runtime's
+    constant `analytic_message_bytes` size — feed both engines "analytic"
+    and their trajectories must agree array-for-array
+    (tests/test_compiled_async.py).  ``fn_cache`` shares the round-body
+    jit cache across runs (see `cached_jit`).
 
     ``schedule`` (a `repro.net.dynamic.TopologySchedule`) composes the
     async engine with per-round mixing matrices: each round runs on the
@@ -263,11 +483,16 @@ def run_async(
     policy contractive at mixing steps where undamped delayed gossip
     diverges (tests/test_async_schedule_compose.py).
     """
+    from repro.async_gossip.ledger import edge_age_samples, staleness_stats
     from repro.async_gossip.mixing import validate_damping
     from repro.net.fabric import edge_list
     from repro.transport.base import as_transport
 
     validate_damping(mixing_damping)
+    if payload_bytes not in PAYLOAD_MODES:
+        raise ValueError(
+            f"unknown payload_bytes {payload_bytes!r}; have {PAYLOAD_MODES}"
+        )
     # accept a Transport wherever a fabric is accepted; the scheduler
     # consumes arrival times through the transport face either way
     transport = as_transport(fabric)
@@ -280,157 +505,97 @@ def run_async(
     ledger = ledger if ledger is not None else StalenessLedger()
     state = init_state(problem, cfg, x0, y0)
     comp = cfg.make_compressor()
-    depth = scheduler.depth_for(cfg.K)
     outer_node_bytes = _dense_node_bytes(state.x)
     compute_step = (
         fabric.compute_s / (2 * cfg.K + 2) if fabric.compute_s else 0.0
     )
     edges = edge_list(topo)
+    plan = _prepare_async_run(scheduler, state, cfg, topo, T, schedule)
+    depth = plan.depth
+    hists = plan.hists
+    const_bytes = (
+        analytic_message_bytes(state.inner_y, comp)
+        if payload_bytes == "analytic" else None
+    )
 
-    Ws = masks = None
-    hists = None
-    catchup_bytes = 0
-    # an injected scheduler may carry unresolved version lag from a prior
-    # schedule-composed run (edges still dropped at that run's end); a
-    # static follow-up run must honor it — those edges re-enter at their
-    # true age with a priced catch-up, not silently at age 0
-    carried_lag = int(scheduler.version_lag.max())
-    if schedule is None and carried_lag > 0:
-        catchup_bytes = 2 * _dense_node_bytes(state.inner_y.d_hat)
-        depth = _history_depth(scheduler, cfg.K, carried_lag)
+    cache = fn_cache if fn_cache is not None else {}
+    ckey = (
+        id(problem), id(topo), cfg, depth, mixing_damping, damping_decay,
+    )
     if schedule is not None:
-        from repro.net.dynamic import (
-            active_edge_masks,
-            schedule_version_lags,
-            validate_schedule_stack,
+        sched_round = cached_jit(
+            cache, ("c2dfb/schedule",) + ckey,
+            lambda: lambda st, k, Wt, ay, az, hs: c2dfb_schedule_round(
+                st, k, Wt, ay, az, hs, problem=problem, topo=topo, cfg=cfg,
+                depth=depth, damping=mixing_damping, decay=damping_decay,
+            ),
         )
-
-        Ws = validate_schedule_stack(schedule.stack(T), T, topo.m, base=topo)
-        masks = active_edge_masks(Ws)
-        _, max_lag = schedule_version_lags(masks, cfg.K)
-        # an injected scheduler may carry version_lag from a previous run;
-        # every realizable age is bounded by the replayed lag plus that
-        # carried offset (conservative: a carried edge's re-entry lag is
-        # its replayed lag + at most its entry lag)
-        depth = _history_depth(scheduler, cfg.K, int(max_lag) + carried_lag)
-        # re-entering edges exchange both dense reference trees first
-        catchup_bytes = 2 * _dense_node_bytes(state.inner_y.d_hat)
-        hists = {
-            "y": (
-                init_history(state.inner_y.d_hat, depth),
-                init_history(state.inner_y.s_hat, depth),
+    else:
+        round_fn = cached_jit(
+            cache, ("c2dfb/masked",) + ckey,
+            lambda: lambda st, k, ay, az: c2dfb_masked_round(
+                st, k, ay, az, problem=problem, topo=topo, cfg=cfg,
+                depth=depth, damping=mixing_damping, decay=damping_decay,
             ),
-            "z": (
-                init_history(state.inner_z.d_hat, depth),
-                init_history(state.inner_z.s_hat, depth),
-            ),
-        }
-
-    round_fns = {}
-
-    def round_fn(delayed: bool):
-        if delayed not in round_fns:
-            round_fns[delayed] = jax.jit(
-                lambda st, k, ay, az, _d=delayed: async_c2dfb_round(
-                    st, k, problem, topo, cfg, ay, az, depth, delayed=_d,
-                    damping=mixing_damping, decay=damping_decay,
-                )
-            )
-        return round_fns[delayed]
-
-    sched_round = None
-    if schedule is not None:
-        # W, ages and the cross-round histories all ride as traced
-        # arguments, so every schedule round shares one compilation
-        sched_round = jax.jit(
-            lambda st, k, Wt, ay, az, hs: async_c2dfb_round(
-                st, k, problem, topo, cfg, ay, az, depth, delayed=True,
-                W=Wt, damping=mixing_damping, decay=damping_decay, hists=hs,
-            )
         )
 
     keys = jax.random.split(key, T)
     rows: list[dict] = []
-    track_lag = schedule is not None or carried_lag > 0
     for t in range(T):
-        active_t = masks[t] if masks is not None else None
-        lag_t = scheduler.version_lag if track_lag else None
+        active_t = plan.masks[t] if plan.masks is not None else None
         if active_t is not None:
             act_edges = tuple(
                 (i, j) for i, j in edges if active_t[i, j]
             )
         else:
             act_edges = edges
-        t_start = float(scheduler.clock.max())
-        # honest per-node packet sizes: serialize the CURRENT residuals
-        kb = jax.random.fold_in(keys[t], 0xB17E)  # metering-only key
-        kby, kbz = jax.random.split(kb)
-        bd, bs = inner_message_bytes(state.inner_y, comp, kby)
-        bytes_y = np.asarray(bd) + np.asarray(bs)
-        bd, bs = inner_message_bytes(state.inner_z, comp, kbz)
-        bytes_z = np.asarray(bd) + np.asarray(bs)
+        if const_bytes is not None:
+            bytes_y = bytes_z = const_bytes
+        else:
+            # honest per-node packet sizes: serialize CURRENT residuals
+            kb = jax.random.fold_in(keys[t], 0xB17E)  # metering-only key
+            kby, kbz = jax.random.split(kb)
+            bd, bs = inner_message_bytes(state.inner_y, comp, kby)
+            bytes_y = np.asarray(bd) + np.asarray(bs)
+            bd, bs = inner_message_bytes(state.inner_z, comp, kbz)
+            bytes_z = np.asarray(bd) + np.asarray(bs)
 
-        scheduler.barrier_phase(
-            outer_node_bytes, t, compute_s=compute_step, label="x",
-            active=active_t,
+        rt = scheduler.drive_round(
+            t, cfg.K, bytes_y, bytes_z, outer_node_bytes, compute_step,
+            active=active_t, catchup_bytes=plan.catchup_bytes,
+            track_lag=plan.track_lag,
         )
-        ty0 = float(scheduler.clock.max())
-        tl_y = scheduler.run_loop(
-            cfg.K, bytes_y, t, compute_step, loop="y",
-            active=active_t, lag=lag_t, catchup_bytes=catchup_bytes,
-        )
-        tl_z = scheduler.run_loop(
-            cfg.K, bytes_z, t, compute_step, loop="z",
-            active=active_t, lag=lag_t, catchup_bytes=catchup_bytes,
-        )
-        scheduler.drain(max(tl_y.end_s, tl_z.end_s))
-        t_end = scheduler.barrier_phase(
-            outer_node_bytes, t, compute_s=compute_step, label="s_x",
-            active=active_t,
-        )
-        if track_lag:
-            scheduler.advance_lag(active_t, cfg.K)
+        tl_y, tl_z = rt.tl_y, rt.tl_z
 
         if schedule is not None:
             state, mets, hists = sched_round(
-                state, keys[t], jnp.asarray(Ws[t], jnp.float32),
+                state, keys[t], jnp.asarray(plan.Ws[t], jnp.float32),
                 jnp.asarray(tl_y.ages), jnp.asarray(tl_z.ages), hists,
             )
         else:
-            delayed = bool(tl_y.ages.any() or tl_z.ages.any())
-            state, mets = round_fn(delayed)(
+            state, mets = round_fn(
                 state, keys[t], jnp.asarray(tl_y.ages),
                 jnp.asarray(tl_z.ages),
             )
 
-        ledger.record_loop(t, "y", tl_y.ages, _loop_start(tl_y, ty0),
+        ledger.record_loop(t, "y", tl_y.ages, tl_y.start_s(rt.x_end),
                            tl_y.end_s, edges=act_edges)
-        ledger.record_loop(t, "z", tl_z.ages, _loop_start(tl_z, tl_y.end_s),
+        ledger.record_loop(t, "z", tl_z.ages, tl_z.start_s(tl_y.end_s),
                            tl_z.end_s, edges=act_edges)
         x_err = float(mets["x_consensus_err"])
-        ledger.record_point(t_end, x_err)
+        ledger.record_point(rt.t_end, x_err)
 
-        if act_edges:
-            idx_t = tuple(zip(*act_edges))
-            edge_ages = np.concatenate(
-                [tl_y.ages[:, idx_t[0], idx_t[1]].reshape(-1),
-                 tl_z.ages[:, idx_t[0], idx_t[1]].reshape(-1)]
-            )
-        else:
-            edge_ages = np.zeros(0, np.int32)
+        edge_ages = edge_age_samples((tl_y.ages, tl_z.ages), act_edges)
         outer_wire = 2 * outer_node_bytes * len(act_edges)
         row = {k: np.asarray(v) for k, v in mets.items()}
-        row["sim_seconds"] = np.float64(t_end - t_start)
+        row["sim_seconds"] = np.float64(rt.t_end - rt.t_start)
         row["wire_bytes"] = np.int64(
             tl_y.wire_bytes + tl_z.wire_bytes + outer_wire
         )
-        row["staleness_max"] = np.int32(edge_ages.max(initial=0))
-        row["staleness_mean"] = np.float64(
-            edge_ages.mean() if edge_ages.size else 0.0
-        )
-        row["staleness_hist"] = np.bincount(
-            edge_ages, minlength=depth
-        )[:depth].astype(np.int64)
+        smax, smean, shist = staleness_stats(edge_ages, depth)
+        row["staleness_max"] = smax
+        row["staleness_mean"] = smean
+        row["staleness_hist"] = shist
         rows.append(row)
 
     metrics = {
@@ -479,6 +644,102 @@ def delayed_value_scan(
     return value
 
 
+def baseline_masked_round(
+    alg: str,
+    state,
+    ages_ll: jax.Array,
+    ages_h: jax.Array | None = None,
+    *,
+    problem: BilevelProblem,
+    topo: Topology,
+    cfg,
+    depth: int,
+    damping: str = "none",
+    decay: float = 0.5,
+) -> tuple:
+    """The baselines' single age-masked round body (MADSBO / MDBO twin of
+    `c2dfb_masked_round`): one jit per run, ``lax.cond`` keeps zero-age
+    rounds bit-identical to the synchronous value-gossip scans, and the
+    same body rides the compiled ``lax.scan``."""
+    from repro.core.baselines import madsbo_round_async, mdbo_round_async
+
+    record_trace(f"{alg}_round")
+    if alg == "madsbo":
+        def _delayed(st, al, ah):
+            return madsbo_round_async(
+                st, problem, topo, cfg, al, ah, depth, delayed=True,
+                damping=damping, decay=decay,
+            )
+
+        def _sync(st, al, ah):
+            return madsbo_round_async(
+                st, problem, topo, cfg, al, ah, depth, delayed=False,
+            )
+
+        stale = jnp.logical_or(jnp.any(ages_ll != 0), jnp.any(ages_h != 0))
+        return jax.lax.cond(stale, _delayed, _sync, state, ages_ll, ages_h)
+
+    def _delayed_m(st, al):
+        return mdbo_round_async(
+            st, problem, topo, cfg, al, depth, delayed=True,
+            damping=damping, decay=decay,
+        )
+
+    def _sync_m(st, al):
+        return mdbo_round_async(
+            st, problem, topo, cfg, al, depth, delayed=False,
+        )
+
+    return jax.lax.cond(
+        jnp.any(ages_ll != 0), _delayed_m, _sync_m, state, ages_ll
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class BaselineRoundTimeline:
+    """One baseline round's scheduler execution (drive/replay unit —
+    ``tl_h`` is None for MDBO, whose Neumann terms are local compute)."""
+
+    tl_ll: object
+    tl_h: object | None
+    t_start: float
+    t_end: float
+
+
+def drive_baseline_round(
+    scheduler: AsyncScheduler,
+    alg: str,
+    round_idx: int,
+    K: int,
+    Q: int,
+    N: int,
+    dy_bytes: int,
+    dx_bytes: int,
+    compute_step: float,
+) -> BaselineRoundTimeline:
+    """One MADSBO/MDBO round's scheduler timeline: the LL value-gossip
+    loop (plus MADSBO's HIGP loop), the drain, and the upper-level
+    barrier.  Shared by the eager loop and the compiled replay — MDBO's
+    Neumann terms are local compute (no gossip in this realization) and
+    ride the barrier phase's compute slice."""
+    t_start = float(scheduler.clock.max())
+    tl_ll = scheduler.run_loop(
+        K, dy_bytes, round_idx, compute_step, loop="ll"
+    )
+    tl_h = None
+    if alg == "madsbo":
+        tl_h = scheduler.run_loop(
+            Q, dy_bytes, round_idx, compute_step, loop="higp"
+        )
+    scheduler.drain(tl_h.end_s if tl_h is not None else tl_ll.end_s)
+    t_end = scheduler.barrier_phase(
+        dx_bytes, round_idx, compute_s=compute_step * (1 + N), label="ul"
+    )
+    return BaselineRoundTimeline(
+        tl_ll=tl_ll, tl_h=tl_h, t_start=t_start, t_end=t_end
+    )
+
+
 def run_baseline_async(
     alg: str,
     problem: BilevelProblem,
@@ -493,21 +754,33 @@ def run_baseline_async(
     ledger: StalenessLedger | None = None,
     mixing_damping: str = "none",
     damping_decay: float = 0.5,
+    compiled: bool = False,
+    fn_cache: dict | None = None,
 ) -> tuple[object, dict]:
     """MADSBO / MDBO rounds driven by the AsyncScheduler: their dense
     value-gossip loops run event-driven with age-gated mixing; the
     hypergradient assembly and upper-level update stay at the (barrier)
     round boundary, mirroring the sync baselines.  ``mixing_damping``
     applies the staleness-adaptive weight policy to the value-gossip
-    loops, same contract as `run_async`."""
+    loops, same contract as `run_async`.  Baseline payload sizes are
+    dense (analytic already), so ``compiled=True`` — precompute the
+    timelines and ride one ``lax.scan``
+    (`repro.async_gossip.compiled.run_baseline_async_compiled`) — is
+    trajectory- AND byte-exact with the eager loop."""
     from repro.async_gossip.mixing import validate_damping
-    from repro.core.baselines import (
-        madsbo_init, madsbo_round_async, mdbo_init, mdbo_round_async,
-    )
+    from repro.core.baselines import madsbo_init, mdbo_init
 
     if alg not in ("madsbo", "mdbo"):
         raise ValueError(f"unknown async baseline {alg!r}")
     validate_damping(mixing_damping)
+    if compiled:
+        from repro.async_gossip.compiled import run_baseline_async_compiled
+
+        return run_baseline_async_compiled(
+            alg, problem, topo, cfg, x0, y0, T, fabric, policy=policy,
+            bound=bound, ledger=ledger, mixing_damping=mixing_damping,
+            damping_decay=damping_decay, fn_cache=fn_cache,
+        )
     from repro.transport.base import as_transport
 
     transport = as_transport(fabric).bind(topo)
@@ -527,63 +800,60 @@ def run_baseline_async(
         state = madsbo_init(problem, x0, y0)
     else:
         state = mdbo_init(x0, y0)
-    round_fns = {}
-
-    def round_fn(delayed: bool):
-        if delayed not in round_fns:
-            if alg == "madsbo":
-                round_fns[delayed] = jax.jit(
-                    lambda st, all_, ah, _d=delayed: madsbo_round_async(
-                        st, problem, topo, cfg, all_, ah, depth, delayed=_d,
-                        damping=mixing_damping, decay=damping_decay,
-                    )
-                )
-            else:
-                round_fns[delayed] = jax.jit(
-                    lambda st, all_, _d=delayed: mdbo_round_async(
-                        st, problem, topo, cfg, all_, depth, delayed=_d,
-                        damping=mixing_damping, decay=damping_decay,
-                    )
-                )
-        return round_fns[delayed]
+    cache = fn_cache if fn_cache is not None else {}
+    round_fn = _baseline_round_fn(
+        cache, alg, problem, topo, cfg, depth, mixing_damping, damping_decay
+    )
 
     rows = []
     for t in range(T):
-        t_start = float(scheduler.clock.max())
-        tl_ll = scheduler.run_loop(K, dy_bytes, t, compute_step, loop="ll")
-        if alg == "madsbo":
-            tl_h = scheduler.run_loop(Q, dy_bytes, t, compute_step, loop="higp")
-            ages_h = tl_h.ages
-            end_loops = tl_h.end_s
-        else:
-            ages_h = None
-            end_loops = tl_ll.end_s
-        scheduler.drain(end_loops)
-        # MDBO's Neumann terms are local compute (no gossip in this
-        # realization) — they ride the barrier phase's compute slice
-        t_end = scheduler.barrier_phase(
-            dx_bytes, t, compute_s=compute_step * (1 + N), label="ul"
+        rt = drive_baseline_round(
+            scheduler, alg, t, K, Q, N, dy_bytes, dx_bytes, compute_step
         )
-        delayed = bool(
-            tl_ll.ages.any() or (ages_h is not None and ages_h.any())
-        )
+        tl_ll, tl_h = rt.tl_ll, rt.tl_h
         if alg == "madsbo":
-            state, mets = round_fn(delayed)(
-                state, jnp.asarray(tl_ll.ages), jnp.asarray(ages_h)
+            state, mets = round_fn(
+                state, jnp.asarray(tl_ll.ages), jnp.asarray(tl_h.ages)
             )
         else:
-            state, mets = round_fn(delayed)(state, jnp.asarray(tl_ll.ages))
-        ledger.record_loop(t, "ll", tl_ll.ages, _loop_start(tl_ll, t_start),
-                           tl_ll.end_s)
-        if ages_h is not None:
-            ledger.record_loop(t, "higp", ages_h,
-                               _loop_start(tl_h, tl_ll.end_s), tl_h.end_s)
+            state, mets = round_fn(state, jnp.asarray(tl_ll.ages))
+        ledger.record_loop(t, "ll", tl_ll.ages,
+                           tl_ll.start_s(rt.t_start), tl_ll.end_s)
+        if tl_h is not None:
+            ledger.record_loop(t, "higp", tl_h.ages,
+                               tl_h.start_s(tl_ll.end_s), tl_h.end_s)
         x_err = float(mets["x_consensus_err"])
-        ledger.record_point(t_end, x_err)
+        ledger.record_point(rt.t_end, x_err)
         row = {k: np.asarray(v) for k, v in mets.items()}
-        row["sim_seconds"] = np.float64(t_end - t_start)
+        row["sim_seconds"] = np.float64(rt.t_end - rt.t_start)
         rows.append(row)
 
     metrics = {k: np.stack([r[k] for r in rows]) for k in rows[0]}
     metrics["ledger"] = ledger
     return state, metrics
+
+
+def _baseline_round_fn(
+    cache: dict, alg: str, problem, topo, cfg, depth: int,
+    damping: str, decay: float,
+):
+    """The baselines' jitted masked round from the shared keyed cache
+    (same helper the C2DFB paths use, so MADSBO/MDBO and C2DFB share one
+    compilation store within a run)."""
+    ckey = ("baseline", alg, id(problem), id(topo), cfg, depth, damping,
+            decay)
+    if alg == "madsbo":
+        return cached_jit(
+            cache, ckey,
+            lambda: lambda st, al, ah: baseline_masked_round(
+                alg, st, al, ah, problem=problem, topo=topo, cfg=cfg,
+                depth=depth, damping=damping, decay=decay,
+            ),
+        )
+    return cached_jit(
+        cache, ckey,
+        lambda: lambda st, al: baseline_masked_round(
+            alg, st, al, problem=problem, topo=topo, cfg=cfg,
+            depth=depth, damping=damping, decay=decay,
+        ),
+    )

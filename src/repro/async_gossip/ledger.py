@@ -18,6 +18,53 @@ import dataclasses
 import numpy as np
 
 
+def edge_age_samples(ages_list, edges) -> np.ndarray:
+    """Flatten loop age tensors to the DIRECTED-edge samples the
+    staleness metrics are computed over: only ``edges`` positions count
+    (idle diagonal / non-edge zeros would dilute every statistic).
+    ``ages_list`` is any iterable of (K, m, m) tensors (the round's y and
+    z loops, or T stacked rounds one at a time)."""
+    if not edges:
+        return np.zeros(0, np.int32)
+    idx = tuple(zip(*edges))
+    return np.concatenate(
+        [np.asarray(a)[..., idx[0], idx[1]].reshape(-1) for a in ages_list]
+    )
+
+
+def staleness_stats(
+    samples: np.ndarray, depth: int
+) -> tuple[np.int32, np.float64, np.ndarray]:
+    """One round's (staleness_max, staleness_mean, staleness_hist) from
+    its flat edge-age samples — the single definition both the eager
+    engine's per-round rows and the compiled runtime's post-hoc pass use,
+    so the two metric streams agree entry-for-entry."""
+    return (
+        np.int32(samples.max(initial=0)),
+        np.float64(samples.mean() if samples.size else 0.0),
+        np.bincount(samples, minlength=depth)[:depth].astype(np.int64),
+    )
+
+
+def replay_staleness_rows(
+    rounds, edges_per_round, depth: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-round staleness metric ARRAYS from a precomputed timeline
+    replay (`AsyncScheduler.replay_rounds` output): the compiled
+    runtime's vectorized twin of the eager engine's per-round
+    bookkeeping.  Returns ``(staleness_max (T,), staleness_mean (T,),
+    staleness_hist (T, depth))``."""
+    smax = np.zeros(len(rounds), np.int32)
+    smean = np.zeros(len(rounds), np.float64)
+    shist = np.zeros((len(rounds), depth), np.int64)
+    for t, rt in enumerate(rounds):
+        samples = edge_age_samples(
+            (rt.tl_y.ages, rt.tl_z.ages), edges_per_round[t]
+        )
+        smax[t], smean[t], shist[t] = staleness_stats(samples, depth)
+    return smax, smean, shist
+
+
 @dataclasses.dataclass(frozen=True)
 class LoopRecord:
     round: int
@@ -58,6 +105,25 @@ class StalenessLedger:
         called by the engine at each round boundary."""
         self._curve_t.append(float(sim_s))
         self._curve_err.append(float(consensus_err))
+
+    def record_replay(
+        self, rounds, x_errs, edges_per_round
+    ) -> None:
+        """Post-hoc BULK recording for the compiled runtime: one pass over
+        a precomputed timeline replay (`AsyncScheduler.replay_rounds`)
+        appends exactly the LoopRecords and convergence checkpoints the
+        eager engine would have recorded round-by-round — same loop tags,
+        same start fallbacks (a loop's true start is its earliest step-0
+        mix), same active-edge masking."""
+        for t, rt in enumerate(rounds):
+            edges = edges_per_round[t]
+            self.record_loop(t, "y", rt.tl_y.ages,
+                             rt.tl_y.start_s(rt.x_end), rt.tl_y.end_s,
+                             edges=edges)
+            self.record_loop(t, "z", rt.tl_z.ages,
+                             rt.tl_z.start_s(rt.tl_y.end_s), rt.tl_z.end_s,
+                             edges=edges)
+            self.record_point(rt.t_end, float(x_errs[t]))
 
     # -- queries ------------------------------------------------------------
     def round_ages(self, round_idx: int) -> np.ndarray:

@@ -101,6 +101,32 @@ def damp_weights(
     return off + jnp.diag(1.0 - off.sum(axis=1))
 
 
+def required_depth(policy: str, bound: int, K: int, max_lag: int = 0) -> int:
+    """STATIC history depth a K-step delayed loop must carry under a
+    gating policy — the one sizing rule every consumer (the scheduler's
+    ``depth_for``, the eager engine, the compiled `lax.scan` runtime)
+    shares, so the jit-side history shapes are fixed before any round
+    runs.
+
+    With ``max_lag`` > 0 (edges re-entering from a topology schedule, or
+    lag carried in by an injected scheduler) every realizable age is
+    bounded by (K - 1) + max_lag for the never-waiting full policy, and by
+    the bound for bounded (whose gate also admits lag-old versions while
+    lag <= bound - k); the +1 everywhere covers age 0 (the current
+    version).  Sync ages are provably zero, so one slot always suffices.
+    """
+    if policy == "sync" or max_lag <= 0:
+        if policy == "full":
+            return max(1, K)
+        if policy == "bounded":
+            return min(bound + 1, max(1, K))
+        return 1
+    max_possible_age = K - 1 + max_lag
+    if policy == "full":
+        return max_possible_age + 1
+    return min(bound, max_possible_age) + 1
+
+
 def init_history(tree: Pytree, depth: int) -> Pytree:
     """(depth, m, ...) history with every slot holding the current version.
 

@@ -106,6 +106,31 @@ class AsyncTimeline:
     def max_age(self) -> int:
         return int(self.ages.max()) if self.ages.size else 0
 
+    def start_s(self, fallback: float) -> float:
+        """The loop's true start: the earliest step-0 mix (loops overlap
+        the previous loop's in-flight packets, so the prior end_s is NOT
+        the start); ``fallback`` covers empty (K = 0) loops."""
+        return float(self.mix_s[0].min()) if self.mix_s.size else float(fallback)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundTimeline:
+    """One outer C2DFB round's precomputed scheduler execution — the unit
+    of the timeline-replay API.  ``drive_round`` produces one per round
+    (eagerly, interleaved with the jitted math) and ``replay_rounds``
+    stacks T of them up front so the whole run can ride a single
+    ``lax.scan`` (`repro.async_gossip.compiled`).
+
+    x_end is the clock after the outer x barrier (the y-loop's start
+    fallback for the ledger); t_end is the round boundary (after the s_x
+    barrier)."""
+
+    tl_y: AsyncTimeline
+    tl_z: AsyncTimeline
+    t_start: float
+    x_end: float
+    t_end: float
+
 
 class AsyncScheduler:
     """Drives non-barrier gossip loops on a fabric, with per-node clocks
@@ -203,10 +228,14 @@ class AsyncScheduler:
         +1 covers age 0 (the current version)."""
         return 1 if self.policy == "sync" else self.bound + 1
 
-    def depth_for(self, K: int) -> int:
-        if self.policy == "full":
-            return max(1, K)
-        return min(self.history_depth, max(1, K))
+    def depth_for(self, K: int, max_lag: int = 0) -> int:
+        """Static history depth for a K-step loop under this scheduler's
+        policy (`repro.async_gossip.mixing.required_depth` — the shared
+        sizing rule); ``max_lag`` covers re-entry version lag from edge
+        churn."""
+        from repro.async_gossip.mixing import required_depth
+
+        return required_depth(self.policy, self.bound, K, max_lag)
 
     # ------------------------------------------------------------------
     def run_loop(
@@ -452,3 +481,78 @@ class AsyncScheduler:
         """Join all clocks at ``end_s`` (round boundary barrier)."""
         self.clock[:] = np.maximum(self.clock, end_s).max()
         self.egress_free = np.maximum(self.egress_free, self.clock.max())
+
+    # ------------------------------------------------------------------
+    # timeline replay API (one C2DFB round / T stacked rounds)
+    # ------------------------------------------------------------------
+    def drive_round(
+        self,
+        round_idx: int,
+        K: int,
+        bytes_y,
+        bytes_z,
+        outer_node_bytes,
+        compute_s_step: float = 0.0,
+        active: np.ndarray | None = None,
+        catchup_bytes: int = 0,
+        track_lag: bool = False,
+    ) -> RoundTimeline:
+        """Execute ONE outer C2DFB round's scheduler timeline: the x
+        barrier, the two K-step inner loops (y, z), the round-boundary
+        drain, the s_x barrier, and (with ``track_lag``) the per-round
+        version-lag bookkeeping across edge churn.  This is the single
+        code path both engines drive — the eager engine calls it once per
+        round with codec-measured payload sizes, the compiled runtime
+        replays it T times up front with analytic sizes."""
+        lag = self.version_lag if track_lag else None
+        t_start = float(self.clock.max())
+        self.barrier_phase(
+            outer_node_bytes, round_idx, compute_s=compute_s_step,
+            label="x", active=active,
+        )
+        x_end = float(self.clock.max())
+        tl_y = self.run_loop(
+            K, bytes_y, round_idx, compute_s_step, loop="y",
+            active=active, lag=lag, catchup_bytes=catchup_bytes,
+        )
+        tl_z = self.run_loop(
+            K, bytes_z, round_idx, compute_s_step, loop="z",
+            active=active, lag=lag, catchup_bytes=catchup_bytes,
+        )
+        self.drain(max(tl_y.end_s, tl_z.end_s))
+        t_end = self.barrier_phase(
+            outer_node_bytes, round_idx, compute_s=compute_s_step,
+            label="s_x", active=active,
+        )
+        if track_lag:
+            self.advance_lag(active, K)
+        return RoundTimeline(
+            tl_y=tl_y, tl_z=tl_z, t_start=t_start, x_end=x_end, t_end=t_end
+        )
+
+    def replay_rounds(
+        self,
+        T: int,
+        K: int,
+        bytes_y,
+        bytes_z,
+        outer_node_bytes,
+        compute_s_step: float = 0.0,
+        masks: np.ndarray | None = None,
+        catchup_bytes: int = 0,
+        track_lag: bool = False,
+    ) -> list[RoundTimeline]:
+        """Phase 1 of the compiled runtime: replay T rounds up front with
+        ANALYTIC payload sizes (constant per run, so no round's timeline
+        depends on the jitted math) and return the per-round timelines.
+        Byte-for-byte the same scheduler calls — and therefore the same
+        RNG draws, clocks, and ages — as T eager `drive_round` calls fed
+        the same sizes."""
+        return [
+            self.drive_round(
+                t, K, bytes_y, bytes_z, outer_node_bytes, compute_s_step,
+                active=masks[t] if masks is not None else None,
+                catchup_bytes=catchup_bytes, track_lag=track_lag,
+            )
+            for t in range(T)
+        ]

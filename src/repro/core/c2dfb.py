@@ -37,6 +37,7 @@ from repro.core.topology import Topology
 from repro.core.types import (
     Pytree,
     consensus_error,
+    donate_copy,
     node_mean,
     tree_count,
     tree_sq_norm,
@@ -297,6 +298,7 @@ def run(
     mixing_damping: str = "none",
     damping_decay: float = 0.5,
     transport=None,
+    compiled: bool = False,
 ) -> tuple[C2DFBState, dict]:
     """Run T outer rounds under lax.scan; returns final state + stacked metrics.
 
@@ -330,7 +332,17 @@ def run(
     function with ``fabric=transport.fabric`` — bit-exact, golden-trace
     pinned), `DeviceTransport` EXECUTES every exchange as `shard_map`
     collectives over a device mesh carrying the real wire-codec payloads.
-    Mutually exclusive with ``fabric``."""
+    Mutually exclusive with ``fabric``.
+
+    ``compiled`` (async modes only) switches to the two-phase compiled
+    runtime (`repro.async_gossip.compiled`): the scheduler is replayed
+    once on the host with analytic payload sizes and all T rounds ride a
+    single jitted ``lax.scan`` with a donated carry — same math as the
+    eager engine (parity-tested array-for-array), byte accuracy traded
+    only in the timing model.  Use it for large T / LM-scale trees where
+    the eager engine's per-round host round-trips dominate wall-clock;
+    keep the default eager engine when per-round codec-measured packet
+    sizes matter."""
     if transport is not None:
         if fabric is not None:
             raise ValueError(
@@ -344,17 +356,34 @@ def run(
             schedule=schedule, async_mode=async_mode,
             staleness_bound=staleness_bound, ledger=ledger,
             mixing_damping=mixing_damping, damping_decay=damping_decay,
+            compiled=compiled,
         )
     if async_mode is not None:
-        from repro.async_gossip.engine import run_async
-
         if fabric is None:
             raise ValueError("async_mode requires a NetworkFabric")
+        if compiled:
+            from repro.async_gossip.compiled import run_async_compiled
+
+            return run_async_compiled(
+                problem, topo, cfg, x0, y0, T, key, fabric,
+                policy=async_mode, bound=staleness_bound, ledger=ledger,
+                schedule=schedule, mixing_damping=mixing_damping,
+                damping_decay=damping_decay,
+            )
+        from repro.async_gossip.engine import run_async
+
         return run_async(
             problem, topo, cfg, x0, y0, T, key, fabric,
             policy=async_mode, bound=staleness_bound, ledger=ledger,
             schedule=schedule, mixing_damping=mixing_damping,
             damping_decay=damping_decay,
+        )
+    if compiled:
+        raise ValueError(
+            "compiled=True is the ASYNC runtime's two-phase scan; the "
+            "synchronous path already runs as one jitted lax.scan — drop "
+            'compiled, or pass async_mode="sync"/"bounded"/"full" (with a '
+            "fabric) to run the compiled async engine"
         )
     if mixing_damping != "none":
         raise ValueError(
@@ -388,9 +417,16 @@ def run(
         Ws = jnp.broadcast_to(
             jnp.asarray(topo.W, jnp.float32), (T,) + topo.W.shape
         )
-    scan = jax.jit(lambda s: jax.lax.scan(body, s, (keys, Ws))) if jit else (
-        lambda s: jax.lax.scan(body, s, (keys, Ws))
-    )
+    if jit:
+        # donate the state carry so XLA reuses its buffers for the output
+        # state in place; init_state aliases x0/y0, which callers reuse
+        # across runs, so the carry gets fresh buffers first
+        state = donate_copy(state)
+        scan = jax.jit(
+            lambda s: jax.lax.scan(body, s, (keys, Ws)), donate_argnums=0
+        )
+    else:
+        scan = lambda s: jax.lax.scan(body, s, (keys, Ws))
     state, metrics = scan(state)
     if fabric is not None:
         import numpy as np

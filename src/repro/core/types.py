@@ -78,6 +78,13 @@ def tree_count(a: Pytree) -> int:
     return int(sum(x.size // x.shape[0] for x in leaves))
 
 
+def donate_copy(tree: Pytree) -> Pytree:
+    """A fresh buffer per leaf so a jitted function can DONATE this tree
+    as its carry/argument without invalidating caller-owned arrays (e.g.
+    ``init_state`` aliases x0/y0, which callers reuse across runs)."""
+    return jax.tree.map(lambda v: jnp.asarray(v).copy(), tree)
+
+
 @dataclasses.dataclass(frozen=True)
 class NodeFns:
     """Per-node objective oracles for the bilevel problem.

@@ -54,6 +54,7 @@ def run_c2dfb_transport(
     mixing_damping: str = "none",
     damping_decay: float = 0.5,
     return_payloads: bool = False,
+    compiled: bool = False,
 ) -> tuple[C2DFBState, dict]:
     """T outer rounds of C2DFB over a `Transport`.  See module docstring;
     ``return_payloads`` additionally stashes the executed per-round inner
@@ -68,7 +69,7 @@ def run_c2dfb_transport(
             schedule=schedule, fabric=transport.fabric,
             async_mode=async_mode, staleness_bound=staleness_bound,
             ledger=ledger, mixing_damping=mixing_damping,
-            damping_decay=damping_decay,
+            damping_decay=damping_decay, compiled=compiled,
         )
 
     if async_mode is not None:
@@ -76,6 +77,13 @@ def run_c2dfb_transport(
             "DeviceTransport executes synchronous rounds; async_mode needs "
             "the priced SimTransport — a real asynchronous multi-process "
             "backend is the ROADMAP follow-on"
+        )
+    if compiled:
+        raise ValueError(
+            "compiled=True is the async simulator's two-phase scan "
+            "runtime; the device backend executes rounds eagerly — use "
+            "SimTransport (or a bare fabric) with async_mode for the "
+            "compiled path"
         )
     if schedule is not None:
         raise NotImplementedError(

@@ -1,0 +1,254 @@
+"""Compiled async runtime (ISSUE 5): the two-phase `repro.async_gossip
+.compiled` engine must be a drop-in for the eager engine.
+
+* trajectory parity: with the scheduler fed the same ANALYTIC payload
+  sizes, the compiled single-``lax.scan`` run matches the eager engine
+  array-for-array — state, every metric curve, and the staleness ledger —
+  for sync / bounded / full policies and for the schedule-composed engine;
+* compile accounting: a T >= 50 run executes as ONE scan (<= 2 jit traces
+  total: the scan wrapper and the round body, each traced once), and the
+  trace count is constant in T;
+* zero-latency compiled == the plain synchronous `run` BIT-exactly (the
+  ``lax.cond`` sync fast path inside the scan);
+* buffer donation: neither the donated sync scan nor the donated compiled
+  carry may emit donation warnings, and caller-owned x0/y0 stay usable;
+* the async MADSBO/MDBO baselines compile to the same trajectories (their
+  payload sizes were analytic already, so parity is byte-exact too).
+"""
+
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.async_gossip import (
+    reset_trace_counts,
+    run_async,
+    run_baseline_async,
+    trace_counts,
+)
+from repro.async_gossip.compiled import run_async_compiled
+from repro.core.c2dfb import C2DFBConfig, run
+from repro.core.topology import ring
+from repro.data.bilevel_tasks import coefficient_tuning_task
+from repro.net import BConnectedSchedule, make_fabric
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def bundle():
+    return coefficient_tuning_task(m=4, n=80, p=12, c=3, h=0.5, seed=0)
+
+
+def _cfg():
+    return C2DFBConfig(
+        K=3, compressor="topk", comp_ratio=0.3, gamma_in=0.3, eta_in=0.3
+    )
+
+
+def _fabric(topo, **kw):
+    defaults = dict(
+        profile="geo", straggler="lognormal", sigma=0.8, compute_s=0.05,
+        seed=1,
+    )
+    defaults.update(kw)
+    return make_fabric(topo, **defaults)
+
+
+def _assert_run_parity(st_e, me, st_c, mc):
+    """State, metric curves and ledger must agree array-for-array."""
+    for le, lc in zip(jax.tree.leaves(st_e), jax.tree.leaves(st_c)):
+        np.testing.assert_array_equal(np.asarray(le), np.asarray(lc))
+    assert set(me) == set(mc)
+    for k in me:
+        if k == "ledger":
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(me[k]), np.asarray(mc[k]), err_msg=k
+        )
+    ledg_e, ledg_c = me["ledger"], mc["ledger"]
+    np.testing.assert_array_equal(ledg_e.curve()[0], ledg_c.curve()[0])
+    np.testing.assert_array_equal(ledg_e.curve()[1], ledg_c.curve()[1])
+    assert ledg_e.max_age() == ledg_c.max_age()
+    assert ledg_e.mean_age() == ledg_c.mean_age()
+    np.testing.assert_array_equal(ledg_e.histogram(), ledg_c.histogram())
+
+
+@pytest.mark.parametrize("policy,bound", [
+    ("sync", 0), ("bounded", 1), ("full", 0),
+])
+def test_compiled_matches_eager_under_analytic_sizes(bundle, policy, bound):
+    topo = ring(4)
+    cfg = _cfg()
+    st_e, me = run_async(
+        bundle.problem, topo, cfg, bundle.x0, bundle.y0, 4, KEY,
+        _fabric(topo), policy=policy, bound=bound,
+        payload_bytes="analytic",
+    )
+    st_c, mc = run_async_compiled(
+        bundle.problem, topo, cfg, bundle.x0, bundle.y0, 4, KEY,
+        _fabric(topo), policy=policy, bound=bound,
+    )
+    _assert_run_parity(st_e, me, st_c, mc)
+    if policy == "full":
+        assert int(np.asarray(mc["staleness_max"]).max()) > 0  # geo: stale
+
+
+def test_compiled_schedule_composed_matches_eager(bundle):
+    topo = ring(4)
+    cfg = _cfg()
+    sched = BConnectedSchedule(topo, B=2)
+    kw = dict(policy="full", schedule=sched, mixing_damping="inverse-age")
+    st_e, me = run_async(
+        bundle.problem, topo, cfg, bundle.x0, bundle.y0, 4, KEY,
+        _fabric(topo, profile="wan", straggler="none", compute_s=0.01),
+        payload_bytes="analytic", **kw,
+    )
+    st_c, mc = run_async_compiled(
+        bundle.problem, topo, cfg, bundle.x0, bundle.y0, 4, KEY,
+        _fabric(topo, profile="wan", straggler="none", compute_s=0.01),
+        **kw,
+    )
+    _assert_run_parity(st_e, me, st_c, mc)
+
+
+def test_compiled_zero_latency_matches_sync_bit_exactly(bundle):
+    """The scan's lax.cond sync fast path: a zero-latency fabric under the
+    compiled runtime reproduces the plain synchronous trajectory
+    bit-for-bit, same as the eager engine's guarantee."""
+    topo = ring(4)
+    cfg = _cfg()
+    fabz = make_fabric(topo, profile="zero", compute_s=0.0, seed=0)
+    st_c, _ = run(
+        bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=3, key=KEY,
+        fabric=fabz, async_mode="full", compiled=True,
+    )
+    st_s, _ = run(
+        bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=3, key=KEY
+    )
+    for a, b in zip(jax.tree.leaves(st_c), jax.tree.leaves(st_s)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_compiled_trace_count_constant_in_T(bundle):
+    """The acceptance gate: a T >= 50 compiled run is ONE lax.scan — the
+    scan wrapper and the shared round body each trace exactly once (<= 2
+    traces total), and the counts do not grow with T."""
+    topo = ring(4)
+    cfg = _cfg()
+    counts = {}
+    for T in (25, 50):
+        reset_trace_counts()
+        run_async_compiled(
+            bundle.problem, topo, cfg, bundle.x0, bundle.y0, T, KEY,
+            _fabric(topo), policy="bounded", bound=1,
+        )
+        counts[T] = trace_counts()
+        assert counts[T]["compiled_scan"] == 1
+        assert counts[T]["c2dfb_round"] == 1
+        assert sum(counts[T].values()) <= 2
+    assert counts[25] == counts[50]  # constant in T: one compile, not O(T)
+
+
+def test_eager_round_body_jits_once(bundle):
+    """The masked round body kills the per-``delayed``-value retrace: a
+    bounded run whose rounds alternate between stale and zero-age ages
+    still traces the body exactly once."""
+    topo = ring(4)
+    reset_trace_counts()
+    run_async(
+        bundle.problem, topo, _cfg(), bundle.x0, bundle.y0, 4, KEY,
+        _fabric(topo), policy="bounded", bound=1,
+    )
+    assert trace_counts()["c2dfb_round"] == 1
+
+
+@pytest.mark.parametrize("alg", ["madsbo", "mdbo"])
+def test_compiled_baselines_match_eager(bundle, alg):
+    from repro.core.baselines import MADSBOConfig, MDBOConfig
+
+    topo = ring(4)
+    bcfg = (
+        MADSBOConfig(K=3, Q=2) if alg == "madsbo"
+        else MDBOConfig(K=3, neumann_N=2)
+    )
+    st_e, me = run_baseline_async(
+        alg, bundle.problem, topo, bcfg, bundle.x0, bundle.y0, 3,
+        _fabric(topo), policy="bounded", bound=1,
+    )
+    st_c, mc = run_baseline_async(
+        alg, bundle.problem, topo, bcfg, bundle.x0, bundle.y0, 3,
+        _fabric(topo), policy="bounded", bound=1, compiled=True,
+    )
+    for a, b in zip(jax.tree.leaves(st_e), jax.tree.leaves(st_c)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for k in me:
+        if k == "ledger":
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(me[k]), np.asarray(mc[k]), err_msg=k
+        )
+
+
+def test_donation_emits_no_warnings_and_inputs_stay_alive(bundle):
+    """Both donated carries (the sync scan's and the compiled scan's) must
+    donate cleanly — no 'donated buffer' warnings — and must NOT
+    invalidate caller-owned x0/y0 (the carry gets fresh buffers first)."""
+    topo = ring(4)
+    cfg = _cfg()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        run(bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=2, key=KEY)
+        run(
+            bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=2, key=KEY,
+            fabric=_fabric(topo), async_mode="bounded", staleness_bound=1,
+            compiled=True,
+        )
+    donation_warnings = [
+        w for w in caught if "donat" in str(w.message).lower()
+    ]
+    assert not donation_warnings, donation_warnings
+    # caller-owned inputs must survive the donation
+    for leaf in jax.tree.leaves(bundle.x0) + jax.tree.leaves(bundle.y0):
+        np.asarray(leaf + 0)
+
+
+def test_compiled_requires_async_mode(bundle):
+    topo = ring(4)
+    with pytest.raises(ValueError, match="compiled"):
+        run(
+            bundle.problem, topo, _cfg(), bundle.x0, bundle.y0, T=2,
+            key=KEY, compiled=True,
+        )
+
+
+def test_unknown_payload_mode_rejected(bundle):
+    topo = ring(4)
+    with pytest.raises(ValueError, match="payload_bytes"):
+        run_async(
+            bundle.problem, topo, _cfg(), bundle.x0, bundle.y0, 2, KEY,
+            _fabric(topo), payload_bytes="guess",
+        )
+
+
+def test_analytic_bytes_match_steady_state_measurement(bundle):
+    """The analytic packet size is the codec truth at steady state: once
+    residuals are dense (after one round), the eager engine's measured
+    per-node bytes equal the analytic constant for the shape-static
+    sparse format."""
+    from repro.async_gossip import analytic_message_bytes
+    from repro.core.c2dfb import init_state
+    from repro.core.inner_loop import inner_message_bytes
+
+    topo = ring(4)
+    cfg = _cfg()
+    state, _ = run(
+        bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=1, key=KEY
+    )
+    comp = cfg.make_compressor()
+    analytic = analytic_message_bytes(state.inner_y, comp)
+    bd, bs = inner_message_bytes(state.inner_y, comp, KEY)
+    measured = [d + s for d, s in zip(bd, bs)]
+    assert all(b == analytic for b in measured), (analytic, measured)
