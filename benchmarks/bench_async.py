@@ -33,13 +33,18 @@ the per-body jit-trace counts; the axis also reruns the compiled path at
 2T with fresh caches and HARD-asserts the trace count is constant in T
 (one compile, not O(T)).
 
-Compiled-axis invocations write ``BENCH_async.json`` — wall-clock,
-speedups, trace counts and final consensus errors — the perf baseline
-future PRs regress against (CI runs ``--smoke --compiled-only`` and
-uploads it as an artifact; the committed baseline is a full
-``--compiled`` run).  Suite-only runs never touch the file.
+Compiled-axis invocations write ``BENCH_async.json`` (``--out`` to
+redirect) — wall-clock, speedups, trace counts, final consensus errors,
+and a ``"gate"`` block: per-policy wire bytes / trace counts /
+warm wall-clock measured at ONE fixed smoke-scale config (`run_gate`)
+regardless of flags, so the committed full-run baseline and a fresh CI
+smoke run are byte-comparable.  ``--jsonl PATH`` streams every timing
+and gate row through `repro.obs` (then
+``python -m repro.obs.report PATH --gate BENCH_async.json`` is the
+regression gate CI fails on); ``--trace-out`` adds the merged Perfetto
+timeline.  Suite-only runs never touch the baseline file.
 
-    PYTHONPATH=src python benchmarks/bench_async.py [--smoke] [--full] [--adaptive] [--compiled] [--compiled-only]
+    PYTHONPATH=src python benchmarks/bench_async.py [--smoke] [--full] [--adaptive] [--compiled] [--compiled-only] [--out PATH] [--jsonl PATH] [--trace-out PATH]
     PYTHONPATH=src python -m benchmarks.run --only async
 """
 
@@ -58,7 +63,7 @@ if __package__ in (None, ""):  # `python benchmarks/bench_async.py`
         0, os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     )
 
-from benchmarks.common import emit
+from benchmarks.common import emit, time_fn
 from repro.core.c2dfb import C2DFBConfig
 from repro.core.c2dfb import run as c2dfb_run
 from repro.core.topology import ring
@@ -193,30 +198,43 @@ def run_suite(fast: bool = True, smoke: bool = False, adaptive: bool = False):
 
 
 def _timed_async_run(engine, bundle, topo, cfg, T, fabric_kw, policy, bound,
-                     fn_cache):
+                     fn_cache, obs=None, label=None, trace=None):
     """One engine invocation on a fresh (identically seeded) fabric:
-    returns (wall seconds, per-body jit-trace delta, final consensus
-    err).  Passing the same ``fn_cache`` across calls reuses the jitted
-    round/scan, so the second call times the steady state."""
+    returns (wall seconds, per-body jit-trace delta, final metrics).
+    Passing the same ``fn_cache`` across calls reuses the jitted
+    round/scan, so the second call times the steady state.  Timing goes
+    through `benchmarks.common.time_fn` (block_until_ready-bracketed;
+    with ``obs`` the measurement is also a JSONL timing record)."""
     from repro.async_gossip import (
         reset_trace_counts, run_async, run_async_compiled, trace_counts,
     )
 
-    fabric = make_fabric(topo, seed=0, **fabric_kw)
     runner = run_async_compiled if engine == "compiled" else run_async
+    out = {}
+
+    def call():
+        fabric = make_fabric(topo, seed=0, trace=trace, **fabric_kw)
+        # the engines get the same handle: their per-round records and
+        # replay/scan spans land in the bench JSONL and on the merged
+        # timeline next to time_fn's measurement rows
+        _, mets = runner(
+            bundle.problem, topo, cfg, bundle.x0, bundle.y0, T,
+            jax.random.PRNGKey(0), fabric, policy=policy, bound=bound,
+            fn_cache=fn_cache, obs=obs,
+        )
+        out["mets"] = mets
+        return mets.get("y_consensus_err")
+
     reset_trace_counts()
-    t0 = time.time()
-    _, mets = runner(
-        bundle.problem, topo, cfg, bundle.x0, bundle.y0, T,
-        jax.random.PRNGKey(0), fabric, policy=policy, bound=bound,
-        fn_cache=fn_cache,
+    t = time_fn(
+        call, warmups=0, repeats=1,
+        label=label or f"{engine}/{policy}/T{T}", obs=obs, engine=engine,
     )
-    dt = time.time() - t0
-    err = np.asarray(mets["y_consensus_err"], np.float64)
-    return dt, trace_counts(), err
+    err = np.asarray(out["mets"]["y_consensus_err"], np.float64)
+    return t.best, trace_counts(), err, out["mets"]
 
 
-def run_compiled_axis(smoke: bool = False) -> dict:
+def run_compiled_axis(smoke: bool = False, obs=None) -> dict:
     """The ``--compiled`` axis: eager vs compiled wall-clock on the geo
     profile (cold = includes jit compile; warm = shared ``fn_cache``,
     steady state), per-body jit-trace counts, and the constant-in-T
@@ -233,14 +251,16 @@ def run_compiled_axis(smoke: bool = False) -> dict:
         row = {"policy": label, "T": T}
         for engine in ("eager", "compiled"):
             cache = {}
-            wall_cold, traces_cold, err = _timed_async_run(
-                engine, bundle, topo, cfg, T, GEO_KW, mode, bound, cache
+            wall_cold, traces_cold, err, _ = _timed_async_run(
+                engine, bundle, topo, cfg, T, GEO_KW, mode, bound, cache,
+                obs=obs, label=f"compiled_axis/{label}/{engine}/cold",
             )
             warm_walls = []
             for _ in range(2):  # best-of-2 warm reps damp load noise
-                wall_warm, traces_warm, err_w = _timed_async_run(
+                wall_warm, traces_warm, err_w, _ = _timed_async_run(
                     engine, bundle, topo, cfg, T, GEO_KW, mode, bound,
                     cache,
+                    obs=obs, label=f"compiled_axis/{label}/{engine}/warm",
                 )
                 # equal_nan: the never-waiting full policy may genuinely
                 # diverge at this T x staleness product — deterministically
@@ -278,7 +298,7 @@ def run_compiled_axis(smoke: bool = False) -> dict:
     # ---- constant-in-T compile assertion (one compile, not O(T)) ------
     counts = {}
     for T_probe in (T, 2 * T):
-        _, traces, _ = _timed_async_run(
+        _, traces, _, _ = _timed_async_run(
             "compiled", bundle, topo, cfg, T_probe, GEO_KW, "bounded", 1, {}
         )
         counts[T_probe] = traces
@@ -300,6 +320,82 @@ def run_compiled_axis(smoke: bool = False) -> dict:
     return axis
 
 
+#: the gate's outer-round count — part of the FIXED gate config below
+GATE_T = 12
+
+
+def run_gate(obs=None, merged_trace_path: str | None = None) -> dict:
+    """The regression-gate rows: ALWAYS computed at one FIXED smoke-scale
+    config (the ``--smoke`` compiled-axis problem: m=6, K=4, T=12, geo
+    profile, seed 0) no matter which flags the bench ran with — so the
+    committed full-run baseline and a fresh CI smoke run price the SAME
+    problem and their wire bytes and trace counts are exactly
+    comparable.  Machine speed only moves the wall-clock number, which
+    the gate checks against a generous band (`repro.obs.report --gate`);
+    bytes and trace counts are exact.
+
+    Returns the ``"gate"`` block written into ``BENCH_async.json`` and
+    (with ``obs``) emits one ``kind="gate"`` JSONL record per policy —
+    the candidate side of a later gate comparison.  With
+    ``merged_trace_path`` the bounded policy's cold run also exports the
+    merged Perfetto timeline (simulated fabric lanes + host spans)."""
+    from repro.net import NetTrace
+    from repro.obs import as_obs, gate_record
+
+    T = GATE_T
+    m, K, bundle, topo = _task(True, comm_bound=True)
+    cfg = C2DFBConfig(
+        lam=10.0, eta_out=0.3, gamma_out=0.5, eta_in=0.3, gamma_in=0.3,
+        K=K, compressor="topk", comp_ratio=0.5,
+    )
+    config = {
+        "m": m, "K": K, "T": T, "n": 300, "p": 40,
+        "profile": "geo_straggler", "seed": 0,
+        "compressor": "topk", "comp_ratio": 0.5,
+    }
+    o = as_obs(obs)
+    block: dict = {"config": config, "policies": {}}
+    merge_trace = None
+    for label, mode, bound, _ in POLICIES:
+        cache = {}
+        tr = (
+            NetTrace()
+            if merged_trace_path is not None and label == "bounded1"
+            else None
+        )
+        _, traces_cold, _, mets = _timed_async_run(
+            "compiled", bundle, topo, cfg, T, GEO_KW, mode, bound, cache,
+            obs=o, label=f"gate/{label}/cold", trace=tr,
+        )
+        wall_warm, _, _, _ = _timed_async_run(
+            "compiled", bundle, topo, cfg, T, GEO_KW, mode, bound, cache,
+            obs=o, label=f"gate/{label}/warm",
+        )
+        if tr is not None:
+            merge_trace = tr
+        wire = int(np.asarray(mets["wire_bytes"]).sum())
+        block["policies"][label] = {
+            "wire_bytes": wire,
+            "trace_counts": dict(traces_cold),
+            "warm_wall_s": wall_warm,
+        }
+        if o is not None:
+            o.emit(gate_record(
+                o.run, label, wire_bytes=wire, trace_counts=traces_cold,
+                warm_wall_s=wall_warm, config=config,
+            ))
+        emit(
+            f"async_gate/{label}",
+            wall_warm * 1e6 / T,
+            f"wire_bytes={wire};traces={dict(traces_cold)};"
+            f"warm_wall_s={wall_warm:.4f}",
+        )
+    if o is not None and merged_trace_path is not None:
+        o.save_timeline(merged_trace_path, merge_trace)
+        print(f"# merged perfetto trace: {merged_trace_path}", flush=True)
+    return block
+
+
 def _json_safe(obj):
     """RFC-8259-safe payload: non-finite floats (the full policy's
     divergent consensus err) become None — bare NaN tokens would break
@@ -313,11 +409,11 @@ def _json_safe(obj):
     return obj
 
 
-def _write_bench_json(payload: dict) -> None:
-    with open(BENCH_PATH, "w") as fh:
+def _write_bench_json(payload: dict, path: str = BENCH_PATH) -> None:
+    with open(path, "w") as fh:
         json.dump(_json_safe(payload), fh, indent=2, sort_keys=True,
                   allow_nan=False)
-    print(f"# bench baseline: {BENCH_PATH}", flush=True)
+    print(f"# bench baseline: {path}", flush=True)
 
 
 def run(fast: bool = True, **_kw):  # benchmarks.run harness entry point
@@ -345,8 +441,27 @@ def main() -> None:
     ap.add_argument("--compiled-only", action="store_true",
                     help="run ONLY the compiled axis (skip the eager "
                          "time-to-accuracy suite) — the CI perf-smoke step")
+    ap.add_argument("--out", default=BENCH_PATH, metavar="PATH",
+                    help="where compiled-axis runs write the bench "
+                         "payload (default BENCH_async.json; CI writes a "
+                         "scratch path so the committed baseline stays "
+                         "the gate reference)")
+    ap.add_argument("--jsonl", default=None, metavar="PATH",
+                    help="also stream every record (timings + per-policy "
+                         "gate rows) to this JSONL via repro.obs — the "
+                         "file `python -m repro.obs.report` summarizes "
+                         "and gates")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="with --jsonl: export the merged Perfetto "
+                         "timeline (simulated fabric lanes + host "
+                         "compile/scan spans) of the gate's bounded run")
     args = ap.parse_args()
     compiled = args.compiled or args.compiled_only
+    obs = None
+    if args.jsonl:
+        from repro.obs import JsonlSink, Obs
+
+        obs = Obs(sink=JsonlSink(args.jsonl), run="bench")
     print("name,us_per_call,derived")
     payload = {
         "meta": {
@@ -361,14 +476,21 @@ def main() -> None:
             fast=not args.full, smoke=args.smoke, adaptive=args.adaptive
         )
     if compiled:
-        payload["compiled_axis"] = run_compiled_axis(smoke=args.smoke)
+        payload["compiled_axis"] = run_compiled_axis(
+            smoke=args.smoke, obs=obs
+        )
+        # the gate rows are ALWAYS the fixed smoke-scale config (see
+        # run_gate) so any two payloads' gate blocks are byte-comparable
+        payload["gate"] = run_gate(obs=obs, merged_trace_path=args.trace_out)
         # only compiled-axis runs write the baseline (suite-only runs
         # never touch the file).  --smoke compiled runs DO write it —
-        # CI uploads that payload as its artifact — and are flagged by
-        # meta.smoke; the committed baseline must come from a full
-        # `--compiled` run, so regenerate before committing if a smoke
-        # run overwrote it
-        _write_bench_json(payload)
+        # CI writes that payload to a scratch --out path and gates it
+        # against the committed baseline; the committed baseline must
+        # come from a full `--compiled` run at the default --out
+        _write_bench_json(payload, args.out)
+    if obs is not None:
+        obs.close()
+        print(f"# obs jsonl: {args.jsonl}", flush=True)
 
 
 if __name__ == "__main__":

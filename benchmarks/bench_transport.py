@@ -44,12 +44,10 @@ if __name__ == "__main__":  # force virtual devices BEFORE importing jax
         0, os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     )
 
-import time
-
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, time_fn
 from repro.core.c2dfb import C2DFBConfig
 from repro.core.c2dfb import run as c2dfb_run
 from repro.core.topology import ring
@@ -60,7 +58,7 @@ from repro.transport import DeviceTransport, SimTransport
 PROFILE = "wan"
 
 
-def run_suite(fast: bool = True, smoke: bool = False):
+def run_suite(fast: bool = True, smoke: bool = False, obs=None):
     m = 4 if smoke else 8
     if len(jax.devices()) < m:
         emit(
@@ -88,12 +86,22 @@ def run_suite(fast: bool = True, smoke: bool = False):
         ("sim", SimTransport(make_fabric(topo, profile=PROFILE, seed=0))),
         ("device", DeviceTransport(link=PROFILE, seed=0)),
     ):
-        t0 = time.time()
-        state, mets = c2dfb_run(
-            bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=T, key=key,
-            transport=transport,
+        out = {}
+
+        def call():
+            state, mets = c2dfb_run(
+                bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=T,
+                key=key, transport=transport, obs=obs,
+            )
+            out["state"], out["mets"] = state, mets
+            return mets["y_consensus_err"]
+
+        t = time_fn(
+            call, warmups=0, repeats=1, label=f"transport/{name}",
+            obs=obs, engine=name,
         )
-        dt = time.time() - t0
+        mets = out["mets"]
+        dt = t.best
         err = float(np.asarray(mets["y_consensus_err"])[-1])
         wire = int(np.asarray(mets["wire_bytes"]).sum())
         sim_s = float(np.asarray(mets["sim_seconds"]).sum())
@@ -124,9 +132,20 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny settings for CI (seconds, not minutes)")
     ap.add_argument("--full", action="store_true", help="larger settings")
+    ap.add_argument("--jsonl", default=None, metavar="PATH",
+                    help="stream per-round records (both backends) and "
+                         "the timing rows to this JSONL via repro.obs")
     args = ap.parse_args()
+    obs = None
+    if args.jsonl:
+        from repro.obs import JsonlSink, Obs
+
+        obs = Obs(sink=JsonlSink(args.jsonl), run="bench_transport")
     print("name,us_per_call,derived")
-    run_suite(fast=not args.full, smoke=args.smoke)
+    run_suite(fast=not args.full, smoke=args.smoke, obs=obs)
+    if obs is not None:
+        obs.close()
+        print(f"# obs jsonl: {args.jsonl}", flush=True)
 
 
 if __name__ == "__main__":

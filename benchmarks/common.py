@@ -1,20 +1,78 @@
-"""Shared benchmark helpers: timing + CSV emission."""
+"""Shared benchmark helpers: one timing utility + CSV emission.
+
+`time_fn` is THE timing primitive every benchmark shares: warmup calls,
+then ``repeats`` measured calls each bracketed by
+``jax.block_until_ready`` so device work is actually counted (an
+unblocked jit call returns before the computation runs and times only
+dispatch).  Pass ``obs=`` (a `repro.obs.Obs` or sink) and each
+measurement lands in the run's JSONL as a ``kind="timing"`` record —
+the same stream the engines' per-round records go to, so a benchmark's
+wall numbers and its run's metrics live in one file.
+"""
 
 from __future__ import annotations
 
 import time
+from dataclasses import dataclass
 
 import jax
 
 
+@dataclass(frozen=True)
+class Timing:
+    """One `time_fn` measurement: per-repeat wall seconds (blocked)."""
+
+    label: str
+    walls: tuple
+    warmups: int
+
+    @property
+    def best(self) -> float:
+        return min(self.walls)
+
+    @property
+    def mean(self) -> float:
+        return sum(self.walls) / len(self.walls)
+
+
+def time_fn(
+    fn,
+    *args,
+    warmups: int = 1,
+    repeats: int = 3,
+    label: str | None = None,
+    obs=None,
+    engine: str | None = None,
+    **kwargs,
+) -> Timing:
+    """Time ``fn(*args, **kwargs)``: ``warmups`` unmeasured calls (jit
+    compile lands here), then ``repeats`` measured calls, each fully
+    drained with ``jax.block_until_ready``.  Returns a `Timing`; with
+    ``obs`` also emits one timing record carrying every repeat."""
+    name = label or getattr(fn, "__name__", "call")
+    for _ in range(warmups):
+        jax.block_until_ready(fn(*args, **kwargs))
+    walls = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        walls.append(time.perf_counter() - t0)
+    t = Timing(label=name, walls=tuple(walls), warmups=warmups)
+    if obs is not None:
+        from repro.obs import as_obs
+
+        as_obs(obs).timing(
+            name, t.best, engine=engine,
+            walls=list(walls), warmups=warmups, repeats=repeats,
+        )
+    return t
+
+
 def time_call(fn, *args, warmup=1, iters=3):
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6  # us
+    """Mean microseconds per call — the CSV benches' legacy unit, now a
+    thin wrapper over `time_fn`."""
+    return time_fn(fn, *args, warmups=warmup, repeats=iters).mean * 1e6
 
 
 def emit(name: str, us_per_call: float, derived: str):

@@ -40,6 +40,8 @@ same records, same curves, one bulk pass instead of T round trips.
 
 from __future__ import annotations
 
+from contextlib import contextmanager
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -55,6 +57,7 @@ from repro.async_gossip.engine import (
     cached_jit,
     drive_baseline_round,
     record_trace,
+    trace_counts,
 )
 from repro.async_gossip.ledger import (
     StalenessLedger,
@@ -65,6 +68,12 @@ from repro.core.bilevel_problem import BilevelProblem
 from repro.core.c2dfb import C2DFBConfig, C2DFBState, init_state
 from repro.core.topology import Topology
 from repro.core.types import Pytree, donate_copy
+
+
+@contextmanager
+def _null_span(name, engine=None):
+    """Span stand-in when no ``obs`` handle is attached."""
+    yield
 
 
 def run_async_compiled(
@@ -85,6 +94,7 @@ def run_async_compiled(
     damping_decay: float = 0.5,
     fn_cache: dict | None = None,
     donate: bool = True,
+    obs=None,
 ) -> tuple[C2DFBState, dict]:
     """T outer rounds of C2DFB as ONE jitted ``lax.scan`` over
     precomputed staleness timelines — `run_async`'s signature and metric
@@ -95,11 +105,24 @@ def run_async_compiled(
     timeline may depend on the jitted math).  ``fn_cache`` shares the
     scan compilation across runs (`engine.cached_jit`); ``donate=True``
     donates the scan carry so XLA reuses the state buffers in place.
+
+    ``obs`` (a `repro.obs.Obs` or bare sink) streams the same per-round
+    records as the eager engine — emitted post hoc after the scan, since
+    the math runs as one device program.  For LIVE visibility set
+    ``Obs(heartbeat_every=N)``: the scan body emits a heartbeat record
+    every N rounds through a jax host callback while the scan is still
+    executing.  The callback is an effect, not an op — jit trace counts
+    and array-for-array parity with the eager engine are unchanged
+    (tests/test_compiled_async.py); the jit cache is keyed on the
+    heartbeat config so a heartbeat scan is never reused for a
+    heartbeat-free run (or a different handle).
     """
     from repro.async_gossip.mixing import validate_damping
     from repro.net.fabric import edge_list
+    from repro.obs import as_obs, scan_heartbeat
     from repro.transport.base import as_transport
 
+    obs = as_obs(obs)
     validate_damping(mixing_damping)
     transport = as_transport(fabric)
     if transport is not None:
@@ -118,13 +141,15 @@ def run_async_compiled(
     edges = edge_list(topo)
     plan = _prepare_async_run(scheduler, state, cfg, topo, T, schedule)
     msg_bytes = analytic_message_bytes(state.inner_y, comp)
+    span = obs.span if obs is not None else _null_span
 
     # ---- phase 1: host timeline replay --------------------------------
-    rounds = scheduler.replay_rounds(
-        T, cfg.K, msg_bytes, msg_bytes, outer_node_bytes, compute_step,
-        masks=plan.masks, catchup_bytes=plan.catchup_bytes,
-        track_lag=plan.track_lag,
-    )
+    with span("replay", engine="async-compiled"):
+        rounds = scheduler.replay_rounds(
+            T, cfg.K, msg_bytes, msg_bytes, outer_node_bytes, compute_step,
+            masks=plan.masks, catchup_bytes=plan.catchup_bytes,
+            track_lag=plan.track_lag,
+        )
     if not rounds:
         return state, {"ledger": ledger}
     ages_y = jnp.asarray(
@@ -137,20 +162,23 @@ def run_async_compiled(
 
     # ---- phase 2: one scan, donated carry -----------------------------
     cache = fn_cache if fn_cache is not None else {}
+    hb = obs is not None and obs.heartbeat_on
     ckey = (
         id(problem), id(topo), cfg, plan.depth, mixing_damping,
         damping_decay, donate,
-    )
+    ) + (obs.heartbeat_cache_key() if obs is not None else ("hb", 0))
     jit_kw = {"donate_argnums": (0,)} if donate else {}
     if schedule is None:
         def build():
             def body(st, xs):
-                k, ay, az = xs
+                t, k, ay, az = xs
                 st, mets = c2dfb_masked_round(
                     st, k, ay, az, problem=problem, topo=topo, cfg=cfg,
                     depth=plan.depth, damping=mixing_damping,
                     decay=damping_decay,
                 )
+                if hb:
+                    scan_heartbeat(obs, "async-compiled", t, mets)
                 return st, mets
 
             def scanned(st0, xs):
@@ -159,21 +187,27 @@ def run_async_compiled(
 
             return scanned
 
-        fn = cached_jit(cache, ("c2dfb/compiled",) + ckey, build, **jit_kw)
+        full_key = ("c2dfb/compiled",) + ckey
+        scan_label = "scan" if full_key in cache else "compile+scan"
+        fn = cached_jit(cache, full_key, build, **jit_kw)
         carry0 = donate_copy(state) if donate else state
-        state, mets = fn(carry0, (keys, ages_y, ages_z))
+        with span(scan_label, engine="async-compiled"):
+            state, mets = fn(carry0, (jnp.arange(T), keys, ages_y, ages_z))
+            jax.block_until_ready(mets)
     else:
         Ws = jnp.asarray(plan.Ws, jnp.float32)
 
         def build():
             def body(carry, xs):
                 st, hs = carry
-                k, Wt, ay, az = xs
+                t, k, Wt, ay, az = xs
                 st, mets, hs = c2dfb_schedule_round(
                     st, k, Wt, ay, az, hs, problem=problem, topo=topo,
                     cfg=cfg, depth=plan.depth, damping=mixing_damping,
                     decay=damping_decay,
                 )
+                if hb:
+                    scan_heartbeat(obs, "async-compiled", t, mets)
                 return (st, hs), mets
 
             def scanned(carry, xs):
@@ -182,13 +216,17 @@ def run_async_compiled(
 
             return scanned
 
-        fn = cached_jit(
-            cache, ("c2dfb/compiled-schedule",) + ckey, build, **jit_kw
-        )
+        full_key = ("c2dfb/compiled-schedule",) + ckey
+        scan_label = "scan" if full_key in cache else "compile+scan"
+        fn = cached_jit(cache, full_key, build, **jit_kw)
         carry0 = (state, plan.hists)
         if donate:
             carry0 = donate_copy(carry0)
-        (state, _), mets = fn(carry0, (keys, Ws, ages_y, ages_z))
+        with span(scan_label, engine="async-compiled"):
+            (state, _), mets = fn(
+                carry0, (jnp.arange(T), keys, Ws, ages_y, ages_z)
+            )
+            jax.block_until_ready(mets)
 
     # ---- phase 3: post-hoc metrics + ledger from the stacked replay ---
     metrics = {k: np.asarray(v) for k, v in mets.items()}
@@ -208,9 +246,8 @@ def run_async_compiled(
     )
     metrics["wire_bytes"] = np.asarray(
         [
-            rt.tl_y.wire_bytes + rt.tl_z.wire_bytes
-            + 2 * outer_node_bytes * len(edges_per_round[t])
-            for t, rt in enumerate(rounds)
+            rt.tl_y.wire_bytes + rt.tl_z.wire_bytes + rt.outer_wire_bytes
+            for rt in rounds
         ],
         np.int64,
     )
@@ -221,6 +258,17 @@ def run_async_compiled(
     metrics["staleness_mean"] = smean
     metrics["staleness_hist"] = shist
     metrics["ledger"] = ledger
+    if obs is not None:
+        tc = trace_counts()
+        for t, rt in enumerate(rounds):
+            row = {
+                k: v[t] for k, v in metrics.items() if k != "ledger"
+            }
+            obs.round(
+                "async-compiled", t, row,
+                bytes_by_stream=rt.wire_bytes_by_stream,
+                trace_counts=tc,
+            )
     return state, metrics
 
 
@@ -240,18 +288,22 @@ def run_baseline_async_compiled(
     damping_decay: float = 0.5,
     fn_cache: dict | None = None,
     donate: bool = True,
+    obs=None,
 ) -> tuple[object, dict]:
     """MADSBO / MDBO under the async scheduler as one jitted ``lax.scan``
     (reached via ``run_baseline_async(..., compiled=True)``).  Baseline
     packets are dense iterates — their sizes were already analytic — so
     this is trajectory- AND byte-exact with the eager loop, not just
-    math-exact."""
+    math-exact.  ``obs`` streams the same per-round records as the eager
+    baseline loop (post hoc), plus optional mid-scan heartbeats."""
     from repro.async_gossip.mixing import validate_damping
     from repro.core.baselines import madsbo_init, mdbo_init
+    from repro.obs import as_obs, scan_heartbeat
     from repro.transport.base import as_transport
 
     if alg not in ("madsbo", "mdbo"):
         raise ValueError(f"unknown async baseline {alg!r}")
+    obs = as_obs(obs)
     validate_damping(mixing_damping)
     transport = as_transport(fabric).bind(topo)
     fabric = transport.fabric
@@ -268,13 +320,17 @@ def run_baseline_async_compiled(
     state = madsbo_init(problem, x0, y0) if alg == "madsbo" else \
         mdbo_init(x0, y0)
 
+    span = obs.span if obs is not None else _null_span
+
     # ---- phase 1: host timeline replay --------------------------------
-    rounds = [
-        drive_baseline_round(
-            scheduler, alg, t, K, Q, N, dy_bytes, dx_bytes, compute_step
-        )
-        for t in range(T)
-    ]
+    engine_name = "baseline-compiled"
+    with span("replay", engine=engine_name):
+        rounds = [
+            drive_baseline_round(
+                scheduler, alg, t, K, Q, N, dy_bytes, dx_bytes, compute_step
+            )
+            for t in range(T)
+        ]
     if not rounds:
         return state, {"ledger": ledger}
     ages_ll = jnp.asarray(
@@ -287,13 +343,18 @@ def run_baseline_async_compiled(
 
     # ---- phase 2: one scan --------------------------------------------
     cache = fn_cache if fn_cache is not None else {}
+    hb = obs is not None and obs.heartbeat_on
     round_fn = _baseline_round_fn(
         cache, alg, problem, topo, cfg, depth, mixing_damping, damping_decay
     )
 
     def build():
         def body(st, xs):
-            return round_fn(st, *xs)
+            t, *rest = xs
+            st, mets = round_fn(st, *rest)
+            if hb:
+                scan_heartbeat(obs, engine_name, t, mets)
+            return st, mets
 
         def scanned(st0, xs):
             record_trace("compiled_scan")
@@ -302,12 +363,18 @@ def run_baseline_async_compiled(
         return scanned
 
     ckey = ("baseline/compiled", alg, id(problem), id(topo), cfg, depth,
-            mixing_damping, damping_decay, donate)
+            mixing_damping, damping_decay, donate) + (
+        obs.heartbeat_cache_key() if obs is not None else ("hb", 0)
+    )
     jit_kw = {"donate_argnums": (0,)} if donate else {}
+    scan_label = "scan" if ckey in cache else "compile+scan"
     fn = cached_jit(cache, ckey, build, **jit_kw)
     carry0 = donate_copy(state) if donate else state
-    xs = (ages_ll, ages_h) if alg == "madsbo" else (ages_ll,)
-    state, mets = fn(carry0, xs)
+    ts = jnp.arange(T)
+    xs = (ts, ages_ll, ages_h) if alg == "madsbo" else (ts, ages_ll)
+    with span(scan_label, engine=engine_name):
+        state, mets = fn(carry0, xs)
+        jax.block_until_ready(mets)
 
     # ---- phase 3: post-hoc ledger + metrics ---------------------------
     metrics = {k: np.asarray(v) for k, v in mets.items()}
@@ -323,5 +390,19 @@ def run_baseline_async_compiled(
     metrics["sim_seconds"] = np.asarray(
         [rt.t_end - rt.t_start for rt in rounds], np.float64
     )
+    metrics["wire_bytes"] = np.asarray(
+        [rt.wire_bytes for rt in rounds], np.int64
+    )
     metrics["ledger"] = ledger
+    if obs is not None:
+        tc = trace_counts()
+        for t, rt in enumerate(rounds):
+            row = {
+                k: v[t] for k, v in metrics.items() if k != "ledger"
+            }
+            obs.round(
+                engine_name, t, row,
+                bytes_by_stream=rt.wire_bytes_by_stream,
+                trace_counts=tc,
+            )
     return state, metrics

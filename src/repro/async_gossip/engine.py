@@ -451,10 +451,17 @@ def run_async(
     damping_decay: float = 0.5,
     payload_bytes: str = "measured",
     fn_cache: dict | None = None,
+    obs=None,
 ) -> tuple[C2DFBState, dict]:
     """T outer rounds of C2DFB under the async engine (eager outer loop —
     the byte-accurate reference; `repro.async_gossip.compiled` is the
     single-scan twin).
+
+    ``obs`` (a `repro.obs.Obs` or bare `MetricsSink`) streams one
+    structured record per round — the shared `repro.obs.records` schema,
+    with bytes split by stream, staleness stats, simulated and host wall
+    seconds, and the jit trace-counter snapshot — as the round completes
+    (a killed run keeps every finished round's record).
 
     Returns the final state and per-round metric arrays — the synchronous
     ``run``'s keys plus ``sim_seconds``, ``wire_bytes`` (per-link
@@ -486,8 +493,10 @@ def run_async(
     from repro.async_gossip.ledger import edge_age_samples, staleness_stats
     from repro.async_gossip.mixing import validate_damping
     from repro.net.fabric import edge_list
+    from repro.obs import as_obs
     from repro.transport.base import as_transport
 
+    obs = as_obs(obs)
     validate_damping(mixing_damping)
     if payload_bytes not in PAYLOAD_MODES:
         raise ValueError(
@@ -542,6 +551,7 @@ def run_async(
     keys = jax.random.split(key, T)
     rows: list[dict] = []
     for t in range(T):
+        w0 = obs.hostspans.now() if obs is not None else 0.0
         active_t = plan.masks[t] if plan.masks is not None else None
         if active_t is not None:
             act_edges = tuple(
@@ -586,17 +596,24 @@ def run_async(
         ledger.record_point(rt.t_end, x_err)
 
         edge_ages = edge_age_samples((tl_y.ages, tl_z.ages), act_edges)
-        outer_wire = 2 * outer_node_bytes * len(act_edges)
         row = {k: np.asarray(v) for k, v in mets.items()}
         row["sim_seconds"] = np.float64(rt.t_end - rt.t_start)
         row["wire_bytes"] = np.int64(
-            tl_y.wire_bytes + tl_z.wire_bytes + outer_wire
+            tl_y.wire_bytes + tl_z.wire_bytes + rt.outer_wire_bytes
         )
         smax, smean, shist = staleness_stats(edge_ages, depth)
         row["staleness_max"] = smax
         row["staleness_mean"] = smean
         row["staleness_hist"] = shist
         rows.append(row)
+        if obs is not None:
+            w1 = obs.hostspans.now()
+            obs.hostspans.add(f"round[{t}]", w0, w1)
+            obs.round(
+                "async-eager", t, row,
+                bytes_by_stream=rt.wire_bytes_by_stream,
+                wall_seconds=w1 - w0, trace_counts=trace_counts(),
+            )
 
     metrics = {
         k: np.stack([r[k] for r in rows]) for k in rows[0]
@@ -698,12 +715,29 @@ def baseline_masked_round(
 @dataclasses.dataclass(frozen=True)
 class BaselineRoundTimeline:
     """One baseline round's scheduler execution (drive/replay unit —
-    ``tl_h`` is None for MDBO, whose Neumann terms are local compute)."""
+    ``tl_h`` is None for MDBO, whose Neumann terms are local compute).
+    ``outer_wire_bytes`` is the upper-level barrier's dense traffic (the
+    per-stream split the `repro.obs` round record carries)."""
 
     tl_ll: object
     tl_h: object | None
     t_start: float
     t_end: float
+    outer_wire_bytes: int = 0
+
+    @property
+    def wire_bytes_by_stream(self) -> dict[str, int]:
+        by = {
+            "outer": int(self.outer_wire_bytes),
+            "ll": int(self.tl_ll.wire_bytes),
+        }
+        if self.tl_h is not None:
+            by["higp"] = int(self.tl_h.wire_bytes)
+        return by
+
+    @property
+    def wire_bytes(self) -> int:
+        return sum(self.wire_bytes_by_stream.values())
 
 
 def drive_baseline_round(
@@ -735,8 +769,12 @@ def drive_baseline_round(
     t_end = scheduler.barrier_phase(
         dx_bytes, round_idx, compute_s=compute_step * (1 + N), label="ul"
     )
+    outer_wire = int(dx_bytes) * sum(
+        len(v) for v in scheduler.fabric.topo.neighbors
+    )
     return BaselineRoundTimeline(
-        tl_ll=tl_ll, tl_h=tl_h, t_start=t_start, t_end=t_end
+        tl_ll=tl_ll, tl_h=tl_h, t_start=t_start, t_end=t_end,
+        outer_wire_bytes=outer_wire,
     )
 
 
@@ -756,6 +794,7 @@ def run_baseline_async(
     damping_decay: float = 0.5,
     compiled: bool = False,
     fn_cache: dict | None = None,
+    obs=None,
 ) -> tuple[object, dict]:
     """MADSBO / MDBO rounds driven by the AsyncScheduler: their dense
     value-gossip loops run event-driven with age-gated mixing; the
@@ -769,6 +808,7 @@ def run_baseline_async(
     trajectory- AND byte-exact with the eager loop."""
     from repro.async_gossip.mixing import validate_damping
     from repro.core.baselines import madsbo_init, mdbo_init
+    from repro.obs import as_obs
 
     if alg not in ("madsbo", "mdbo"):
         raise ValueError(f"unknown async baseline {alg!r}")
@@ -779,8 +819,9 @@ def run_baseline_async(
         return run_baseline_async_compiled(
             alg, problem, topo, cfg, x0, y0, T, fabric, policy=policy,
             bound=bound, ledger=ledger, mixing_damping=mixing_damping,
-            damping_decay=damping_decay, fn_cache=fn_cache,
+            damping_decay=damping_decay, fn_cache=fn_cache, obs=obs,
         )
+    obs = as_obs(obs)
     from repro.transport.base import as_transport
 
     transport = as_transport(fabric).bind(topo)
@@ -807,6 +848,7 @@ def run_baseline_async(
 
     rows = []
     for t in range(T):
+        w0 = obs.hostspans.now() if obs is not None else 0.0
         rt = drive_baseline_round(
             scheduler, alg, t, K, Q, N, dy_bytes, dx_bytes, compute_step
         )
@@ -826,7 +868,16 @@ def run_baseline_async(
         ledger.record_point(rt.t_end, x_err)
         row = {k: np.asarray(v) for k, v in mets.items()}
         row["sim_seconds"] = np.float64(rt.t_end - rt.t_start)
+        row["wire_bytes"] = np.int64(rt.wire_bytes)
         rows.append(row)
+        if obs is not None:
+            w1 = obs.hostspans.now()
+            obs.hostspans.add(f"round[{t}]", w0, w1)
+            obs.round(
+                "baseline-eager", t, row,
+                bytes_by_stream=rt.wire_bytes_by_stream,
+                wall_seconds=w1 - w0, trace_counts=trace_counts(),
+            )
 
     metrics = {k: np.stack([r[k] for r in rows]) for k in rows[0]}
     metrics["ledger"] = ledger

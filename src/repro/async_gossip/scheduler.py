@@ -123,13 +123,28 @@ class RoundTimeline:
 
     x_end is the clock after the outer x barrier (the y-loop's start
     fallback for the ledger); t_end is the round boundary (after the s_x
-    barrier)."""
+    barrier).  ``outer_wire_bytes`` is the two barriers' dense traffic on
+    the round's active directed edges — with the loops' own
+    ``wire_bytes`` it gives the per-stream split the `repro.obs` round
+    record carries, produced HERE once so the eager engine and the
+    compiled replay cannot account differently."""
 
     tl_y: AsyncTimeline
     tl_z: AsyncTimeline
     t_start: float
     x_end: float
     t_end: float
+    outer_wire_bytes: int = 0
+
+    @property
+    def wire_bytes_by_stream(self) -> dict[str, int]:
+        """Per-link bytes split by protocol stream (outer barriers, y
+        loop, z loop) — the round's total is their sum."""
+        return {
+            "outer": int(self.outer_wire_bytes),
+            "y": int(self.tl_y.wire_bytes),
+            "z": int(self.tl_z.wire_bytes),
+        }
 
 
 class AsyncScheduler:
@@ -506,6 +521,20 @@ class AsyncScheduler:
         replays it T times up front with analytic sizes."""
         lag = self.version_lag if track_lag else None
         t_start = float(self.clock.max())
+        # the two dense barriers' per-link traffic on the active edge set
+        # (each node sends its outer packet once per active neighbor per
+        # barrier) — recorded on the RoundTimeline so every consumer reads
+        # one accounting
+        neigh = self._active_neighbors(active)
+        if np.isscalar(outer_node_bytes):
+            outer_wire = 2 * int(outer_node_bytes) * sum(
+                len(v) for v in neigh
+            )
+        else:
+            per_node = np.asarray(outer_node_bytes, dtype=np.int64)
+            outer_wire = 2 * int(
+                sum(per_node[i] * len(v) for i, v in enumerate(neigh))
+            )
         self.barrier_phase(
             outer_node_bytes, round_idx, compute_s=compute_s_step,
             label="x", active=active,
@@ -527,7 +556,8 @@ class AsyncScheduler:
         if track_lag:
             self.advance_lag(active, K)
         return RoundTimeline(
-            tl_y=tl_y, tl_z=tl_z, t_start=t_start, x_end=x_end, t_end=t_end
+            tl_y=tl_y, tl_z=tl_z, t_start=t_start, x_end=x_end, t_end=t_end,
+            outer_wire_bytes=outer_wire,
         )
 
     def replay_rounds(

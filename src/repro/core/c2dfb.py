@@ -299,6 +299,7 @@ def run(
     damping_decay: float = 0.5,
     transport=None,
     compiled: bool = False,
+    obs=None,
 ) -> tuple[C2DFBState, dict]:
     """Run T outer rounds under lax.scan; returns final state + stacked metrics.
 
@@ -342,7 +343,13 @@ def run(
     only in the timing model.  Use it for large T / LM-scale trees where
     the eager engine's per-round host round-trips dominate wall-clock;
     keep the default eager engine when per-round codec-measured packet
-    sizes matter."""
+    sizes matter.
+
+    ``obs`` (a `repro.obs.Obs`, or any object with an ``emit(record)``
+    method) is the ONE telemetry surface every execution path shares:
+    each round streams a schema-stable record (`repro.obs.records`) —
+    errors, bytes by stream, staleness, simulated and wall seconds — to
+    the attached sink, whichever engine actually runs."""
     if transport is not None:
         if fabric is not None:
             raise ValueError(
@@ -356,7 +363,7 @@ def run(
             schedule=schedule, async_mode=async_mode,
             staleness_bound=staleness_bound, ledger=ledger,
             mixing_damping=mixing_damping, damping_decay=damping_decay,
-            compiled=compiled,
+            compiled=compiled, obs=obs,
         )
     if async_mode is not None:
         if fabric is None:
@@ -368,7 +375,7 @@ def run(
                 problem, topo, cfg, x0, y0, T, key, fabric,
                 policy=async_mode, bound=staleness_bound, ledger=ledger,
                 schedule=schedule, mixing_damping=mixing_damping,
-                damping_decay=damping_decay,
+                damping_decay=damping_decay, obs=obs,
             )
         from repro.async_gossip.engine import run_async
 
@@ -376,7 +383,7 @@ def run(
             problem, topo, cfg, x0, y0, T, key, fabric,
             policy=async_mode, bound=staleness_bound, ledger=ledger,
             schedule=schedule, mixing_damping=mixing_damping,
-            damping_decay=damping_decay,
+            damping_decay=damping_decay, obs=obs,
         )
     if compiled:
         raise ValueError(
@@ -417,6 +424,9 @@ def run(
         Ws = jnp.broadcast_to(
             jnp.asarray(topo.W, jnp.float32), (T,) + topo.W.shape
         )
+    from repro.obs import as_obs
+
+    obs = as_obs(obs)
     if jit:
         # donate the state carry so XLA reuses its buffers for the output
         # state in place; init_state aliases x0/y0, which callers reuse
@@ -427,7 +437,12 @@ def run(
         )
     else:
         scan = lambda s: jax.lax.scan(body, s, (keys, Ws))
-    state, metrics = scan(state)
+    if obs is not None:
+        with obs.span("scan", engine="sync"):
+            state, metrics = scan(state)
+            jax.block_until_ready(metrics)
+    else:
+        state, metrics = scan(state)
     if fabric is not None:
         import numpy as np
 
@@ -447,4 +462,10 @@ def run(
         metrics = dict(metrics)
         metrics["sim_seconds"] = np.asarray(sim_s)
         metrics["wire_bytes"] = np.asarray(wire_b, dtype=np.int64)
+    if obs is not None:
+        import numpy as np
+
+        host = {k: np.asarray(v) for k, v in metrics.items()}
+        for t in range(T):
+            obs.round("sync", t, {k: v[t] for k, v in host.items()})
     return state, metrics

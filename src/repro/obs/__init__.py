@@ -1,0 +1,77 @@
+"""repro.obs — one telemetry spine for eager, compiled and transport runs.
+
+C2DFB's headline claims are observability claims — bytes on the wire,
+staleness actually experienced, wall-clock to target accuracy — and this
+package is the single instrumentation layer every execution path feeds:
+
+* ``sink``     — `MetricsSink` protocol + `MemorySink` / `JsonlSink`
+  (one streamed JSON line per round) / `MultiSink`;
+* ``records``  — THE per-round record schema (`round_record`,
+  `parity_view`): consensus/hypergradient errors, node+wire bytes by
+  stream, staleness max/mean/hist, simulated and host seconds, jit
+  trace counts;
+* ``core``     — `Obs`, the handle every engine takes as ``obs=``
+  (`c2dfb.run`, `run_async` eager and compiled, `run_baseline_async`,
+  `transport.run_c2dfb_transport`), with host-span recording and the
+  compiled runtime's mid-scan `scan_heartbeat`;
+* ``timeline`` — `merged_chrome_trace`: the fabric's simulated
+  `NetTrace` lanes and the host wall spans in ONE Perfetto export;
+* ``report``   — ``python -m repro.obs.report``: summarize a JSONL run,
+  diff two runs, and gate a run against the committed
+  ``BENCH_async.json`` perf baseline (trace counts exact, bytes exact,
+  wall-clock within a machine-tolerant band).
+"""
+
+from repro.obs.core import Obs, as_obs, scan_heartbeat
+from repro.obs.records import (
+    ENGINES,
+    METRIC_FIELDS,
+    PARITY_EXCLUDED,
+    SCHEMA_VERSION,
+    gate_record,
+    heartbeat_record,
+    parity_rows,
+    parity_view,
+    round_record,
+    timing_record,
+)
+from repro.obs.sink import (
+    JsonlSink,
+    MemorySink,
+    MetricsSink,
+    MultiSink,
+    json_safe,
+    read_jsonl,
+)
+from repro.obs.timeline import (
+    HostSpan,
+    HostSpans,
+    merged_chrome_trace,
+    save_merged_trace,
+)
+
+__all__ = [
+    "ENGINES",
+    "METRIC_FIELDS",
+    "PARITY_EXCLUDED",
+    "SCHEMA_VERSION",
+    "HostSpan",
+    "HostSpans",
+    "JsonlSink",
+    "MemorySink",
+    "MetricsSink",
+    "MultiSink",
+    "Obs",
+    "as_obs",
+    "gate_record",
+    "heartbeat_record",
+    "json_safe",
+    "merged_chrome_trace",
+    "parity_rows",
+    "parity_view",
+    "read_jsonl",
+    "round_record",
+    "save_merged_trace",
+    "scan_heartbeat",
+    "timing_record",
+]

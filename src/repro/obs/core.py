@@ -1,0 +1,144 @@
+"""`Obs` — the one observability handle every engine takes as ``obs=``.
+
+It bundles what a run needs to be observable:
+
+* a `MetricsSink` the per-round records stream to (`round` / `timing` /
+  `heartbeat` emit helpers build the shared `repro.obs.records` schema);
+* a `HostSpans` recorder (``span(...)`` context manager) so host-side
+  compile / scan / per-round costs land on the merged Perfetto timeline
+  (`save_timeline`) next to the fabric's simulated lanes;
+* the heartbeat knob for the compiled runtime: ``heartbeat_every=N``
+  makes the single donated-carry ``lax.scan`` emit a liveness record
+  every N rounds from INSIDE the scan via a jax host callback
+  (`scan_heartbeat`) — the scan stops being a black box without
+  retracing (callbacks are effects, not ops that change trace counts).
+
+``as_obs`` normalizes the kwarg: None passes through (engines skip all
+obs work), a bare sink is wrapped in a default `Obs`, an `Obs` is used
+as-is.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import jax
+
+from repro.obs.records import (
+    heartbeat_record,
+    round_record,
+    timing_record,
+)
+from repro.obs.timeline import HostSpans, save_merged_trace
+
+
+class Obs:
+    """One run's observability handle (see module docstring).
+
+    ``sink`` is any `repro.obs.sink.MetricsSink` (or None: spans still
+    record, nothing streams).  ``run`` labels every emitted record so a
+    single JSONL file can hold several runs.  ``heartbeat_every`` > 0
+    turns on the compiled runtime's mid-scan heartbeat."""
+
+    def __init__(
+        self,
+        sink=None,
+        heartbeat_every: int = 0,
+        run: str = "run",
+    ) -> None:
+        if heartbeat_every < 0:
+            raise ValueError("heartbeat_every must be >= 0")
+        self.sink = sink
+        self.heartbeat_every = int(heartbeat_every)
+        self.run = str(run)
+        self.hostspans = HostSpans()
+
+    # -- emission -----------------------------------------------------------
+    def emit(self, record: dict) -> None:
+        if self.sink is not None:
+            self.sink.emit(record)
+
+    def round(self, engine: str, round_idx: int, row: dict, **kw: Any) -> None:
+        self.emit(round_record(engine, self.run, round_idx, row, **kw))
+
+    def heartbeat(self, engine: str, round_idx: int, fields: dict) -> None:
+        self.emit(heartbeat_record(engine, self.run, round_idx, fields))
+
+    def timing(
+        self, label: str, seconds: float, engine: str | None = None,
+        **extra: Any,
+    ) -> None:
+        self.emit(
+            timing_record(self.run, label, seconds, engine=engine, **extra)
+        )
+
+    # -- host spans ---------------------------------------------------------
+    @contextlib.contextmanager
+    def span(self, name: str, engine: str | None = None):
+        """Record a host wall-clock span AND emit it as a timing record."""
+        t0 = self.hostspans.now()
+        try:
+            yield
+        finally:
+            sp = self.hostspans.add(name, t0, self.hostspans.now())
+            self.timing(name, sp.seconds, engine=engine)
+
+    def save_timeline(self, path: str, trace=None, **kw: Any) -> list[dict]:
+        """The merged Perfetto export: this handle's host spans next to a
+        fabric's `NetTrace` simulated lanes (pass ``trace=fabric.trace``)."""
+        return save_merged_trace(path, trace, self.hostspans, **kw)
+
+    # -- compiled-runtime heartbeat ----------------------------------------
+    @property
+    def heartbeat_on(self) -> bool:
+        return self.sink is not None and self.heartbeat_every > 0
+
+    def heartbeat_cache_key(self) -> tuple:
+        """The jit-cache key component for a scan built with this
+        handle's heartbeat: the callback closure bakes in this exact
+        object, so a cached compilation must never be reused with a
+        different handle (or with heartbeats off)."""
+        return ("hb", self.heartbeat_every, id(self)) if self.heartbeat_on \
+            else ("hb", 0)
+
+    def close(self) -> None:
+        close = getattr(self.sink, "close", None)
+        if close is not None:
+            close()
+
+
+def as_obs(obs) -> Obs | None:
+    """Normalize the engines' ``obs=`` kwarg: None -> None (no obs work),
+    `Obs` -> itself, a bare sink -> a default `Obs` around it."""
+    if obs is None or isinstance(obs, Obs):
+        return obs
+    if hasattr(obs, "emit"):
+        return Obs(sink=obs)
+    raise TypeError(
+        f"obs= wants an Obs, a MetricsSink (anything with .emit), or "
+        f"None; got {type(obs).__name__}"
+    )
+
+
+def scan_heartbeat(
+    obs: Obs | None, engine: str, round_idx: jax.Array, fields: dict
+) -> None:
+    """Emit a heartbeat from INSIDE a traced scan body every
+    ``obs.heartbeat_every`` rounds.  ``fields`` maps record keys to
+    traced scalars.  The every-Nth filter runs on the HOST (the round
+    index is a traced value, so a trace-time filter is impossible) —
+    one cheap callback per round, records only on the sampled rounds.
+    `jax.debug.callback` is an effect: it does not add jit traces and
+    does not perturb the math (asserted in tests/test_compiled_async.py).
+    """
+    if obs is None or not obs.heartbeat_on:
+        return
+    every = obs.heartbeat_every
+
+    def cb(t, **vals):
+        t = int(t)
+        if t % every == 0:
+            obs.heartbeat(engine, t, vals)
+
+    jax.debug.callback(cb, round_idx, **fields)

@@ -1,0 +1,201 @@
+"""The one per-round record schema every execution path emits.
+
+Before this module the repo had four private metric surfaces (the sync
+run's stacked dict, the async engine's rows, the `StalenessLedger`, the
+device transport's rows).  They now all produce THIS record, built by
+`round_record` — so a JSONL line from an eager run, a compiled run and a
+transport run can be compared field-for-field.
+
+Record kinds:
+
+``round``      one outer round, the schema below (one line per round);
+``heartbeat``  a mid-scan liveness sample from the compiled runtime's
+               host callback (subset of the round fields — whatever is
+               computable inside the scan);
+``timing``     a host wall-clock span (compile, scan, bench repetition);
+``gate``       a benchmark summary row the regression gate
+               (`repro.obs.report`) checks against ``BENCH_async.json``.
+
+Round-record fields (absent signals are None, never missing keys):
+
+| field              | type        | meaning                              |
+|--------------------|-------------|--------------------------------------|
+| schema             | int         | record schema version (`SCHEMA_VERSION`) |
+| kind               | str         | "round"                              |
+| run                | str         | caller-chosen run label              |
+| engine             | str         | producing engine (`ENGINES`)         |
+| round              | int         | outer round index t                  |
+| hypergrad_norm     | float       | ||mean_i u_i||                       |
+| x_consensus_err    | float       | upper-level consensus error          |
+| sx_consensus_err   | float       | tracker consensus error              |
+| y_consensus_err    | float       | y inner-loop consensus error         |
+| y_compress_err     | float       | y residual compression error         |
+| z_consensus_err    | float       | z inner-loop consensus error         |
+| measured_bytes     | int         | in-scan codec-metered node bytes     |
+| wire_bytes         | int         | per-link priced / executed bytes     |
+| bytes_by_stream    | dict        | wire bytes split {outer, y, z}       |
+| staleness_max      | int         | max edge age this round              |
+| staleness_mean     | float       | mean edge age this round             |
+| staleness_hist     | list[int]   | edge-age histogram (len = depth)     |
+| sim_seconds        | float       | simulated wall clock of the round    |
+| wall_seconds       | float       | HOST wall clock (machine-dependent)  |
+| trace_counts       | dict        | per-body jit trace counters snapshot |
+
+Parity contract: `parity_view` drops the machine- and path-dependent
+fields (`PARITY_EXCLUDED`) so eager / compiled / transport runs on the
+same seed can be asserted row-for-row equal on everything that is a
+claim about the ALGORITHM (bytes, staleness, errors, simulated time)
+rather than about the host that ran it.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+
+SCHEMA_VERSION = 1
+
+#: engine labels the shipped paths emit (callers may add their own)
+ENGINES = (
+    "sync",
+    "async-eager",
+    "async-compiled",
+    "baseline-eager",
+    "baseline-compiled",
+    "transport-device",
+)
+
+#: scalar metric fields lifted verbatim from an engine's per-round row
+METRIC_FIELDS = (
+    "hypergrad_norm",
+    "x_consensus_err",
+    "sx_consensus_err",
+    "y_consensus_err",
+    "y_compress_err",
+    "z_consensus_err",
+    "measured_bytes",
+    "wire_bytes",
+    "staleness_max",
+    "staleness_mean",
+    "sim_seconds",
+)
+
+#: fields that are about the HOST / the producing path, not the
+#: algorithm — excluded from cross-engine parity comparison
+PARITY_EXCLUDED = ("run", "engine", "wall_seconds", "trace_counts")
+
+
+def _scalar(v: Any) -> Any:
+    if v is None:
+        return None
+    v = np.asarray(v)
+    if v.dtype.kind in "iub":
+        return int(v)
+    return float(v)
+
+
+def round_record(
+    engine: str,
+    run: str,
+    round_idx: int,
+    row: dict,
+    *,
+    bytes_by_stream: dict | None = None,
+    wall_seconds: float | None = None,
+    trace_counts: dict | None = None,
+) -> dict:
+    """One round's record from an engine metrics row (missing metrics
+    become explicit None so every record carries the full schema)."""
+    rec = {
+        "schema": SCHEMA_VERSION,
+        "kind": "round",
+        "run": run,
+        "engine": engine,
+        "round": int(round_idx),
+    }
+    for k in METRIC_FIELDS:
+        rec[k] = _scalar(row.get(k))
+    hist = row.get("staleness_hist")
+    rec["staleness_hist"] = (
+        [int(c) for c in np.asarray(hist).reshape(-1)]
+        if hist is not None else None
+    )
+    rec["bytes_by_stream"] = (
+        {k: int(v) for k, v in bytes_by_stream.items()}
+        if bytes_by_stream is not None else None
+    )
+    rec["wall_seconds"] = (
+        float(wall_seconds) if wall_seconds is not None else None
+    )
+    rec["trace_counts"] = dict(trace_counts) if trace_counts else None
+    return rec
+
+
+def heartbeat_record(
+    engine: str, run: str, round_idx: int, fields: dict
+) -> dict:
+    """A mid-scan liveness sample (compiled runtime host callback):
+    whatever per-round scalars are computable inside the scan."""
+    return {
+        "schema": SCHEMA_VERSION,
+        "kind": "heartbeat",
+        "run": run,
+        "engine": engine,
+        "round": int(round_idx),
+        **{k: _scalar(v) for k, v in fields.items()},
+    }
+
+
+def timing_record(
+    run: str,
+    label: str,
+    seconds: float,
+    *,
+    engine: str | None = None,
+    **extra: Any,
+) -> dict:
+    """A host wall-clock span (compile, scan, bench repetition)."""
+    return {
+        "schema": SCHEMA_VERSION,
+        "kind": "timing",
+        "run": run,
+        "engine": engine,
+        "label": label,
+        "wall_seconds": float(seconds),
+        **extra,
+    }
+
+
+def gate_record(
+    run: str,
+    policy: str,
+    *,
+    wire_bytes: int,
+    trace_counts: dict,
+    warm_wall_s: float | None,
+    config: dict,
+) -> dict:
+    """A benchmark gate row — the unit `repro.obs.report --gate` compares
+    against the committed ``BENCH_async.json`` baseline."""
+    return {
+        "schema": SCHEMA_VERSION,
+        "kind": "gate",
+        "run": run,
+        "policy": policy,
+        "wire_bytes": int(wire_bytes),
+        "trace_counts": dict(trace_counts),
+        "warm_wall_s": float(warm_wall_s) if warm_wall_s is not None else None,
+        "config": dict(config),
+    }
+
+
+def parity_view(record: dict) -> dict:
+    """The record minus host-/path-dependent fields — what cross-engine
+    parity tests compare row-for-row (see module docstring)."""
+    return {k: v for k, v in record.items() if k not in PARITY_EXCLUDED}
+
+
+def parity_rows(records: list[dict], kind: str = "round") -> list[dict]:
+    """Parity views of all ``kind`` records, in emission order."""
+    return [parity_view(r) for r in records if r.get("kind") == kind]

@@ -1,0 +1,274 @@
+"""``python -m repro.obs.report`` — summarize, diff and GATE a JSONL run.
+
+Three modes over the one record schema (`repro.obs.records`):
+
+* ``report run.jsonl``                 per-engine summary: rounds, final
+  errors, byte totals by stream, staleness, wall/sim time, heartbeats;
+* ``report a.jsonl --diff b.jsonl``    field-for-field diff of the two
+  runs' parity views (`parity_rows`) — machine-dependent fields excluded
+  — plus wall-clock deltas reported informationally;
+* ``report run.jsonl --gate BENCH_async.json``   regression gate against
+  the committed benchmark baseline: jit trace counts EXACT, wire bytes
+  EXACT, warm wall-clock within a machine-tolerant band
+  (``--wall-tol``, default 10x; ``--no-wall`` skips the wall check for
+  cross-machine use).  Exit code 1 on any failure — CI runs this after
+  the perf smoke so a byte or retrace regression fails the job.
+
+The gate compares ``kind="gate"`` records (emitted by
+``benchmarks/bench_async.py`` at one FIXED smoke-scale config) against
+the baseline file's ``"gate"`` block, so a fresh CI smoke run and the
+committed full-suite baseline are byte-comparable by construction.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs.records import parity_rows
+from repro.obs.sink import read_jsonl
+
+#: summary fields shown per engine (last-round value)
+_FINAL_FIELDS = ("hypergrad_norm", "x_consensus_err", "y_consensus_err")
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def summarize(records: list[dict]) -> str:
+    """Human-readable multi-engine summary of one JSONL run."""
+    out: list[str] = []
+    rounds = [r for r in records if r.get("kind") == "round"]
+    engines: dict[str, list[dict]] = {}
+    for r in rounds:
+        engines.setdefault(r.get("engine", "?"), []).append(r)
+    for eng, rows in engines.items():
+        rows = sorted(rows, key=lambda r: r.get("round", 0))
+        last = rows[-1]
+        out.append(f"engine {eng}: {len(rows)} rounds")
+        for f in _FINAL_FIELDS:
+            out.append(f"  final {f:<16} {_fmt(last.get(f))}")
+        wire = [r.get("wire_bytes") for r in rows]
+        if any(w is not None for w in wire):
+            out.append(
+                f"  total wire_bytes     "
+                f"{sum(w for w in wire if w is not None)}"
+            )
+        streams: dict[str, int] = {}
+        for r in rows:
+            for k, v in (r.get("bytes_by_stream") or {}).items():
+                streams[k] = streams.get(k, 0) + int(v)
+        if streams:
+            out.append(
+                "  bytes_by_stream      "
+                + "  ".join(f"{k}={v}" for k, v in sorted(streams.items()))
+            )
+        smax = [r.get("staleness_max") for r in rows]
+        if any(s is not None for s in smax):
+            out.append(
+                f"  staleness_max        "
+                f"{max(s for s in smax if s is not None)}"
+            )
+        sims = [r.get("sim_seconds") for r in rows]
+        if any(s is not None for s in sims):
+            out.append(
+                f"  sim_seconds          "
+                f"{_fmt(sum(s for s in sims if s is not None))}"
+            )
+        walls = [r.get("wall_seconds") for r in rows]
+        walls = [w for w in walls if w is not None]
+        if walls:
+            out.append(f"  wall_seconds         {_fmt(sum(walls))}")
+        tc = last.get("trace_counts")
+        if tc:
+            out.append(
+                "  trace_counts         "
+                + "  ".join(f"{k}={v}" for k, v in sorted(tc.items()))
+            )
+    hb = [r for r in records if r.get("kind") == "heartbeat"]
+    if hb:
+        out.append(f"heartbeats: {len(hb)}")
+    timings = [r for r in records if r.get("kind") == "timing"]
+    for r in timings:
+        out.append(
+            f"timing {r.get('label', '?'):<20} "
+            f"{_fmt(r.get('wall_seconds'))} s"
+            + (f"  [{r['engine']}]" if r.get("engine") else "")
+        )
+    gates = [r for r in records if r.get("kind") == "gate"]
+    for r in gates:
+        out.append(
+            f"gate policy={r.get('policy')} wire_bytes={r.get('wire_bytes')} "
+            f"traces={r.get('trace_counts')} "
+            f"warm_wall_s={_fmt(r.get('warm_wall_s'))}"
+        )
+    return "\n".join(out) if out else "(no records)"
+
+
+def diff(a: list[dict], b: list[dict]) -> tuple[str, bool]:
+    """Field-for-field diff of two runs' parity views.  Returns the
+    rendered report and whether the algorithmic fields all matched
+    (wall-clock deltas never fail a diff — they are machine facts)."""
+    pa, pb = parity_rows(a), parity_rows(b)
+    out: list[str] = []
+    same = True
+    if len(pa) != len(pb):
+        out.append(f"round count differs: {len(pa)} vs {len(pb)}")
+        same = False
+    mismatched_fields: dict[str, int] = {}
+    for ra, rb in zip(pa, pb):
+        keys = sorted(set(ra) | set(rb))
+        for k in keys:
+            va, vb = ra.get(k), rb.get(k)
+            if va != vb:
+                same = False
+                if mismatched_fields.setdefault(k, 0) == 0:
+                    out.append(
+                        f"round {ra.get('round')}: {k}: "
+                        f"{_fmt(va)} vs {_fmt(vb)}"
+                    )
+                mismatched_fields[k] += 1
+    for k, n in sorted(mismatched_fields.items()):
+        out.append(f"field {k}: {n} rounds differ")
+    wa = sum(
+        r.get("wall_seconds") or 0.0
+        for r in a if r.get("kind") == "round"
+    )
+    wb = sum(
+        r.get("wall_seconds") or 0.0
+        for r in b if r.get("kind") == "round"
+    )
+    if wa and wb:
+        out.append(
+            f"wall_seconds (informational): {_fmt(wa)} vs {_fmt(wb)} "
+            f"({wb / wa:.2f}x)"
+        )
+    out.append("parity: MATCH" if same else "parity: DIFFER")
+    return "\n".join(out), same
+
+
+def gate(
+    records: list[dict],
+    baseline: dict,
+    wall_tol: float = 10.0,
+    check_wall: bool = True,
+) -> tuple[str, bool]:
+    """Gate a run's ``kind="gate"`` records against the baseline file's
+    ``"gate"`` block.  Trace counts and wire bytes are EXACT checks —
+    they are claims about the algorithm and the compilation structure,
+    not the machine; warm wall-clock only fails outside
+    ``baseline * wall_tol``.  Returns (report, ok)."""
+    out: list[str] = []
+    ok = True
+
+    def check(label: str, passed: bool, detail: str) -> None:
+        nonlocal ok
+        ok = ok and passed
+        out.append(f"[{'PASS' if passed else 'FAIL'}] {label}: {detail}")
+
+    block = baseline.get("gate")
+    if not isinstance(block, dict) or "policies" not in block:
+        return "[FAIL] baseline has no 'gate' block — regenerate it with "\
+            "benchmarks/bench_async.py", False
+    cand = {
+        r["policy"]: r for r in records if r.get("kind") == "gate"
+    }
+    if not cand:
+        return "[FAIL] run has no gate records — produce the JSONL with "\
+            "benchmarks/bench_async.py (any flags; the gate rows are "\
+            "always emitted at the fixed gate config)", False
+    base_cfg = block.get("config", {})
+    for policy, base in sorted(block["policies"].items()):
+        r = cand.get(policy)
+        if r is None:
+            check(policy, False, "missing from the candidate run")
+            continue
+        if base_cfg and r.get("config") not in (None, base_cfg):
+            check(
+                policy, False,
+                f"gate config mismatch: {r.get('config')} vs {base_cfg} — "
+                "the two runs priced different problems",
+            )
+            continue
+        check(
+            f"{policy}/trace_counts",
+            r.get("trace_counts") == base.get("trace_counts"),
+            f"{r.get('trace_counts')} vs baseline "
+            f"{base.get('trace_counts')} (exact)",
+        )
+        check(
+            f"{policy}/wire_bytes",
+            r.get("wire_bytes") == base.get("wire_bytes"),
+            f"{r.get('wire_bytes')} vs baseline {base.get('wire_bytes')} "
+            "(exact)",
+        )
+        bw, cw = base.get("warm_wall_s"), r.get("warm_wall_s")
+        if not check_wall:
+            out.append(f"[SKIP] {policy}/warm_wall_s: --no-wall")
+        elif bw is None or cw is None:
+            out.append(f"[SKIP] {policy}/warm_wall_s: not recorded")
+        else:
+            check(
+                f"{policy}/warm_wall_s",
+                cw <= bw * wall_tol,
+                f"{cw:.4f}s vs baseline {bw:.4f}s "
+                f"(band: <= {wall_tol:.1f}x)",
+            )
+    out.append("gate: PASS" if ok else "gate: FAIL")
+    return "\n".join(out), ok
+
+
+def main(argv: list[str] | None = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.obs.report", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    p.add_argument("jsonl", help="run JSONL written by a JsonlSink")
+    p.add_argument(
+        "--diff", metavar="OTHER.jsonl",
+        help="diff the parity views of two runs (exit 1 on mismatch)",
+    )
+    p.add_argument(
+        "--gate", metavar="BENCH_async.json",
+        help="gate the run against the committed benchmark baseline "
+        "(exit 1 on regression)",
+    )
+    p.add_argument(
+        "--wall-tol", type=float, default=10.0,
+        help="warm wall-clock band for --gate, as a multiple of the "
+        "baseline (default 10x — generous because CI machines differ; "
+        "trace counts and bytes stay exact)",
+    )
+    p.add_argument(
+        "--no-wall", action="store_true",
+        help="skip the wall-clock band in --gate (bytes and trace "
+        "counts only)",
+    )
+    args = p.parse_args(argv)
+
+    records = read_jsonl(args.jsonl)
+    if args.diff:
+        text, ok = diff(records, read_jsonl(args.diff))
+        print(text)
+        return 0 if ok else 1
+    if args.gate:
+        with open(args.gate) as f:
+            baseline = json.load(f)
+        text, ok = gate(
+            records, baseline, wall_tol=args.wall_tol,
+            check_wall=not args.no_wall,
+        )
+        print(text)
+        return 0 if ok else 1
+    print(summarize(records))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

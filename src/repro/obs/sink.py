@@ -1,0 +1,139 @@
+"""Metric sinks — where the per-round observability records go.
+
+One protocol (`MetricsSink.emit` takes a plain dict, one call per
+record), three shipped implementations:
+
+* `MemorySink`  — append to a list (tests, notebooks, parity asserts);
+* `JsonlSink`   — stream one JSON line per record to a file, flushed per
+  emit so a crashed / killed run keeps every completed round;
+* `MultiSink`   — fan one stream out to several sinks.
+
+Sinks are intentionally dumb: all schema knowledge lives in
+`repro.obs.records`, all engine plumbing in the engines' ``obs=`` kwarg
+(`repro.obs.Obs`).  Records may arrive from a jax host callback thread
+(the compiled runtime's mid-scan heartbeat), so the shipped sinks guard
+their append/write with a lock.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+from typing import Any, Iterable, Protocol, runtime_checkable
+
+import numpy as np
+
+
+@runtime_checkable
+class MetricsSink(Protocol):
+    """Anything with ``emit(record: dict)``; ``close()`` is optional and
+    called (when present) by `Obs.close` / the sink context managers."""
+
+    def emit(self, record: dict) -> None: ...
+
+
+def json_safe(obj: Any) -> Any:
+    """Recursively coerce a record to plain JSON types: numpy scalars /
+    arrays become Python numbers / lists, non-finite floats become None
+    (bare NaN tokens are not RFC-8259 JSON and break jq / JSON.parse)."""
+    if isinstance(obj, dict):
+        return {str(k): json_safe(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [json_safe(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return [json_safe(v) for v in obj.tolist()]
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        obj = float(obj)
+    if isinstance(obj, float):
+        return obj if np.isfinite(obj) else None
+    if isinstance(obj, (np.bool_,)):
+        return bool(obj)
+    return obj
+
+
+class MemorySink:
+    """Collect records in memory (``.records``)."""
+
+    def __init__(self) -> None:
+        self.records: list[dict] = []
+        self._lock = threading.Lock()
+
+    def emit(self, record: dict) -> None:
+        with self._lock:
+            self.records.append(json_safe(record))
+
+    def rows(self, kind: str | None = None, run: str | None = None) -> list[dict]:
+        """Records filtered by ``kind`` / ``run`` label (None = all)."""
+        return [
+            r for r in self.records
+            if (kind is None or r.get("kind") == kind)
+            and (run is None or r.get("run") == run)
+        ]
+
+    def close(self) -> None:  # protocol symmetry; nothing to release
+        pass
+
+
+class JsonlSink:
+    """Stream records to ``path``, one JSON object per line, flushed per
+    emit — a crashed run keeps every record emitted before the crash."""
+
+    def __init__(self, path: str, append: bool = False) -> None:
+        self.path = str(path)
+        self._fh = open(self.path, "a" if append else "w")
+        self._lock = threading.Lock()
+
+    def emit(self, record: dict) -> None:
+        line = json.dumps(json_safe(record), sort_keys=True)
+        with self._lock:
+            self._fh.write(line + "\n")
+            self._fh.flush()
+
+    def close(self) -> None:
+        with self._lock:
+            if not self._fh.closed:
+                self._fh.close()
+
+    def __enter__(self) -> "JsonlSink":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class MultiSink:
+    """Fan each record out to every wrapped sink, in order."""
+
+    def __init__(self, *sinks: MetricsSink) -> None:
+        self.sinks = tuple(sinks)
+
+    def emit(self, record: dict) -> None:
+        for s in self.sinks:
+            s.emit(record)
+
+    def close(self) -> None:
+        for s in self.sinks:
+            close = getattr(s, "close", None)
+            if close is not None:
+                close()
+
+
+def read_jsonl(path: str) -> list[dict]:
+    """Load a JSONL run back into records (blank lines skipped)."""
+    out = []
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+def iter_jsonl(path: str) -> Iterable[dict]:
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if line:
+                yield json.loads(line)

@@ -1,0 +1,125 @@
+"""Merged Perfetto timelines: simulated network lanes + host wall spans.
+
+The fabric's `repro.net.trace.NetTrace` records SIMULATED time (link
+latency, stragglers, staleness); the engines' host spans record REAL
+time (jit compile, the one-scan execute, per-round dispatch).  The two
+clocks answer different questions — "why is the algorithm waiting" vs
+"why is my benchmark slow" — and before this module they lived in
+different files.  `merged_chrome_trace` joins them into ONE Chrome /
+Perfetto trace-event list: simulated lanes under ``sim:*`` process
+names, host spans under ``host``, each clock starting at its own zero,
+so a single ``ui.perfetto.dev`` load shows simulated staleness drifting
+node lanes apart right above the compile/scan cost of producing it.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import time
+from typing import Any
+
+
+@dataclasses.dataclass(frozen=True)
+class HostSpan:
+    """One named host wall-clock interval, seconds relative to the
+    recorder's epoch (its construction time)."""
+
+    name: str
+    t_start: float
+    t_end: float
+
+    @property
+    def seconds(self) -> float:
+        return self.t_end - self.t_start
+
+
+class HostSpans:
+    """Append-only host span recorder (perf_counter clock, epoch at
+    construction).  Thread-safe enough for the shipped use: spans are
+    recorded from the driving thread, heartbeat callbacks never write."""
+
+    def __init__(self) -> None:
+        self.epoch = time.perf_counter()
+        self.spans: list[HostSpan] = []
+
+    def now(self) -> float:
+        return time.perf_counter() - self.epoch
+
+    def add(self, name: str, t_start: float, t_end: float) -> HostSpan:
+        sp = HostSpan(name=name, t_start=t_start, t_end=t_end)
+        self.spans.append(sp)
+        return sp
+
+    @contextlib.contextmanager
+    def span(self, name: str):
+        t0 = self.now()
+        try:
+            yield
+        finally:
+            self.add(name, t0, self.now())
+
+    def total(self, name: str) -> float:
+        return sum(s.seconds for s in self.spans if s.name == name)
+
+
+def _meta(pid: Any, name: str) -> dict:
+    return {
+        "ph": "M", "name": "process_name", "pid": pid,
+        "args": {"name": name},
+    }
+
+
+def merged_chrome_trace(
+    trace=None,
+    spans: HostSpans | None = None,
+    sim_prefix: str = "sim:",
+    host_pid: str = "host",
+) -> list[dict]:
+    """One Chrome/Perfetto event list from a `NetTrace` (simulated lanes,
+    pids namespaced under ``sim_prefix``) and a `HostSpans` recorder
+    (wall lanes under ``host_pid``).  Either side may be None.  The two
+    clocks are independent (both start at their own zero); the process
+    names make which-is-which explicit in the UI."""
+    out: list[dict] = []
+    if trace is not None:
+        events = (
+            trace if isinstance(trace, list) else trace.to_chrome_trace()
+        )
+        pids = set()
+        for ev in events:
+            ev = dict(ev)
+            ev["pid"] = f"{sim_prefix}{ev['pid']}"
+            pids.add(ev["pid"])
+            out.append(ev)
+        for pid in sorted(pids):
+            out.append(_meta(pid, f"{pid} (simulated seconds)"))
+    if spans is not None and spans.spans:
+        for i, sp in enumerate(spans.spans):
+            out.append(
+                {
+                    "name": sp.name,
+                    "ph": "X",
+                    "pid": host_pid,
+                    "tid": "wall",
+                    "ts": sp.t_start * 1e6,
+                    "dur": sp.seconds * 1e6,
+                }
+            )
+        out.append(_meta(host_pid, f"{host_pid} (wall seconds)"))
+    return out
+
+
+def save_merged_trace(
+    path: str,
+    trace=None,
+    spans: HostSpans | None = None,
+    **kw: Any,
+) -> list[dict]:
+    """Write the merged trace to ``path`` (load in ui.perfetto.dev or
+    chrome://tracing); returns the event list."""
+    events = merged_chrome_trace(trace, spans, **kw)
+    with open(path, "w") as fh:
+        json.dump(events, fh)
+    return events

@@ -55,11 +55,20 @@ def run_c2dfb_transport(
     damping_decay: float = 0.5,
     return_payloads: bool = False,
     compiled: bool = False,
+    obs=None,
 ) -> tuple[C2DFBState, dict]:
     """T outer rounds of C2DFB over a `Transport`.  See module docstring;
     ``return_payloads`` additionally stashes the executed per-round inner
     payload stacks in ``metrics["payloads"]`` (device backend only —
-    that is what the byte-parity acceptance test audits)."""
+    that is what the byte-parity acceptance test audits).  ``obs`` streams
+    the shared per-round record (`repro.obs`) from whichever backend runs
+    — the SimTransport branch hands it through to `run`, the device loop
+    emits ``engine="transport-device"`` rows with executed byte counts.
+
+    Features the device backend does not execute raise
+    ``NotImplementedError`` naming the feature (``async_mode``,
+    ``compiled``, ``schedule``) so callers can branch on capability with
+    one except clause."""
     transport.bind(topo)
     if not transport.executes:
         from repro.core.c2dfb import run
@@ -69,28 +78,29 @@ def run_c2dfb_transport(
             schedule=schedule, fabric=transport.fabric,
             async_mode=async_mode, staleness_bound=staleness_bound,
             ledger=ledger, mixing_damping=mixing_damping,
-            damping_decay=damping_decay, compiled=compiled,
+            damping_decay=damping_decay, compiled=compiled, obs=obs,
         )
 
     if async_mode is not None:
         raise NotImplementedError(
-            "DeviceTransport executes synchronous rounds; async_mode needs "
-            "the priced SimTransport — a real asynchronous multi-process "
-            "backend is the ROADMAP follow-on"
+            "DeviceTransport does not support async_mode: it executes "
+            "synchronous rounds; async needs the priced SimTransport — a "
+            "real asynchronous multi-process backend is the ROADMAP "
+            "follow-on"
         )
     if compiled:
-        raise ValueError(
-            "compiled=True is the async simulator's two-phase scan "
-            "runtime; the device backend executes rounds eagerly — use "
-            "SimTransport (or a bare fabric) with async_mode for the "
-            "compiled path"
+        raise NotImplementedError(
+            "DeviceTransport does not support compiled: that is the async "
+            "simulator's two-phase scan runtime and the device backend "
+            "executes rounds eagerly — use SimTransport (or a bare fabric) "
+            "with async_mode for the compiled path"
         )
     if schedule is not None:
         raise NotImplementedError(
-            "DeviceTransport does not execute time-varying topologies yet "
-            "— run schedules through SimTransport (the collective pattern "
-            "is compiled per graph; per-round graphs need the follow-on "
-            "jax.distributed backend)"
+            "DeviceTransport does not support schedule: time-varying "
+            "topologies are not executed yet — run schedules through "
+            "SimTransport (the collective pattern is compiled per graph; "
+            "per-round graphs need the follow-on jax.distributed backend)"
         )
     if mixing_damping != "none":
         raise ValueError(
@@ -98,7 +108,9 @@ def run_c2dfb_transport(
             "synchronous (all ages zero) so damping would be a silent no-op"
         )
     assert isinstance(transport, DeviceTransport)
+    from repro.obs import as_obs
 
+    obs = as_obs(obs)
     state = init_state(problem, cfg, x0, y0)
     compressor = cfg.make_compressor()
     round_fn = make_device_round(
@@ -165,6 +177,35 @@ def run_c2dfb_transport(
             "wall_seconds": wall,
         }
         rows.append(row)
+        if obs is not None:
+            w1 = obs.hostspans.now()
+            obs.hostspans.add(f"round[{t}]", w1 - wall, w1)
+            # per-stream EXECUTED wire bytes: meter_round prices each
+            # sender's message once per directed edge, so a stream's
+            # wire share is sum_i deg(i) * node_bytes[i] — the three
+            # streams sum to rep["wire_bytes"] exactly, matching the
+            # simulator engines' by-stream contract.  Phase labels are
+            # "out/x", "out/s_x" and "{y,z}/in{k}/{name}".
+            deg = [len(nbrs) for nbrs in topo.neighbors]
+
+            def _stream(prefix):
+                return int(
+                    sum(
+                        sum(d * b for d, b in zip(deg, nb))
+                        for label, nb in rep["node_bytes"].items()
+                        if label.startswith(prefix)
+                    )
+                )
+
+            obs.round(
+                "transport-device", t, row,
+                bytes_by_stream={
+                    "outer": _stream("out/"),
+                    "y": _stream("y/"),
+                    "z": _stream("z/"),
+                },
+                wall_seconds=wall,
+            )
         if return_payloads:
             payload_log.append(
                 {

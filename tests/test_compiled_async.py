@@ -13,7 +13,12 @@
 * buffer donation: neither the donated sync scan nor the donated compiled
   carry may emit donation warnings, and caller-owned x0/y0 stay usable;
 * the async MADSBO/MDBO baselines compile to the same trajectories (their
-  payload sizes were analytic already, so parity is byte-exact too).
+  payload sizes were analytic already, so parity is byte-exact too);
+* the obs spine (ISSUE 6): eager / compiled / SimTransport runs on the
+  same seed stream field-for-field identical JSONL round records
+  through one ``obs=`` kwarg, and the compiled runtime's mid-scan
+  heartbeat callback changes neither the jit trace counts nor the
+  trajectory.
 """
 
 import warnings
@@ -231,6 +236,109 @@ def test_unknown_payload_mode_rejected(bundle):
             bundle.problem, topo, _cfg(), bundle.x0, bundle.y0, 2, KEY,
             _fabric(topo), payload_bytes="guess",
         )
+
+
+def test_metric_stream_parity_eager_compiled_transport(bundle):
+    """The ISSUE 6 acceptance: the SAME seed through the eager engine
+    (analytic sizes), the compiled runtime, and `SimTransport` emits
+    JSONL round records equal field-for-field on every algorithmic
+    field — bytes (total and by stream), staleness, errors, simulated
+    seconds.  Host facts (wall time, trace counts, run/engine labels)
+    are excluded by `parity_view`."""
+    from repro.obs import MemorySink, Obs, parity_rows
+    from repro.transport import SimTransport
+
+    topo = ring(4)
+    cfg = _cfg()
+    kw = dict(policy="bounded", bound=1)
+    sinks = {k: MemorySink() for k in ("eager", "compiled", "transport")}
+    run_async(
+        bundle.problem, topo, cfg, bundle.x0, bundle.y0, 4, KEY,
+        _fabric(topo), payload_bytes="analytic",
+        obs=Obs(sink=sinks["eager"], run="eager"), **kw,
+    )
+    run_async_compiled(
+        bundle.problem, topo, cfg, bundle.x0, bundle.y0, 4, KEY,
+        _fabric(topo), obs=Obs(sink=sinks["compiled"], run="compiled"),
+        **kw,
+    )
+    run(
+        bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=4, key=KEY,
+        transport=SimTransport(_fabric(topo)), async_mode="bounded",
+        staleness_bound=1, compiled=True,
+        obs=sinks["transport"],  # bare sink through the c2dfb.run surface
+    )
+    rows = {k: parity_rows(s.records) for k, s in sinks.items()}
+    assert len(rows["eager"]) == 4
+    assert rows["eager"] == rows["compiled"] == rows["transport"]
+    # the excluded fields were present on the raw records, not absent
+    raw = sinks["eager"].rows(kind="round")[0]
+    assert raw["wall_seconds"] is not None
+    assert raw["trace_counts"] is not None
+    assert raw["bytes_by_stream"] is not None
+    assert set(raw["bytes_by_stream"]) == {"outer", "y", "z"}
+    assert raw["wire_bytes"] == sum(raw["bytes_by_stream"].values())
+
+
+def test_compiled_heartbeat_no_retrace_no_drift(bundle):
+    """`Obs(heartbeat_every=N)` makes the donated-carry scan emit a
+    liveness record every N rounds from INSIDE the compiled run via a
+    jax host callback.  The callback is an effect, not an op: trace
+    counts stay at one scan + one round body, and the trajectory is
+    array-for-array identical to the heartbeat-free run."""
+    from repro.obs import MemorySink, Obs
+
+    topo = ring(4)
+    cfg = _cfg()
+    st_ref, m_ref = run_async_compiled(
+        bundle.problem, topo, cfg, bundle.x0, bundle.y0, 6, KEY,
+        _fabric(topo), policy="bounded", bound=1,
+    )
+    sink = MemorySink()
+    reset_trace_counts()
+    st_hb, m_hb = run_async_compiled(
+        bundle.problem, topo, cfg, bundle.x0, bundle.y0, 6, KEY,
+        _fabric(topo), policy="bounded", bound=1,
+        obs=Obs(sink=sink, heartbeat_every=2, run="hb"),
+    )
+    tc = trace_counts()
+    assert tc["compiled_scan"] == 1 and tc["c2dfb_round"] == 1
+    assert sum(tc.values()) <= 2
+    for a, b in zip(jax.tree.leaves(st_ref), jax.tree.leaves(st_hb)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for k in m_ref:
+        if k == "ledger":
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(m_ref[k]), np.asarray(m_hb[k]), err_msg=k
+        )
+    beats = sink.rows(kind="heartbeat")
+    assert [b["round"] for b in beats] == [0, 2, 4]  # every 2nd round
+    # heartbeat samples match the post-hoc round records on shared fields
+    rounds = {r["round"]: r for r in sink.rows(kind="round")}
+    for b in beats:
+        for f in ("hypergrad_norm", "x_consensus_err"):
+            assert b[f] == rounds[b["round"]][f]
+
+
+def test_heartbeat_handles_do_not_share_jit_cache(bundle):
+    """Two different heartbeat handles through the same ``fn_cache`` bake
+    in different callback closures — the cache must key on the handle
+    (a reused compilation would beat into the WRONG sink)."""
+    from repro.obs import MemorySink, Obs
+
+    topo = ring(4)
+    cfg = _cfg()
+    cache: dict = {}
+    s1, s2 = MemorySink(), MemorySink()
+    for s in (s1, s2):
+        run_async_compiled(
+            bundle.problem, topo, cfg, bundle.x0, bundle.y0, 4, KEY,
+            _fabric(topo), policy="bounded", bound=1, fn_cache=cache,
+            obs=Obs(sink=s, heartbeat_every=1),
+        )
+    assert len(s1.rows(kind="heartbeat")) == 4
+    assert len(s2.rows(kind="heartbeat")) == 4  # not delivered to s1
 
 
 def test_analytic_bytes_match_steady_state_measurement(bundle):

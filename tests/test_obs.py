@@ -1,0 +1,318 @@
+"""repro.obs acceptance suite (ISSUE 6): one telemetry spine.
+
+* sinks: `MemorySink` / `JsonlSink` round-trip the record schema
+  (numpy scalars coerced, non-finite floats JSON-safe), `MultiSink`
+  fans out, `as_obs` normalizes the engines' ``obs=`` kwarg;
+* every execution path emits the SAME schema through one ``obs=``
+  surface — sync `run`, eager async, compiled async, `SimTransport`;
+* the timeline merger joins simulated `NetTrace` lanes and host wall
+  spans into one Chrome/Perfetto event list with labelled clocks;
+* the report CLI (`python -m repro.obs.report`): summary, diff
+  (parity fields only; exit 1 on mismatch), and the regression gate
+  against a ``BENCH_async.json`` baseline — exact on trace counts and
+  wire bytes, banded on wall-clock, exit 1 on an injected regression.
+"""
+
+import json
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.c2dfb import C2DFBConfig, run
+from repro.core.topology import ring
+from repro.data.bilevel_tasks import coefficient_tuning_task
+from repro.net import NetTrace, make_fabric
+from repro.obs import (
+    JsonlSink,
+    MemorySink,
+    MetricsSink,
+    MultiSink,
+    Obs,
+    as_obs,
+    gate_record,
+    json_safe,
+    merged_chrome_trace,
+    parity_rows,
+    read_jsonl,
+    round_record,
+)
+from repro.obs.report import main as report_main
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def bundle():
+    return coefficient_tuning_task(m=4, n=80, p=12, c=3, h=0.5, seed=0)
+
+
+def _cfg():
+    return C2DFBConfig(
+        K=3, compressor="topk", comp_ratio=0.3, gamma_in=0.3, eta_in=0.3
+    )
+
+
+# ---------------------------------------------------------------------------
+# sinks + records
+# ---------------------------------------------------------------------------
+
+
+def test_json_safe_coerces_numpy_and_nonfinite():
+    rec = json_safe({
+        "i": np.int64(7), "f": np.float32(0.5), "a": np.arange(3),
+        "nan": float("nan"), "inf": np.float64("inf"),
+        "nested": {"b": np.bool_(True)},
+    })
+    # must serialize without allow_nan and round-trip
+    s = json.dumps(rec, allow_nan=False)
+    back = json.loads(s)
+    assert back["i"] == 7 and back["f"] == 0.5 and back["a"] == [0, 1, 2]
+    assert back["nan"] is None and back["inf"] is None
+    assert back["nested"]["b"] is True
+
+
+def test_memory_sink_protocol_and_filters():
+    s = MemorySink()
+    assert isinstance(s, MetricsSink)  # runtime_checkable protocol
+    s.emit(round_record("sync", "a", 0, {"wire_bytes": 10}))
+    s.emit(round_record("sync", "b", 0, {"wire_bytes": 20}))
+    s.emit({"kind": "timing", "run": "a", "label": "scan"})
+    assert len(s.records) == 3
+    assert len(s.rows(kind="round")) == 2
+    assert [r["wire_bytes"] for r in s.rows(kind="round", run="b")] == [20]
+
+
+def test_jsonl_sink_roundtrip_and_multisink(tmp_path):
+    path = tmp_path / "run.jsonl"
+    mem = MemorySink()
+    with JsonlSink(str(path)) as jl:
+        multi = MultiSink(mem, jl)
+        multi.emit(round_record(
+            "async-eager", "r", 0,
+            {"wire_bytes": np.int64(5), "hypergrad_norm": np.float32(1.5)},
+            bytes_by_stream={"outer": np.int64(1), "y": 2, "z": 2},
+        ))
+        multi.emit({"kind": "timing", "run": "r", "label": "scan",
+                    "wall_seconds": 0.1})
+    back = read_jsonl(str(path))
+    assert back == mem.records  # byte-identical view through both sinks
+    assert back[0]["bytes_by_stream"] == {"outer": 1, "y": 2, "z": 2}
+    # one JSON object per line, every line parseable
+    lines = path.read_text().strip().splitlines()
+    assert len(lines) == 2 and all(json.loads(ln) for ln in lines)
+
+
+def test_round_record_full_schema_with_explicit_nones():
+    rec = round_record("sync", "r", 3, {"wire_bytes": 9})
+    assert rec["round"] == 3 and rec["wire_bytes"] == 9
+    # absent signals are None, never missing keys
+    for k in ("staleness_max", "staleness_hist", "sim_seconds",
+              "wall_seconds", "trace_counts", "bytes_by_stream"):
+        assert k in rec and rec[k] is None
+
+
+def test_as_obs_normalization():
+    assert as_obs(None) is None
+    o = Obs()
+    assert as_obs(o) is o
+    sink = MemorySink()
+    wrapped = as_obs(sink)
+    assert isinstance(wrapped, Obs) and wrapped.sink is sink
+    with pytest.raises(TypeError, match="obs="):
+        as_obs(42)
+
+
+def test_heartbeat_cache_key_isolation():
+    """Two handles with heartbeats on must never share a jit cache entry;
+    heartbeat-off handles all share the one neutral key."""
+    a = Obs(sink=MemorySink(), heartbeat_every=2)
+    b = Obs(sink=MemorySink(), heartbeat_every=2)
+    assert a.heartbeat_cache_key() != b.heartbeat_cache_key()
+    assert Obs().heartbeat_cache_key() == Obs(sink=MemorySink()) \
+        .heartbeat_cache_key() == ("hb", 0)
+
+
+# ---------------------------------------------------------------------------
+# timeline merger
+# ---------------------------------------------------------------------------
+
+
+def test_merged_timeline_joins_sim_and_host_clocks(bundle, tmp_path):
+    topo = ring(4)
+    tr = NetTrace()
+    fabric = make_fabric(
+        topo, profile="geo", straggler="lognormal", sigma=0.8,
+        compute_s=0.05, seed=1, trace=tr,
+    )
+    obs = Obs(sink=MemorySink(), run="tl")
+    run(
+        bundle.problem, topo, _cfg(), bundle.x0, bundle.y0, T=2, key=KEY,
+        fabric=fabric, async_mode="bounded", staleness_bound=1,
+        compiled=True, obs=obs,
+    )
+    events = merged_chrome_trace(tr, obs.hostspans)
+    sim = [e for e in events if str(e.get("pid", "")).startswith("sim:")
+           and e.get("ph") != "M"]
+    host = [e for e in events if e.get("pid") == "host" and e["ph"] == "X"]
+    assert sim, "simulated lanes missing"
+    names = {e["name"] for e in host}
+    assert "replay" in names and any("scan" in n for n in names)
+    # both clocks labelled so the UI shows which is which
+    metas = {
+        e["args"]["name"] for e in events if e.get("ph") == "M"
+    }
+    assert any("wall seconds" in m for m in metas)
+    assert any("simulated seconds" in m for m in metas)
+    # save_timeline writes valid JSON
+    path = tmp_path / "merged.json"
+    obs.save_timeline(str(path), tr)
+    assert json.loads(path.read_text())
+
+
+# ---------------------------------------------------------------------------
+# report CLI: summary / diff / gate
+# ---------------------------------------------------------------------------
+
+
+def _write_run(path, run_label, wire=100, engine="async-compiled",
+               trace_counts=None, warm_wall=0.05, with_gate=True):
+    tcs = trace_counts or {"compiled_scan": 1, "c2dfb_round": 1}
+    with JsonlSink(str(path)) as sink:
+        for t in range(3):
+            sink.emit(round_record(
+                engine, run_label, t,
+                {"wire_bytes": wire, "hypergrad_norm": 0.1,
+                 "x_consensus_err": 1e-3, "sim_seconds": 0.5},
+                trace_counts=tcs, wall_seconds=0.01,
+            ))
+        if with_gate:
+            sink.emit(gate_record(
+                run_label, "bounded1", wire_bytes=3 * wire,
+                trace_counts=tcs, warm_wall_s=warm_wall,
+                config={"m": 6, "T": 12},
+            ))
+
+
+def test_report_summary(tmp_path, capsys):
+    p = tmp_path / "a.jsonl"
+    _write_run(p, "a")
+    assert report_main([str(p)]) == 0
+    out = capsys.readouterr().out
+    assert "async-compiled" in out and "3 rounds" in out
+    assert "gate policy=bounded1" in out
+
+
+def test_report_diff_exit_codes(tmp_path, capsys):
+    a, b, c = (tmp_path / n for n in ("a.jsonl", "b.jsonl", "c.jsonl"))
+    _write_run(a, "a", wire=100)
+    _write_run(b, "b", wire=100)  # same algorithmic fields, new run label
+    _write_run(c, "c", wire=150)  # byte drift -> parity break
+    assert report_main([str(a), "--diff", str(b)]) == 0
+    assert "parity: MATCH" in capsys.readouterr().out
+    assert report_main([str(a), "--diff", str(c)]) == 1
+    out = capsys.readouterr().out
+    assert "wire_bytes" in out and "parity: DIFFER" in out
+
+
+def _baseline(path, wire=300, traces=None, warm=0.05):
+    payload = {
+        "gate": {
+            "config": {"m": 6, "T": 12},
+            "policies": {
+                "bounded1": {
+                    "wire_bytes": wire,
+                    "trace_counts": traces
+                    or {"compiled_scan": 1, "c2dfb_round": 1},
+                    "warm_wall_s": warm,
+                },
+            },
+        },
+    }
+    path.write_text(json.dumps(payload))
+
+
+def test_report_gate_pass_and_injected_regressions(tmp_path, capsys):
+    runp = tmp_path / "run.jsonl"
+    _write_run(runp, "r", wire=100, warm_wall=0.05)  # gate row: 300 bytes
+    good = tmp_path / "good.json"
+    _baseline(good)
+    assert report_main([str(runp), "--gate", str(good)]) == 0
+    assert "gate: PASS" in capsys.readouterr().out
+
+    # injected byte regression -> exact check fails the gate
+    bad_bytes = tmp_path / "bad_bytes.json"
+    _baseline(bad_bytes, wire=301)
+    assert report_main([str(runp), "--gate", str(bad_bytes)]) == 1
+    assert "wire_bytes" in capsys.readouterr().out
+
+    # injected retrace -> trace-count check fails the gate
+    bad_traces = tmp_path / "bad_traces.json"
+    _baseline(bad_traces, traces={"compiled_scan": 1, "c2dfb_round": 2})
+    assert report_main([str(runp), "--gate", str(bad_traces)]) == 1
+
+    # wall-clock outside the band fails; --no-wall skips the check
+    slow = tmp_path / "slow.json"
+    _baseline(slow, warm=0.001)  # candidate 0.05 > 0.001 * 10
+    assert report_main([str(runp), "--gate", str(slow)]) == 1
+    assert report_main([str(runp), "--gate", str(slow), "--no-wall"]) == 0
+
+
+def test_report_gate_requires_gate_rows(tmp_path, capsys):
+    runp = tmp_path / "nogate.jsonl"
+    _write_run(runp, "r", with_gate=False)
+    base = tmp_path / "base.json"
+    _baseline(base)
+    assert report_main([str(runp), "--gate", str(base)]) == 1
+    assert "no gate records" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# benchmarks.common.time_fn
+# ---------------------------------------------------------------------------
+
+
+def test_time_fn_blocks_and_emits_timing_record():
+    import sys
+    from pathlib import Path
+
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    from benchmarks.common import time_fn
+
+    sink = MemorySink()
+    calls = []
+
+    def fn(x):
+        calls.append(x)
+        return jax.numpy.asarray(x) * 2
+
+    t = time_fn(fn, 3, warmups=1, repeats=2, obs=sink, label="double")
+    assert len(calls) == 3  # 1 warmup + 2 measured
+    assert len(t.walls) == 2 and t.best <= t.mean
+    assert all(math.isfinite(w) and w >= 0 for w in t.walls)
+    recs = sink.rows(kind="timing")
+    assert len(recs) == 1 and recs[0]["label"] == "double"
+    assert recs[0]["wall_seconds"] == t.best
+    assert len(recs[0]["walls"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# the one obs= surface across engines (smoke; full parity lives in
+# tests/test_compiled_async.py)
+# ---------------------------------------------------------------------------
+
+
+def test_sync_run_emits_rounds_through_bare_sink(bundle):
+    sink = MemorySink()
+    run(
+        bundle.problem, ring(4), _cfg(), bundle.x0, bundle.y0, T=3,
+        key=KEY, obs=sink,  # bare sink: as_obs wraps it
+    )
+    rows = sink.rows(kind="round")
+    assert [r["round"] for r in rows] == [0, 1, 2]
+    assert all(r["engine"] == "sync" for r in rows)
+    assert all(r["measured_bytes"] > 0 for r in rows)
+    # parity_rows strips host fields but keeps the algorithmic ones
+    pv = parity_rows(sink.records)
+    assert "wall_seconds" not in pv[0] and "measured_bytes" in pv[0]

@@ -127,6 +127,45 @@ def test_device_transport_device_count_error():
         mesh_for_nodes(4096)
 
 
+class _ExecutingStub(Transport):
+    """Minimal executing transport: enough to reach the engine's
+    unsupported-feature checks without a device mesh."""
+
+    @property
+    def executes(self) -> bool:
+        return True
+
+    def bind(self, topo):
+        return self
+
+    def exchange(self, payload, compressor, round_idx):  # pragma: no cover
+        raise AssertionError("feature checks must fire before exchange")
+
+
+@pytest.mark.parametrize("feature,kw", [
+    ("async_mode", dict(async_mode="bounded")),
+    ("compiled", dict(compiled=True)),
+    ("schedule", None),  # built in the test body (needs the topology)
+])
+def test_device_unsupported_features_raise_named_notimplemented(feature, kw):
+    """All three features an executing transport cannot run — async_mode,
+    compiled, schedule — raise NotImplementedError with a message naming
+    the feature, so capability probing is one uniform except clause."""
+    from repro.net import BConnectedSchedule
+    from repro.transport.engine import run_c2dfb_transport
+
+    bundle, topo, cfg = _setup()
+    if kw is None:
+        kw = dict(schedule=BConnectedSchedule(topo, B=2))
+    with pytest.raises(
+        NotImplementedError, match=f"does not support {feature}"
+    ):
+        run_c2dfb_transport(
+            bundle.problem, topo, cfg, bundle.x0, bundle.y0, 2, KEY,
+            _ExecutingStub(), **kw,
+        )
+
+
 # ---------------------------------------------------------------------------
 # SimTransport: bit-exact with the existing priced path
 # ---------------------------------------------------------------------------
@@ -224,6 +263,7 @@ from repro.core.c2dfb import C2DFBConfig, run
 from repro.core.topology import ring, star
 from repro.data.bilevel_tasks import coefficient_tuning_task
 from repro.net.wire import measure_tree_bytes
+from repro.obs import MemorySink
 from repro.transport import DeviceTransport
 from repro.transport.engine import run_c2dfb_transport
 
@@ -239,9 +279,10 @@ for topo, name in [(ring(m), "ring"), (star(m), "star")]:
         bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=3, key=key
     )
     tr = DeviceTransport()
+    sink = MemorySink()
     st, mets = run_c2dfb_transport(
         bundle.problem, topo, cfg, bundle.x0, bundle.y0, 3, key, tr,
-        return_payloads=True,
+        return_payloads=True, obs=sink,
     )
     dx = float(np.max(np.abs(np.asarray(st.x) - np.asarray(ref_state.x))))
     dy = float(np.max(np.abs(
@@ -273,10 +314,23 @@ for topo, name in [(ring(m), "ring"), (star(m), "star")]:
             for d, b in zip(deg, nb)
         )
         wire_ok &= total == int(mets["wire_bytes"][t])
+    # obs contract on the EXECUTED backend: one shared-schema round
+    # record per round, bytes_by_stream summing exactly to wire_bytes
+    obs_rows = sink.rows(kind="round")
+    obs_ok = len(obs_rows) == 3 and all(
+        r["engine"] == "transport-device"
+        and set(r["bytes_by_stream"]) == {"outer", "y", "z"}
+        and sum(r["bytes_by_stream"].values())
+        == r["wire_bytes"]
+        == int(mets["wire_bytes"][t])
+        and r["wall_seconds"] > 0.0
+        for t, r in enumerate(obs_rows)
+    )
     out[name] = {
         "dx": dx, "dy": dy, "ds": ds,
         "byte_parity": bool(byte_parity),
         "wire_ok": bool(wire_ok),
+        "obs_ok": obs_ok,
         "measured_equal": bool(np.array_equal(
             np.asarray(ref_mets["measured_bytes"]),
             np.asarray(mets["measured_bytes"]),
@@ -329,6 +383,7 @@ def test_device_transport_parity_and_bytes():
         assert r["dx"] < 1e-4 and r["dy"] < 1e-4 and r["ds"] < 1e-4, (name, r)
         assert r["byte_parity"], (name, r)
         assert r["wire_ok"], (name, r)
+        assert r["obs_ok"], (name, r)
         assert r["measured_equal"], (name, r)
     assert out["exchange"]["exact"]
     assert out["exchange"]["node_bytes_ok"]
