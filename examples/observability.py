@@ -12,12 +12,20 @@ record through one ``obs=`` kwarg.  Shows:
   a custom sink (`MetricsSink` is a protocol — anything with ``.emit``);
 * heartbeats printed mid-scan without retracing the compiled round;
 * the parity contract: the engines' rows are field-for-field equal
-  once machine-dependent fields are dropped (`parity_rows`);
+  once machine-dependent fields are dropped (`parity_rows`) — and the
+  schema-v2 per-NODE rows ride alongside without touching that view;
 * a merged Perfetto/Chrome timeline joining the fabric's *simulated*
-  per-node lanes with the host's *wall-clock* spans (replay, compile,
-  scan) — load observability_trace.json in ui.perfetto.dev;
+  per-node lanes, the host's *wall-clock* spans (replay, compile,
+  scan), and per-node counter lanes from the node rows — load
+  observability_trace.json in ui.perfetto.dev;
+* LIVE tailing: a second run streams to a JSONL file from a background
+  thread while the foreground follows it crash-safely (`follow_jsonl`)
+  and renders the watch dashboard (`python -m repro.obs.watch` is the
+  same loop in a terminal; ``--listen`` + `SocketSink` skips the file);
 * the report CLI (`python -m repro.obs.report`) summarizing the run.
 """
+
+import threading
 
 import jax
 
@@ -26,11 +34,21 @@ from repro.core.c2dfb import C2DFBConfig, run
 from repro.core.topology import ring
 from repro.data.bilevel_tasks import coefficient_tuning_task
 from repro.net import NetTrace, make_fabric
-from repro.obs import JsonlSink, MemorySink, MultiSink, Obs, parity_rows
+from repro.obs import (
+    JsonlSink,
+    MemorySink,
+    MultiSink,
+    Obs,
+    follow_jsonl,
+    node_rows,
+    parity_rows,
+)
 from repro.obs.report import summarize
+from repro.obs.watch import WatchState
 from repro.transport import SimTransport
 
 JSONL = "observability_run.jsonl"
+LIVE = "observability_live.jsonl"
 TRACE = "observability_trace.json"
 
 
@@ -90,7 +108,9 @@ def main():
             fabric=fabric(net_trace), compiled=True, obs=obs,
             async_mode="bounded", staleness_bound=2)
 
-        obs.save_timeline(TRACE, net_trace)
+        # node_records= adds the schema-v2 per-node counter lanes
+        # (consensus distance + cumulative egress) under the sim lanes
+        obs.save_timeline(TRACE, net_trace, node_records=mem.records)
 
     # 2. the transport layer with a BARE sink — run() wraps it in a
     # default Obs handle (SimTransport is the bit-exact fabric adapter).
@@ -110,9 +130,39 @@ def main():
     print(f"\nparity: eager == compiled == transport on all "
           f"{len(rows['async-eager'])} rounds "
           "(machine-dependent fields excluded)")
+    # ...and the v2 node rows rode alongside without touching that view
+    per_node = node_rows(mem.records, engine="async-eager", round_idx=T - 1)
+    print(f"node rows (schema v2): {len(node_rows(mem.records))} total; "
+          "final round per-node egress "
+          f"{[r['wire_bytes'] for r in per_node]} bytes")
+
+    # 4. LIVE: tail a run that is still writing.  A background thread
+    # streams a fresh run to its own JSONL; the foreground follows the
+    # growing file (bytes after the last newline wait in a carry buffer,
+    # so a mid-record flush never parses) and feeds the watch dashboard.
+    # In a terminal: PYTHONPATH=src python -m repro.obs.watch <file>
+    # — or `--listen host:port` with SocketSink(...) on the run's Obs.
+    def live_run():
+        with JsonlSink(LIVE) as sink:
+            run_async(bundle.problem, topo, cfg, bundle.x0, bundle.y0, T,
+                      key, fabric(), policy="bounded", bound=2,
+                      obs=Obs(sink=sink, run="live"))
+
+    th = threading.Thread(target=live_run)
+    th.start()
+    state = WatchState()
+    seen = 0
+    for rec in follow_jsonl(LIVE, timeout_s=300.0,
+                            stop=lambda: not th.is_alive()):
+        state.ingest(rec)
+        seen += 1
+    th.join()
+    print(f"\n=== live watch: {seen} records tailed while running ===")
+    print(state.render(LIVE))
 
     print(f"\nwrote {JSONL} (one JSON record per line) and {TRACE} "
-          "(merged sim+host Perfetto timeline — open in ui.perfetto.dev)")
+          "(merged sim+host Perfetto timeline with per-node lanes — "
+          "open in ui.perfetto.dev)")
     print("\n=== repro.obs.report summary ===")
     print(summarize(mem.records))
     print("same summary from the file:  PYTHONPATH=src python -m "

@@ -259,7 +259,10 @@ def run_async_compiled(
     metrics["staleness_hist"] = shist
     metrics["ledger"] = ledger
     if obs is not None:
+        from repro.async_gossip.ledger import node_staleness_stats
+
         tc = trace_counts()
+        x_nd = np.asarray(metrics["x_node_dist"])
         for t, rt in enumerate(rounds):
             row = {
                 k: v[t] for k, v in metrics.items() if k != "ledger"
@@ -269,6 +272,23 @@ def run_async_compiled(
                 bytes_by_stream=rt.wire_bytes_by_stream,
                 trace_counts=tc,
             )
+            # schema-v2 node rows from the same replayed timelines the
+            # eager engine accounts with — per-node parity by construction
+            node_wire = rt.node_wire_bytes
+            nmax, nmean = node_staleness_stats(
+                (rt.tl_y.ages, rt.tl_z.ages), edges_per_round[t], topo.m
+            )
+            for i in range(topo.m):
+                obs.node(
+                    "async-compiled", t, i,
+                    {
+                        "x_dist": x_nd[t, i],
+                        "wire_bytes": node_wire[i],
+                        "staleness_max": nmax[i],
+                        "staleness_mean": nmean[i],
+                    },
+                    bytes_by_stream=rt.node_bytes_by_stream(i),
+                )
     return state, metrics
 
 

@@ -490,7 +490,11 @@ def run_async(
     policy contractive at mixing steps where undamped delayed gossip
     diverges (tests/test_async_schedule_compose.py).
     """
-    from repro.async_gossip.ledger import edge_age_samples, staleness_stats
+    from repro.async_gossip.ledger import (
+        edge_age_samples,
+        node_staleness_stats,
+        staleness_stats,
+    )
     from repro.async_gossip.mixing import validate_damping
     from repro.net.fabric import edge_list
     from repro.obs import as_obs
@@ -614,6 +618,25 @@ def run_async(
                 bytes_by_stream=rt.wire_bytes_by_stream,
                 wall_seconds=w1 - w0, trace_counts=trace_counts(),
             )
+            # schema-v2 node rows: per-sender egress from the scheduler's
+            # accounting, per-node consensus distance from the round body,
+            # per-node staleness over each node's incident in-edges
+            node_wire = rt.node_wire_bytes
+            nmax, nmean = node_staleness_stats(
+                (tl_y.ages, tl_z.ages), act_edges, topo.m
+            )
+            x_nd = np.asarray(mets["x_node_dist"])
+            for i in range(topo.m):
+                obs.node(
+                    "async-eager", t, i,
+                    {
+                        "x_dist": x_nd[i],
+                        "wire_bytes": node_wire[i],
+                        "staleness_max": nmax[i],
+                        "staleness_mean": nmean[i],
+                    },
+                    bytes_by_stream=rt.node_bytes_by_stream(i),
+                )
 
     metrics = {
         k: np.stack([r[k] for r in rows]) for k in rows[0]

@@ -46,6 +46,27 @@ def staleness_stats(
     )
 
 
+def node_staleness_stats(
+    ages_list, edges, m: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Per-NODE (max, mean) age over each node's incident directed-edge
+    samples — what the schema-v2 node records report.  A node's samples
+    are the ages of the in-edges ``(j, i)`` it mixes on (symmetric age
+    tensors make the in/out choice immaterial on undirected graphs, but
+    the in-edge reading is what bounds node i's own mixing error).
+    Returns ``(max (m,) int32, mean (m,) float64)``; isolated nodes
+    report (0, 0.0)."""
+    nmax = np.zeros(m, np.int32)
+    nmean = np.zeros(m, np.float64)
+    for i in range(m):
+        incident = [e for e in edges if e[1] == i]
+        samples = edge_age_samples(ages_list, incident)
+        if samples.size:
+            nmax[i] = samples.max()
+            nmean[i] = samples.mean()
+    return nmax, nmean
+
+
 def replay_staleness_rows(
     rounds, edges_per_round, depth: int
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:

@@ -94,6 +94,10 @@ class AsyncTimeline:
     end_s       when the loop (incl. in-flight packets) has fully drained
     wire_bytes  total bytes put on all links (per-link accounting,
                 including re-entry catch-up packets)
+    node_wire_bytes  (m,) int64 — each SENDER's share of ``wire_bytes``
+                (its egress over all directed edges and catch-ups); sums
+                to ``wire_bytes`` exactly.  This is what the schema-v2
+                per-node round records report for the simulator engines.
     """
 
     ages: np.ndarray
@@ -101,6 +105,7 @@ class AsyncTimeline:
     finish_s: np.ndarray
     end_s: float
     wire_bytes: int
+    node_wire_bytes: np.ndarray | None = None
 
     @property
     def max_age(self) -> int:
@@ -135,6 +140,7 @@ class RoundTimeline:
     x_end: float
     t_end: float
     outer_wire_bytes: int = 0
+    outer_node_wire_bytes: np.ndarray | None = None
 
     @property
     def wire_bytes_by_stream(self) -> dict[str, int]:
@@ -144,6 +150,31 @@ class RoundTimeline:
             "outer": int(self.outer_wire_bytes),
             "y": int(self.tl_y.wire_bytes),
             "z": int(self.tl_z.wire_bytes),
+        }
+
+    @property
+    def node_wire_bytes(self) -> np.ndarray | None:
+        """(m,) per-sender egress over the whole round (outer barriers +
+        both inner loops + catch-ups); sums to the round's total wire
+        bytes.  None on timelines built before per-node accounting."""
+        parts = (
+            self.outer_node_wire_bytes,
+            self.tl_y.node_wire_bytes,
+            self.tl_z.node_wire_bytes,
+        )
+        if any(p is None for p in parts):
+            return None
+        return parts[0] + parts[1] + parts[2]
+
+    def node_bytes_by_stream(self, i: int) -> dict[str, int] | None:
+        """Node ``i``'s egress split by stream — the per-node companion
+        to `wire_bytes_by_stream` (schema-v2 node rows carry this)."""
+        if self.node_wire_bytes is None:
+            return None
+        return {
+            "outer": int(self.outer_node_wire_bytes[i]),
+            "y": int(self.tl_y.node_wire_bytes[i]),
+            "z": int(self.tl_z.node_wire_bytes[i]),
         }
 
 
@@ -313,6 +344,7 @@ class AsyncScheduler:
         finish_t = np.zeros((K, m))
         ages = np.zeros((K, m, m), dtype=np.int32)
         total_bytes = 0
+        node_wire = np.zeros(m, dtype=np.int64)  # per-sender egress
         tr = self.fabric.trace if trace else None
 
         # ---- re-entry catch-up: dense version-0 refs on lagged edges ------
@@ -327,6 +359,7 @@ class AsyncScheduler:
                     depart, nbytes, rng
                 )
                 total_bytes += nbytes
+                node_wire[i] += nbytes
                 if tr is not None:
                     tr.add_transfer(
                         TransferEvent(
@@ -387,6 +420,7 @@ class AsyncScheduler:
                         depart, nbytes, rng
                     )
                     total_bytes += nbytes
+                    node_wire[i] += nbytes
                     if tr is not None:
                         tr.add_transfer(
                             TransferEvent(
@@ -438,7 +472,7 @@ class AsyncScheduler:
                     end = max(end, float(landed.max()))
         return AsyncTimeline(
             ages=ages, mix_s=mix_t, finish_s=finish_t, end_s=end,
-            wire_bytes=total_bytes,
+            wire_bytes=total_bytes, node_wire_bytes=node_wire,
         )
 
     # ------------------------------------------------------------------
@@ -526,15 +560,16 @@ class AsyncScheduler:
         # barrier) — recorded on the RoundTimeline so every consumer reads
         # one accounting
         neigh = self._active_neighbors(active)
+        m = self.fabric.topo.m
         if np.isscalar(outer_node_bytes):
-            outer_wire = 2 * int(outer_node_bytes) * sum(
-                len(v) for v in neigh
-            )
+            per_node = np.full(m, int(outer_node_bytes), dtype=np.int64)
         else:
             per_node = np.asarray(outer_node_bytes, dtype=np.int64)
-            outer_wire = 2 * int(
-                sum(per_node[i] * len(v) for i, v in enumerate(neigh))
-            )
+        outer_node_wire = np.asarray(
+            [2 * per_node[i] * len(v) for i, v in enumerate(neigh)],
+            dtype=np.int64,
+        )
+        outer_wire = int(outer_node_wire.sum())
         self.barrier_phase(
             outer_node_bytes, round_idx, compute_s=compute_s_step,
             label="x", active=active,
@@ -558,6 +593,7 @@ class AsyncScheduler:
         return RoundTimeline(
             tl_y=tl_y, tl_z=tl_z, t_start=t_start, x_end=x_end, t_end=t_end,
             outer_wire_bytes=outer_wire,
+            outer_node_wire_bytes=outer_node_wire,
         )
 
     def replay_rounds(

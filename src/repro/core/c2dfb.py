@@ -38,6 +38,7 @@ from repro.core.types import (
     Pytree,
     consensus_error,
     donate_copy,
+    node_consensus_dist,
     node_mean,
     tree_count,
     tree_sq_norm,
@@ -165,6 +166,9 @@ def c2dfb_round_core(
         "y_compress_err": my["compress_err"],
         "z_consensus_err": mz["consensus_err"],
         "measured_bytes": my["msg_bytes"] + mz["msg_bytes"] + outer_bytes,
+        # per-node consensus distance (m,): sum of squares == x_consensus_err;
+        # the obs layer's schema-v2 node rows report it, round records skip it
+        "x_node_dist": node_consensus_dist(x_new),
     }
     return new_state, metrics
 
@@ -399,11 +403,19 @@ def run(
             '"sync"/"bounded"/"full" (synchronous gossip has zero ages, so '
             "damping would be a silent no-op)"
         )
+    from repro.obs import as_obs, scan_heartbeat
+
+    obs = as_obs(obs)
     state = init_state(problem, cfg, x0, y0)
 
     def body(st, inputs):
         k, W = inputs
+        t_idx = st.t  # pre-update round index (starts at 0)
         st, metrics = c2dfb_round(st, k, problem, topo, cfg, W=W)
+        # mid-scan liveness for the SYNC scan too (Obs(heartbeat_every=N)):
+        # a host-callback effect — no extra jit traces, math untouched
+        # (asserted in tests/test_obs.py)
+        scan_heartbeat(obs, "sync", t_idx, metrics)
         return st, metrics
 
     keys = jax.random.split(key, T)
@@ -424,19 +436,20 @@ def run(
         Ws = jnp.broadcast_to(
             jnp.asarray(topo.W, jnp.float32), (T,) + topo.W.shape
         )
-    from repro.obs import as_obs
+    from repro.async_gossip.engine import record_trace
 
-    obs = as_obs(obs)
+    def scanned(s):
+        record_trace("sync_scan")  # one bump per (re)trace of the scan
+        return jax.lax.scan(body, s, (keys, Ws))
+
     if jit:
         # donate the state carry so XLA reuses its buffers for the output
         # state in place; init_state aliases x0/y0, which callers reuse
         # across runs, so the carry gets fresh buffers first
         state = donate_copy(state)
-        scan = jax.jit(
-            lambda s: jax.lax.scan(body, s, (keys, Ws)), donate_argnums=0
-        )
+        scan = jax.jit(scanned, donate_argnums=0)
     else:
-        scan = lambda s: jax.lax.scan(body, s, (keys, Ws))
+        scan = scanned
     if obs is not None:
         with obs.span("scan", engine="sync"):
             state, metrics = scan(state)
@@ -468,4 +481,10 @@ def run(
         host = {k: np.asarray(v) for k, v in metrics.items()}
         for t in range(T):
             obs.round("sync", t, {k: v[t] for k, v in host.items()})
+            # schema-v2 node rows: the sync scan knows per-node consensus
+            # distance; byte/staleness signals stay None (the barrier path
+            # accounts bytes fleet-wide, and all ages are zero)
+            x_nd = host["x_node_dist"][t]
+            for i in range(x_nd.shape[0]):
+                obs.node("sync", t, i, {"x_dist": x_nd[i]})
     return state, metrics

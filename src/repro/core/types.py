@@ -72,6 +72,21 @@ def consensus_error(a: Pytree):
     return tree_sq_norm(jax.tree.map(lambda x, b: x - b[None], a, bar))
 
 
+def node_consensus_dist(a: Pytree) -> jax.Array:
+    """Per-node consensus distance ``d_i = || x_i - x_bar ||`` as an (m,)
+    vector — `consensus_error` is ``sum_i d_i**2``.  This is what the
+    schema-v2 per-node observability rows report."""
+    bar = node_mean(a)
+    sq = jax.tree.map(
+        lambda x, b: jnp.sum(
+            (x - b[None]).reshape(x.shape[0], -1) ** 2, axis=1
+        ),
+        a,
+        bar,
+    )
+    return jnp.sqrt(sum(jax.tree.leaves(sq)))
+
+
 def tree_count(a: Pytree) -> int:
     """Number of scalar entries per *single node* (node axis excluded)."""
     leaves = jax.tree.leaves(a)

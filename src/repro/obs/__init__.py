@@ -5,11 +5,19 @@ staleness actually experienced, wall-clock to target accuracy — and this
 package is the single instrumentation layer every execution path feeds:
 
 * ``sink``     — `MetricsSink` protocol + `MemorySink` / `JsonlSink`
-  (one streamed JSON line per round) / `MultiSink`;
+  (one streamed JSON line per round) / `SocketSink` (the same lines
+  over TCP / Unix socket to a live dashboard, non-blocking with
+  drop-and-count backpressure) / `MultiSink`, plus the live-safe
+  readers `read_jsonl` (``.truncated`` flag) and `follow_jsonl`;
 * ``records``  — THE per-round record schema (`round_record`,
   `parity_view`): consensus/hypergradient errors, node+wire bytes by
   stream, staleness max/mean/hist, simulated and host seconds, jit
-  trace counts;
+  trace counts — and, schema v2, per-NODE round rows (`node_record`,
+  ``kind="node"``) emitted alongside the fleet aggregates;
+* ``watch``    — ``python -m repro.obs.watch``: terminal dashboard
+  attached to a SocketSink (``--listen``) or a tailed JSONL file,
+  rendering errors / bytes / staleness / heartbeats / node tables
+  while the run is still going;
 * ``core``     — `Obs`, the handle every engine takes as ``obs=``
   (`c2dfb.run`, `run_async` eager and compiled, `run_baseline_async`,
   `transport.run_c2dfb_transport`), with host-span recording and the
@@ -26,10 +34,13 @@ from repro.obs.core import Obs, as_obs, scan_heartbeat
 from repro.obs.records import (
     ENGINES,
     METRIC_FIELDS,
+    NODE_FIELDS,
     PARITY_EXCLUDED,
     SCHEMA_VERSION,
     gate_record,
     heartbeat_record,
+    node_record,
+    node_rows,
     parity_rows,
     parity_view,
     round_record,
@@ -40,6 +51,9 @@ from repro.obs.sink import (
     MemorySink,
     MetricsSink,
     MultiSink,
+    SocketSink,
+    follow_jsonl,
+    iter_jsonl,
     json_safe,
     read_jsonl,
 )
@@ -47,12 +61,14 @@ from repro.obs.timeline import (
     HostSpan,
     HostSpans,
     merged_chrome_trace,
+    node_lane_events,
     save_merged_trace,
 )
 
 __all__ = [
     "ENGINES",
     "METRIC_FIELDS",
+    "NODE_FIELDS",
     "PARITY_EXCLUDED",
     "SCHEMA_VERSION",
     "HostSpan",
@@ -62,11 +78,17 @@ __all__ = [
     "MetricsSink",
     "MultiSink",
     "Obs",
+    "SocketSink",
     "as_obs",
+    "follow_jsonl",
     "gate_record",
     "heartbeat_record",
+    "iter_jsonl",
     "json_safe",
     "merged_chrome_trace",
+    "node_lane_events",
+    "node_record",
+    "node_rows",
     "parity_rows",
     "parity_view",
     "read_jsonl",

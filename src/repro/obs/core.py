@@ -27,6 +27,7 @@ import jax
 
 from repro.obs.records import (
     heartbeat_record,
+    node_record,
     round_record,
     timing_record,
 )
@@ -61,6 +62,13 @@ class Obs:
 
     def round(self, engine: str, round_idx: int, row: dict, **kw: Any) -> None:
         self.emit(round_record(engine, self.run, round_idx, row, **kw))
+
+    def node(
+        self, engine: str, round_idx: int, node: int, row: dict, **kw: Any
+    ) -> None:
+        """One node's view of the round (schema-v2 ``kind="node"`` row),
+        emitted alongside — never instead of — the fleet round record."""
+        self.emit(node_record(engine, self.run, round_idx, node, row, **kw))
 
     def heartbeat(self, engine: str, round_idx: int, fields: dict) -> None:
         self.emit(heartbeat_record(engine, self.run, round_idx, fields))

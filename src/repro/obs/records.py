@@ -9,12 +9,18 @@ transport run can be compared field-for-field.
 Record kinds:
 
 ``round``      one outer round, the schema below (one line per round);
-``heartbeat``  a mid-scan liveness sample from the compiled runtime's
-               host callback (subset of the round fields — whatever is
-               computable inside the scan);
+``node``       one NODE's view of one outer round (schema v2): per-node
+               consensus distance, egress bytes, staleness — emitted
+               ALONGSIDE the fleet ``round`` row, never instead of it,
+               so every v1 consumer keeps working unchanged;
+``heartbeat``  a mid-scan liveness sample from a scan-resident host
+               callback (subset of the round fields — whatever is
+               computable inside the scan; both the compiled async
+               runtime and the synchronous `c2dfb.run` scan emit these);
 ``timing``     a host wall-clock span (compile, scan, bench repetition);
 ``gate``       a benchmark summary row the regression gate
-               (`repro.obs.report`) checks against ``BENCH_async.json``.
+               (`repro.obs.report`) checks against ``BENCH_async.json``
+               / ``BENCH_transport.json``.
 
 Round-record fields (absent signals are None, never missing keys):
 
@@ -41,11 +47,36 @@ Round-record fields (absent signals are None, never missing keys):
 | wall_seconds       | float       | HOST wall clock (machine-dependent)  |
 | trace_counts       | dict        | per-body jit trace counters snapshot |
 
+Node-record fields (schema v2; absent signals are None, never missing):
+
+| field              | type        | meaning                              |
+|--------------------|-------------|--------------------------------------|
+| schema / kind / run / engine / round    as the round record (kind="node") |
+| node               | int         | node index i                         |
+| x_dist             | float       | ||x_i - x_bar|| (consensus distance) |
+| node_bytes         | int         | payload bytes i emitted, counted     |
+|                    |             | ONCE per message (codec truth;       |
+|                    |             | executed backends)                   |
+| wire_bytes         | int         | i's wire egress, counted once per    |
+|                    |             | directed edge (degree-weighted; the  |
+|                    |             | fleet row's wire_bytes is the sum    |
+|                    |             | over nodes)                          |
+| bytes_by_stream    | dict        | {outer, y, z} split of node_bytes    |
+|                    |             | when present, else of wire_bytes     |
+| staleness_max      | int         | max age over i's incident edges      |
+| staleness_mean     | float       | mean age over i's incident edges     |
+
 Parity contract: `parity_view` drops the machine- and path-dependent
 fields (`PARITY_EXCLUDED`) so eager / compiled / transport runs on the
 same seed can be asserted row-for-row equal on everything that is a
 claim about the ALGORITHM (bytes, staleness, errors, simulated time)
 rather than about the host that ran it.
+
+SCHEMA VERSIONS.  v2 (this module) adds the ``node`` record kind and
+stamps every record ``schema: 2``; the round/heartbeat/timing/gate
+record KEYS are unchanged from v1, and `parity_rows` defaults to
+``kind="round"`` — so every PR 6 parity view / diff over fleet rows
+produces identical results on v2 streams (asserted in tests/test_obs).
 """
 
 from __future__ import annotations
@@ -54,7 +85,7 @@ from typing import Any
 
 import numpy as np
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 #: engine labels the shipped paths emit (callers may add their own)
 ENGINES = (
@@ -81,6 +112,15 @@ METRIC_FIELDS = (
     "sim_seconds",
 )
 
+#: scalar metric fields lifted verbatim from a per-node row (schema v2)
+NODE_FIELDS = (
+    "x_dist",
+    "node_bytes",
+    "wire_bytes",
+    "staleness_max",
+    "staleness_mean",
+)
+
 #: fields that are about the HOST / the producing path, not the
 #: algorithm — excluded from cross-engine parity comparison
 PARITY_EXCLUDED = ("run", "engine", "wall_seconds", "trace_counts")
@@ -93,6 +133,17 @@ def _scalar(v: Any) -> Any:
     if v.dtype.kind in "iub":
         return int(v)
     return float(v)
+
+
+def _scalar_or_list(v: Any) -> Any:
+    """Heartbeat fields may be per-node vectors (e.g. ``x_node_dist``);
+    keep scalars scalar and flatten anything else to a plain list."""
+    if v is None:
+        return None
+    arr = np.asarray(v)
+    if arr.ndim == 0:
+        return _scalar(arr)
+    return [_scalar(x) for x in arr.reshape(-1)]
 
 
 def round_record(
@@ -132,6 +183,49 @@ def round_record(
     return rec
 
 
+def node_record(
+    engine: str,
+    run: str,
+    round_idx: int,
+    node: int,
+    row: dict,
+    *,
+    bytes_by_stream: dict | None = None,
+) -> dict:
+    """One node's view of one outer round (schema v2, ``kind="node"``).
+    Emitted ALONGSIDE the fleet round record — v1 consumers filtering on
+    ``kind="round"`` never see these rows."""
+    rec = {
+        "schema": SCHEMA_VERSION,
+        "kind": "node",
+        "run": run,
+        "engine": engine,
+        "round": int(round_idx),
+        "node": int(node),
+    }
+    for k in NODE_FIELDS:
+        rec[k] = _scalar(row.get(k))
+    rec["bytes_by_stream"] = (
+        {k: int(v) for k, v in bytes_by_stream.items()}
+        if bytes_by_stream is not None else None
+    )
+    return rec
+
+
+def node_rows(
+    records: list[dict], engine: str | None = None, round_idx: int | None = None
+) -> list[dict]:
+    """The ``kind="node"`` records, optionally filtered by engine / round,
+    ordered (round, node) — the node-resolved companion to `parity_rows`."""
+    rows = [
+        r for r in records
+        if r.get("kind") == "node"
+        and (engine is None or r.get("engine") == engine)
+        and (round_idx is None or r.get("round") == round_idx)
+    ]
+    return sorted(rows, key=lambda r: (r.get("round", 0), r.get("node", 0)))
+
+
 def heartbeat_record(
     engine: str, run: str, round_idx: int, fields: dict
 ) -> dict:
@@ -143,7 +237,7 @@ def heartbeat_record(
         "run": run,
         "engine": engine,
         "round": int(round_idx),
-        **{k: _scalar(v) for k, v in fields.items()},
+        **{k: _scalar_or_list(v) for k, v in fields.items()},
     }
 
 
@@ -172,19 +266,24 @@ def gate_record(
     policy: str,
     *,
     wire_bytes: int,
-    trace_counts: dict,
+    trace_counts: dict | None = None,
     warm_wall_s: float | None,
     config: dict,
 ) -> dict:
     """A benchmark gate row — the unit `repro.obs.report --gate` compares
-    against the committed ``BENCH_async.json`` baseline."""
+    against the committed ``BENCH_async.json`` / ``BENCH_transport.json``
+    baseline.  ``trace_counts`` is None for backends without a jit trace
+    meter (the device transport's eager loop) — the gate then only pins
+    bytes and wall clock."""
     return {
         "schema": SCHEMA_VERSION,
         "kind": "gate",
         "run": run,
         "policy": policy,
         "wire_bytes": int(wire_bytes),
-        "trace_counts": dict(trace_counts),
+        "trace_counts": (
+            dict(trace_counts) if trace_counts is not None else None
+        ),
         "warm_wall_s": float(warm_wall_s) if warm_wall_s is not None else None,
         "config": dict(config),
     }

@@ -3,7 +3,10 @@
 Three modes over the one record schema (`repro.obs.records`):
 
 * ``report run.jsonl``                 per-engine summary: rounds, final
-  errors, byte totals by stream, staleness, wall/sim time, heartbeats;
+  errors, byte totals by stream, staleness, wall/sim time, heartbeats —
+  plus a per-NODE table (schema-v2 ``kind="node"`` rows: each node's
+  wire egress, final consensus distance, max age) when the run emitted
+  node-resolved records;
 * ``report a.jsonl --diff b.jsonl``    field-for-field diff of the two
   runs' parity views (`parity_rows`) — machine-dependent fields excluded
   — plus wall-clock deltas reported informationally;
@@ -15,9 +18,12 @@ Three modes over the one record schema (`repro.obs.records`):
   the perf smoke so a byte or retrace regression fails the job.
 
 The gate compares ``kind="gate"`` records (emitted by
-``benchmarks/bench_async.py`` at one FIXED smoke-scale config) against
-the baseline file's ``"gate"`` block, so a fresh CI smoke run and the
-committed full-suite baseline are byte-comparable by construction.
+``benchmarks/bench_async.py`` / ``benchmarks/bench_transport.py`` at one
+FIXED smoke-scale config) against the baseline file's ``"gate"`` block,
+so a fresh CI smoke run and the committed baseline are byte-comparable
+by construction.  Gate rows without trace counts (the device transport's
+eager loop has no jit trace meter) pin bytes and wall clock only — both
+sides record ``trace_counts: null`` and the exact comparison still holds.
 """
 
 from __future__ import annotations
@@ -91,6 +97,33 @@ def summarize(records: list[dict]) -> str:
                 "  trace_counts         "
                 + "  ".join(f"{k}={v}" for k, v in sorted(tc.items()))
             )
+        nrows = [
+            r for r in records
+            if r.get("kind") == "node" and r.get("engine") == eng
+        ]
+        if nrows:
+            per: dict[int, dict] = {}
+            for r in sorted(nrows, key=lambda r: r.get("round", 0)):
+                d = per.setdefault(
+                    r.get("node", -1),
+                    {"wire": 0, "x_dist": None, "smax": 0},
+                )
+                if r.get("wire_bytes") is not None:
+                    d["wire"] += int(r["wire_bytes"])
+                if r.get("x_dist") is not None:
+                    d["x_dist"] = r["x_dist"]  # last round wins
+                if r.get("staleness_max") is not None:
+                    d["smax"] = max(d["smax"], int(r["staleness_max"]))
+            out.append(
+                f"  nodes ({len(per)})"
+                "             wire_bytes   final x_dist   max_age"
+            )
+            for i in sorted(per):
+                d = per[i]
+                out.append(
+                    f"    node {i:<4}         "
+                    f"{d['wire']:<12} {_fmt(d['x_dist']):<14} {d['smax']}"
+                )
     hb = [r for r in records if r.get("kind") == "heartbeat"]
     if hb:
         out.append(f"heartbeats: {len(hb)}")
@@ -175,14 +208,16 @@ def gate(
     block = baseline.get("gate")
     if not isinstance(block, dict) or "policies" not in block:
         return "[FAIL] baseline has no 'gate' block — regenerate it with "\
-            "benchmarks/bench_async.py", False
+            "benchmarks/bench_async.py or benchmarks/bench_transport.py", \
+            False
     cand = {
         r["policy"]: r for r in records if r.get("kind") == "gate"
     }
     if not cand:
         return "[FAIL] run has no gate records — produce the JSONL with "\
-            "benchmarks/bench_async.py (any flags; the gate rows are "\
-            "always emitted at the fixed gate config)", False
+            "benchmarks/bench_async.py or benchmarks/bench_transport.py "\
+            "(any flags; the gate rows are always emitted at the fixed "\
+            "gate config)", False
     base_cfg = block.get("config", {})
     for policy, base in sorted(block["policies"].items()):
         r = cand.get(policy)

@@ -71,17 +71,74 @@ def _meta(pid: Any, name: str) -> dict:
     }
 
 
+def node_lane_events(
+    records: list[dict], pid: str = "nodes"
+) -> list[dict]:
+    """Schema-v2 ``kind="node"`` records as per-node Perfetto COUNTER
+    lanes: one tid per (engine, node), counter series for the node's
+    consensus distance and cumulative wire egress, sampled at the fleet
+    round's cumulative simulated seconds (falling back to the round
+    index when the run carries no sim clock).  Merge these into the
+    Chrome trace via ``merged_chrome_trace(..., node_records=records)``
+    and the per-node lanes land right under the fabric's simulated
+    transfer lanes."""
+    rounds: dict[tuple, dict] = {}
+    for r in records:
+        if r.get("kind") == "round":
+            rounds[(r.get("engine"), r.get("round"))] = r
+    # cumulative sim clock per engine, in round order
+    clock: dict[tuple, float] = {}
+    for eng in {e for e, _ in rounds}:
+        t_acc = 0.0
+        for key in sorted(
+            (k for k in rounds if k[0] == eng), key=lambda k: k[1]
+        ):
+            sim = rounds[key].get("sim_seconds")
+            t_acc += float(sim) if sim is not None else 1.0
+            clock[key] = t_acc
+    out: list[dict] = []
+    egress: dict[tuple, int] = {}
+    seen_engines = set()
+    for r in records:
+        if r.get("kind") != "node":
+            continue
+        eng, t, i = r.get("engine"), r.get("round"), r.get("node")
+        seen_engines.add(eng)
+        ts = clock.get((eng, t), float(t or 0) + 1.0) * 1e6
+        tid = f"{eng}/node{i}"
+        args: dict = {}
+        if r.get("x_dist") is not None:
+            args["x_dist"] = r["x_dist"]
+        if r.get("wire_bytes") is not None:
+            key = (eng, i)
+            egress[key] = egress.get(key, 0) + int(r["wire_bytes"])
+            args["wire_bytes_cum"] = egress[key]
+        if args:
+            out.append(
+                {
+                    "name": tid, "ph": "C", "pid": pid, "tid": tid,
+                    "ts": ts, "args": args,
+                }
+            )
+    if out:
+        out.append(_meta(pid, f"{pid} (per-node, simulated seconds)"))
+    return out
+
+
 def merged_chrome_trace(
     trace=None,
     spans: HostSpans | None = None,
     sim_prefix: str = "sim:",
     host_pid: str = "host",
+    node_records: list[dict] | None = None,
 ) -> list[dict]:
     """One Chrome/Perfetto event list from a `NetTrace` (simulated lanes,
     pids namespaced under ``sim_prefix``) and a `HostSpans` recorder
     (wall lanes under ``host_pid``).  Either side may be None.  The two
     clocks are independent (both start at their own zero); the process
-    names make which-is-which explicit in the UI."""
+    names make which-is-which explicit in the UI.  ``node_records``
+    (a record list holding schema-v2 ``kind="node"`` rows) adds per-node
+    counter lanes (`node_lane_events`) on the simulated clock."""
     out: list[dict] = []
     if trace is not None:
         events = (
@@ -108,6 +165,8 @@ def merged_chrome_trace(
                 }
             )
         out.append(_meta(host_pid, f"{host_pid} (wall seconds)"))
+    if node_records:
+        out.extend(node_lane_events(node_records))
     return out
 
 

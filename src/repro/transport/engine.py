@@ -29,6 +29,7 @@ from repro.core.topology import Topology
 from repro.core.types import (
     Pytree,
     consensus_error,
+    node_consensus_dist,
     node_mean,
     tree_count,
     tree_sq_norm,
@@ -175,6 +176,7 @@ def run_c2dfb_transport(
             "wire_bytes": int(rep["wire_bytes"]),
             "sim_seconds": float(rep["sim_seconds"]),
             "wall_seconds": wall,
+            "x_node_dist": np.asarray(node_consensus_dist(x)),
         }
         rows.append(row)
         if obs is not None:
@@ -206,6 +208,40 @@ def run_c2dfb_transport(
                 },
                 wall_seconds=wall,
             )
+            # schema-v2 node rows with EXECUTED codec truth per node:
+            # node_bytes counts each message once at its sender (the
+            # meter's accounting), the by-stream split sums to it, and
+            # deg(i) * node_bytes[i] is node i's wire share — node wire
+            # shares sum to the fleet row's wire_bytes exactly (pinned
+            # in tests/test_transport.py)
+            def _node_stream(prefix, i):
+                return int(
+                    sum(
+                        nb[i]
+                        for label, nb in rep["node_bytes"].items()
+                        if label.startswith(prefix)
+                    )
+                )
+
+            x_nd = row["x_node_dist"]
+            for i in range(m):
+                split = {
+                    "outer": _node_stream("out/", i),
+                    "y": _node_stream("y/", i),
+                    "z": _node_stream("z/", i),
+                }
+                nbytes = sum(split.values())
+                obs.node(
+                    "transport-device", t, i,
+                    {
+                        "x_dist": x_nd[i],
+                        "node_bytes": nbytes,
+                        "wire_bytes": deg[i] * nbytes,
+                        "staleness_max": 0,
+                        "staleness_mean": 0.0,
+                    },
+                    bytes_by_stream=split,
+                )
         if return_payloads:
             payload_log.append(
                 {

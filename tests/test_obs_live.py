@@ -1,0 +1,464 @@
+"""Live per-node telemetry acceptance suite (ISSUE 7).
+
+* `SocketSink`: line-delimited JSON over a socket, byte-identical to the
+  JSONL wire format; never blocks or raises into the run — a dead reader
+  or a full buffer drops the record and bumps ``.dropped``;
+* crash-safe readers: `read_jsonl` returns the clean prefix of a file
+  whose FINAL line is partially written (``.truncated = True``),
+  mid-file corruption still raises; `follow_jsonl` tails a growing file
+  across appends without ever parsing a half-line;
+* schema v2: ``kind="node"`` rows ride ALONGSIDE the fleet round rows —
+  v1 consumers (`parity_rows`, `report --diff`) are provably blind to
+  them; per-node byte accounting agrees engine-for-engine (eager vs
+  compiled read the same scheduler timeline);
+* the sync engine's scan heartbeat: emitted from inside the jitted
+  donated-carry `lax.scan` via host callback — no extra jit traces, and
+  the trajectory is BIT-identical with the heartbeat on or off;
+* the watch dashboard: `WatchState.ingest` + pure-string `render`
+  (injected clock, no terminal), the socket listener end-to-end against
+  a real `SocketSink`, and the ``--once`` CLI.
+"""
+
+import json
+import socket
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.c2dfb import C2DFBConfig, run
+from repro.core.topology import ring
+from repro.data.bilevel_tasks import coefficient_tuning_task
+from repro.net import make_fabric
+from repro.obs import (
+    MemorySink,
+    Obs,
+    SocketSink,
+    follow_jsonl,
+    iter_jsonl,
+    merged_chrome_trace,
+    node_record,
+    node_rows,
+    parity_rows,
+    read_jsonl,
+    round_record,
+)
+from repro.obs.watch import WatchState, listen_records, watch
+from repro.obs.watch import main as watch_main
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def bundle():
+    return coefficient_tuning_task(m=4, n=80, p=12, c=3, h=0.5, seed=0)
+
+
+def _cfg():
+    return C2DFBConfig(
+        K=3, compressor="topk", comp_ratio=0.3, gamma_in=0.3, eta_in=0.3
+    )
+
+
+# ---------------------------------------------------------------------------
+# SocketSink
+# ---------------------------------------------------------------------------
+
+
+def test_socket_sink_roundtrip_matches_jsonl_wire_format():
+    a, b = socket.socketpair()
+    recs = [
+        round_record("sync", "s", t, {"wire_bytes": 10 * (t + 1)})
+        for t in range(3)
+    ]
+    with b, SocketSink(sock=a) as sink:
+        for r in recs:
+            sink.emit(r)
+        b.settimeout(2.0)
+        data = b""
+        while data.count(b"\n") < 3:
+            data += b.recv(1 << 16)
+    lines = data.decode().strip().splitlines()
+    assert [json.loads(ln) for ln in lines] == recs
+    assert sink.dropped == 0
+
+
+def test_socket_sink_dead_reader_drops_and_counts():
+    a, b = socket.socketpair()
+    sink = SocketSink(sock=a)
+    b.close()
+    before = sink.dropped
+    for _ in range(5):  # EPIPE may take a send or two to surface
+        sink.emit(round_record("sync", "s", 0, {"wire_bytes": 1}))
+    assert sink.dropped > before
+    # dead sink: every further emit is a counted no-op, never an exception
+    d = sink.dropped
+    sink.emit(round_record("sync", "s", 1, {"wire_bytes": 2}))
+    assert sink.dropped == d + 1
+    sink.close()
+
+
+def test_socket_sink_full_buffer_drops_instead_of_blocking():
+    a, b = socket.socketpair()
+    with b, SocketSink(sock=a, max_buffer=8) as sink:
+        # every record line is larger than the whole buffer: emit must
+        # drop-and-count, not block on the (unread) peer
+        for t in range(4):
+            sink.emit(round_record("sync", "s", t, {"wire_bytes": 1}))
+        assert sink.dropped == 4
+
+
+def test_socket_sink_requires_exactly_one_endpoint():
+    with pytest.raises(ValueError, match="exactly one"):
+        SocketSink()
+    a, b = socket.socketpair()
+    with a, b, pytest.raises(ValueError, match="exactly one"):
+        SocketSink("127.0.0.1:1", sock=a)
+
+
+# ---------------------------------------------------------------------------
+# crash-safe file readers (S2)
+# ---------------------------------------------------------------------------
+
+
+def _lines(*recs):
+    return "".join(json.dumps(r) + "\n" for r in recs)
+
+
+def test_read_jsonl_tolerates_truncated_tail(tmp_path):
+    good = [{"kind": "round", "round": t} for t in range(2)]
+    p = tmp_path / "live.jsonl"
+    p.write_text(_lines(*good) + '{"kind": "round", "rou')  # mid-write
+    out = read_jsonl(str(p))
+    assert list(out) == good
+    assert out.truncated is True
+    # a clean file reports untruncated and compares equal to a plain list
+    p2 = tmp_path / "done.jsonl"
+    p2.write_text(_lines(*good))
+    out2 = read_jsonl(str(p2))
+    assert out2 == good and out2.truncated is False
+
+
+def test_read_jsonl_midfile_corruption_still_raises(tmp_path):
+    p = tmp_path / "corrupt.jsonl"
+    p.write_text('{"kind": "round"}\n{oops\n{"kind": "round"}\n')
+    with pytest.raises(json.JSONDecodeError):
+        read_jsonl(str(p))
+
+
+def test_iter_jsonl_stops_on_incomplete_raises_on_corrupt(tmp_path):
+    p = tmp_path / "tail.jsonl"
+    p.write_text(_lines({"a": 1}, {"a": 2}) + '{"a": 3')  # no newline
+    assert list(iter_jsonl(str(p))) == [{"a": 1}, {"a": 2}]
+    p2 = tmp_path / "bad.jsonl"
+    p2.write_text('{"a": 1}\n{oops}\n')  # complete but corrupt line
+    with pytest.raises(json.JSONDecodeError):
+        list(iter_jsonl(str(p2)))
+
+
+def test_follow_jsonl_tails_across_appends_and_half_lines(tmp_path):
+    p = tmp_path / "grow.jsonl"
+    first = {"kind": "round", "round": 0}
+    late = [{"kind": "round", "round": 1}, {"kind": "node", "node": 2}]
+
+    def writer():
+        with open(p, "w") as fh:
+            fh.write(json.dumps(first) + "\n")
+            fh.flush()
+            time.sleep(0.15)
+            half = json.dumps(late[0])
+            fh.write(half[:7])  # flush mid-record: must not parse yet
+            fh.flush()
+            time.sleep(0.15)
+            fh.write(half[7:] + "\n" + json.dumps(late[1]) + "\n")
+            fh.flush()
+
+    th = threading.Thread(target=writer)
+    th.start()
+    got = []
+    try:
+        for rec in follow_jsonl(
+            str(p), timeout_s=10.0, stop=lambda: len(got) >= 3
+        ):
+            got.append(rec)
+    finally:
+        th.join()
+    assert got == [first] + late
+
+
+# ---------------------------------------------------------------------------
+# schema v2: node rows alongside fleet rows, v1 views unchanged
+# ---------------------------------------------------------------------------
+
+
+def test_node_rows_invisible_to_v1_parity_and_diff(tmp_path, capsys):
+    from repro.obs.report import main as report_main
+
+    fleet = [
+        round_record(
+            "sync", "r", t,
+            {"wire_bytes": 100, "x_consensus_err": 1e-3, "sim_seconds": 0.5},
+        )
+        for t in range(2)
+    ]
+    nodes = [
+        node_record("sync", "r", t, i, {"x_dist": 0.1 * i, "wire_bytes": 25})
+        for t in range(2)
+        for i in range(4)
+    ]
+    # parity over the v2 stream (node rows interleaved) is IDENTICAL to
+    # parity over the v1 stream — node rows are a different kind
+    v2 = [r for t in range(2) for r in
+          [fleet[t]] + nodes[4 * t:4 * t + 4]]
+    assert parity_rows(v2) == parity_rows(fleet)
+    assert node_rows(v2) == nodes  # already (round, node) ordered
+    assert node_rows(v2, round_idx=1) == nodes[4:]
+    # report --diff between a run with node rows and one without: MATCH
+    a, b = tmp_path / "v1.jsonl", tmp_path / "v2.jsonl"
+    a.write_text(_lines(*fleet))
+    b.write_text(_lines(*v2))
+    assert report_main([str(a), "--diff", str(b)]) == 0
+    assert "parity: MATCH" in capsys.readouterr().out
+
+
+def test_node_record_schema_and_lane_events():
+    rec = node_record(
+        "async-eager", "r", 3, 2,
+        {"x_dist": np.float32(0.5), "node_bytes": np.int64(40),
+         "wire_bytes": 80, "staleness_max": 2, "staleness_mean": 0.5},
+        bytes_by_stream={"outer": 10, "y": 15, "z": 15},
+    )
+    assert rec["schema"] == 2 and rec["kind"] == "node"
+    assert rec["node"] == 2 and isinstance(rec["node"], int)
+    assert rec["x_dist"] == 0.5 and rec["node_bytes"] == 40
+    assert rec["bytes_by_stream"] == {"outer": 10, "y": 15, "z": 15}
+    # absent node metrics are explicit None (sync rows carry x_dist only)
+    sparse = node_record("sync", "r", 0, 0, {"x_dist": 0.1})
+    assert sparse["node_bytes"] is None and sparse["wire_bytes"] is None
+    # node rows become per-node Perfetto counter lanes on the sim clock
+    fleet = round_record("async-eager", "r", 3, {"sim_seconds": 2.0})
+    events = merged_chrome_trace(node_records=[fleet, rec])
+    lanes = [e for e in events if e.get("ph") == "C"]
+    assert lanes and lanes[0]["tid"] == "async-eager/node2"
+    assert lanes[0]["args"] == {"x_dist": 0.5, "wire_bytes_cum": 80}
+    assert lanes[0]["ts"] == pytest.approx(2.0 * 1e6)
+
+
+def test_node_accounting_parity_eager_vs_compiled(bundle):
+    """Eager and compiled async engines resolve the SAME per-node rows:
+    with the eager engine on analytic payload sizes (the compiled plan's
+    pricing, as in the fleet-row parity test) both read one scheduler
+    timeline, so per-node wire bytes, by-stream splits and staleness are
+    equal row-for-row (x_dist to fp parity)."""
+    from repro.async_gossip import run_async, run_async_compiled
+
+    topo = ring(4)
+    rows = {}
+    for name, runner, kw in (
+        ("eager", run_async, {"payload_bytes": "analytic"}),
+        ("compiled", run_async_compiled, {}),
+    ):
+        sink = MemorySink()
+        runner(
+            bundle.problem, topo, _cfg(), bundle.x0, bundle.y0, 3, KEY,
+            make_fabric(topo, profile="geo", straggler="lognormal",
+                        compute_s=0.01, seed=0),
+            policy="bounded", bound=1, obs=sink, **kw,
+        )
+        rows[name] = node_rows(sink.records)
+    assert len(rows["eager"]) == 3 * 4
+    for e, c in zip(rows["eager"], rows["compiled"]):
+        assert (e["round"], e["node"]) == (c["round"], c["node"])
+        for k in ("wire_bytes", "staleness_max", "staleness_mean",
+                  "bytes_by_stream"):
+            assert e[k] == c[k], (k, e, c)
+        assert np.isclose(e["x_dist"], c["x_dist"], rtol=1e-6)
+
+
+def test_sim_node_wire_shares_sum_to_fleet(bundle):
+    from repro.async_gossip import run_async
+
+    topo = ring(4)
+    sink = MemorySink()
+    run_async(
+        bundle.problem, topo, _cfg(), bundle.x0, bundle.y0, 3, KEY,
+        make_fabric(topo, profile="geo", straggler="lognormal",
+                    compute_s=0.01, seed=0),
+        policy="bounded", bound=1, obs=sink,
+    )
+    fleet = {r["round"]: r for r in sink.rows(kind="round")}
+    for t in range(3):
+        per_node = node_rows(sink.records, round_idx=t)
+        assert [r["node"] for r in per_node] == list(range(4))
+        assert (
+            sum(r["wire_bytes"] for r in per_node)
+            == fleet[t]["wire_bytes"]
+        )
+        for r in per_node:
+            assert sum(r["bytes_by_stream"].values()) == r["wire_bytes"]
+
+
+def test_sync_run_emits_node_rows_alongside_fleet(bundle):
+    sink = MemorySink()
+    run(
+        bundle.problem, ring(4), _cfg(), bundle.x0, bundle.y0, T=2,
+        key=KEY, obs=sink,
+    )
+    per_node = node_rows(sink.records)
+    assert len(per_node) == 2 * 4
+    # sync node rows resolve consensus distance only; sum of squares is
+    # the fleet row's consensus error
+    fleet = {r["round"]: r for r in sink.rows(kind="round")}
+    for t in range(2):
+        rows_t = node_rows(sink.records, round_idx=t)
+        assert all(r["engine"] == "sync" for r in rows_t)
+        assert sum(r["x_dist"] ** 2 for r in rows_t) == pytest.approx(
+            fleet[t]["x_consensus_err"], rel=1e-5
+        )
+
+
+# ---------------------------------------------------------------------------
+# sync scan heartbeat (S1): live, no retrace, bit-identical
+# ---------------------------------------------------------------------------
+
+
+def test_sync_scan_heartbeat_no_retrace_bit_identical(bundle):
+    from repro.async_gossip import reset_trace_counts, trace_counts
+
+    topo = ring(4)
+    kw = dict(key=KEY, T=5)
+    s_ref, m_ref = run(
+        bundle.problem, topo, _cfg(), bundle.x0, bundle.y0, **kw
+    )
+    obs = Obs(sink=MemorySink(), heartbeat_every=2, run="hb")
+    reset_trace_counts()
+    s_hb, m_hb = run(
+        bundle.problem, topo, _cfg(), bundle.x0, bundle.y0, obs=obs, **kw
+    )
+    # ONE trace of the jitted scan, however many heartbeats fired
+    assert trace_counts() == {"sync_scan": 1}
+    beats = obs.sink.rows(kind="heartbeat")
+    assert [b["round"] for b in beats] == [0, 2, 4]
+    assert all(b["engine"] == "sync" for b in beats)
+    # mid-scan samples carry real metric values, per-node vectors included
+    assert beats[-1]["x_consensus_err"] == pytest.approx(
+        float(np.asarray(m_ref["x_consensus_err"])[-1])
+    )
+    assert len(beats[-1]["x_node_dist"]) == 4
+    # the callback is an effect: the trajectory is BIT-identical
+    np.testing.assert_array_equal(np.asarray(s_ref.x), np.asarray(s_hb.x))
+    for k in m_ref:
+        np.testing.assert_array_equal(
+            np.asarray(m_ref[k]), np.asarray(m_hb[k]), err_msg=k
+        )
+
+
+# ---------------------------------------------------------------------------
+# watch dashboard
+# ---------------------------------------------------------------------------
+
+
+def _watch_records():
+    recs = []
+    for t in range(2):
+        recs.append(round_record(
+            "async-eager", "w", t,
+            {"wire_bytes": 1000, "x_consensus_err": 1e-3,
+             "hypergrad_norm": 0.5,
+             "staleness_hist": [3, 2, 1]},
+            bytes_by_stream={"outer": 400, "y": 300, "z": 300},
+        ))
+        for i in range(2):
+            recs.append(node_record(
+                "async-eager", "w", t, i,
+                {"x_dist": 0.1 * (i + 1), "wire_bytes": 500,
+                 "staleness_max": 2, "staleness_mean": 0.5},
+            ))
+    recs.append({"kind": "heartbeat", "run": "w", "engine": "async-eager",
+                 "round": 1, "x_consensus_err": 1e-3})
+    recs.append({"kind": "gate", "run": "w", "policy": "sim",
+                 "wire_bytes": 2000, "warm_wall_s": 0.5})
+    return recs
+
+
+def test_watch_state_render_is_pure_and_complete():
+    now = [100.0]
+    st = WatchState(clock=lambda: now[0])
+    for rec in _watch_records():
+        st.ingest(rec)
+    frame = st.render("unit")
+    assert "engine async-eager" in frame and "round 1" in frame
+    assert "x_consensus_err=0.001" in frame
+    assert "wire 2.0KB total" in frame and "outer=800B" in frame
+    assert "staleness hist" in frame and "max age 2" in frame
+    # node table: latest row per node, cumulative egress
+    assert "x_dist" in frame and "0.1" in frame and "1000B" in frame
+    assert "heartbeat r1 (0.0s ago)" in frame
+    assert "gate sim: wire=2000" in frame
+    # render is a pure state -> string function
+    assert frame == st.render("unit")
+    # liveness goes STALE once the heartbeat is old on the watch clock
+    now[0] += 60.0
+    assert "STALE" in st.render("unit")
+
+
+def test_watch_driver_over_socket_listener(tmp_path):
+    """End-to-end: a run's SocketSink connects to the dashboard's Unix
+    socket listener; the watcher ingests every record live."""
+    addr = str(tmp_path / "watch.sock")
+    recs = _watch_records()
+
+    def writer():
+        deadline = time.monotonic() + 10.0
+        import os
+
+        while not os.path.exists(addr):
+            assert time.monotonic() < deadline, "listener never bound"
+            time.sleep(0.01)
+        with SocketSink(addr) as sink:
+            for r in recs:
+                sink.emit(r)
+
+    th = threading.Thread(target=writer)
+    th.start()
+    got = []
+    try:
+        stream = listen_records(
+            addr, timeout_s=10.0, stop=lambda: len(got) >= len(recs)
+        )
+
+        def counted():
+            for r in stream:
+                got.append(r)
+                yield r
+
+        state = watch(counted(), source=addr, once=True, out=open(
+            tmp_path / "frame.txt", "w"
+        ))
+    finally:
+        th.join()
+    assert len(got) == len(recs)
+    assert state.engines["async-eager"].rounds == 2
+    assert state.gates and state.gates[0]["policy"] == "sim"
+    frame = (tmp_path / "frame.txt").read_text()
+    assert "engine async-eager" in frame
+
+
+def test_watch_cli_once_renders_node_table(tmp_path, capsys):
+    p = tmp_path / "run.jsonl"
+    p.write_text(_lines(*_watch_records()))
+    assert watch_main([str(p), "--once"]) == 0
+    out = capsys.readouterr().out
+    assert "engine async-eager" in out
+    assert "x_dist" in out  # node table header
+    assert "gate sim" in out
+
+
+def test_watch_cli_argument_validation(tmp_path, capsys):
+    with pytest.raises(SystemExit):
+        watch_main([])  # neither source
+    capsys.readouterr()
+    with pytest.raises(SystemExit):
+        watch_main([str(tmp_path / "x.jsonl"), "--listen", "127.0.0.1:1"])

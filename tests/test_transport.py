@@ -326,11 +326,33 @@ for topo, name in [(ring(m), "ring"), (star(m), "star")]:
         and r["wall_seconds"] > 0.0
         for t, r in enumerate(obs_rows)
     )
+    # schema-v2 node rows on the EXECUTED backend: sender-counted
+    # node_bytes with a by-stream split summing to it exactly, and
+    # degree-weighted node rows summing to the fleet row's wire_bytes
+    nrows = sink.rows(kind="node")
+    node_ok = len(nrows) == 3 * m
+    for t in range(3):
+        rows_t = sorted(
+            (r for r in nrows if r["round"] == t), key=lambda r: r["node"]
+        )
+        node_ok &= [r["node"] for r in rows_t] == list(range(m))
+        wire_sum = 0
+        for r in rows_t:
+            node_ok &= (
+                r["engine"] == "transport-device"
+                and set(r["bytes_by_stream"]) == {"outer", "y", "z"}
+                and sum(r["bytes_by_stream"].values()) == r["node_bytes"]
+                and r["wire_bytes"] == deg[r["node"]] * r["node_bytes"]
+                and r["x_dist"] >= 0.0
+            )
+            wire_sum += r["wire_bytes"]
+        node_ok &= wire_sum == int(mets["wire_bytes"][t])
     out[name] = {
         "dx": dx, "dy": dy, "ds": ds,
         "byte_parity": bool(byte_parity),
         "wire_ok": bool(wire_ok),
         "obs_ok": obs_ok,
+        "node_ok": bool(node_ok),
         "measured_equal": bool(np.array_equal(
             np.asarray(ref_mets["measured_bytes"]),
             np.asarray(mets["measured_bytes"]),
@@ -384,6 +406,7 @@ def test_device_transport_parity_and_bytes():
         assert r["byte_parity"], (name, r)
         assert r["wire_ok"], (name, r)
         assert r["obs_ok"], (name, r)
+        assert r["node_ok"], (name, r)
         assert r["measured_equal"], (name, r)
     assert out["exchange"]["exact"]
     assert out["exchange"]["node_bytes_ok"]
