@@ -33,12 +33,18 @@ the per-body jit-trace counts; the axis also reruns the compiled path at
 2T with fresh caches and HARD-asserts the trace count is constant in T
 (one compile, not O(T)).
 
-Compiled-axis invocations write ``BENCH_async.json`` (``--out`` to
+Compiled-axis invocations also run the realizability axis (ISSUE 8):
+the bounded policy under each scheduler ``version_rule`` — idealized
+``common``, closed-form ``deterministic`` (must add zero traffic and
+zero sim time), and ``acked`` (explicit sequence-number acks priced
+into ``wire_bytes``) — and write ``BENCH_async.json`` (``--out`` to
 redirect) — wall-clock, speedups, trace counts, final consensus errors,
 and a ``"gate"`` block: per-policy wire bytes / trace counts /
 warm wall-clock measured at ONE fixed smoke-scale config (`run_gate`)
 regardless of flags, so the committed full-run baseline and a fresh CI
-smoke run are byte-comparable.  ``--jsonl PATH`` streams every timing
+smoke run are byte-comparable.  The gate rows include the realizable
+rules (``bounded1_det`` with an eager<->compiled parity assert,
+``bounded1_acked`` with an exact ack-byte-share check).  ``--jsonl PATH`` streams every timing
 and gate row through `repro.obs` (then
 ``python -m repro.obs.report PATH --gate BENCH_async.json`` is the
 regression gate CI fails on); ``--trace-out`` adds the merged Perfetto
@@ -198,7 +204,8 @@ def run_suite(fast: bool = True, smoke: bool = False, adaptive: bool = False):
 
 
 def _timed_async_run(engine, bundle, topo, cfg, T, fabric_kw, policy, bound,
-                     fn_cache, obs=None, label=None, trace=None):
+                     fn_cache, obs=None, label=None, trace=None,
+                     version_rule="common", payload_bytes=None):
     """One engine invocation on a fresh (identically seeded) fabric:
     returns (wall seconds, per-body jit-trace delta, final metrics).
     Passing the same ``fn_cache`` across calls reuses the jitted
@@ -217,10 +224,15 @@ def _timed_async_run(engine, bundle, topo, cfg, T, fabric_kw, policy, bound,
         # the engines get the same handle: their per-round records and
         # replay/scan spans land in the bench JSONL and on the merged
         # timeline next to time_fn's measurement rows
+        kw = dict(
+            policy=policy, bound=bound, version_rule=version_rule,
+            fn_cache=fn_cache, obs=obs,
+        )
+        if payload_bytes is not None and engine == "eager":
+            kw["payload_bytes"] = payload_bytes  # compiled is always analytic
         _, mets = runner(
             bundle.problem, topo, cfg, bundle.x0, bundle.y0, T,
-            jax.random.PRNGKey(0), fabric, policy=policy, bound=bound,
-            fn_cache=fn_cache, obs=obs,
+            jax.random.PRNGKey(0), fabric, **kw,
         )
         out["mets"] = mets
         return mets.get("y_consensus_err")
@@ -320,8 +332,83 @@ def run_compiled_axis(smoke: bool = False, obs=None) -> dict:
     return axis
 
 
+def run_realizability_axis(smoke: bool = False, obs=None) -> dict:
+    """The ISSUE-8 realizability axis: the bounded policy under each
+    `VERSION_RULES` entry on the geo profile — what exact realizability
+    costs.  ``deterministic`` reuses the common rule's gated schedule
+    (same sim seconds, same bytes — only the mixed versions move);
+    ``acked`` keeps common freshness but pays for it on the wire: the
+    rows report the ack byte share and the sim-second slowdown of the
+    ack-gated waits."""
+    from repro.async_gossip import VERSION_RULES
+
+    T = 3 if smoke else 8
+    m, K, bundle, topo = _task(smoke, comm_bound=True)
+    cfg = C2DFBConfig(
+        lam=10.0, eta_out=0.3, gamma_out=0.5, eta_in=0.3, gamma_in=0.3,
+        K=K, compressor="topk", comp_ratio=0.5,
+    )
+    axis = {"T": T, "profile": "geo_straggler", "policy": "bounded1",
+            "rows": []}
+    base = None
+    for rule in VERSION_RULES:
+        _, _, err, mets = _timed_async_run(
+            "eager", bundle, topo, cfg, T, GEO_KW, "bounded", 1, {},
+            obs=obs, label=f"realizability/{rule}", version_rule=rule,
+        )
+        row = {
+            "version_rule": rule,
+            "simulated_seconds": float(
+                np.asarray(mets["sim_seconds"]).sum()
+            ),
+            "wire_bytes": int(np.asarray(mets["wire_bytes"]).sum()),
+            "staleness_max": int(np.asarray(mets["staleness_max"]).max()),
+            "staleness_mean": float(
+                np.asarray(mets["staleness_mean"]).mean()
+            ),
+            "final_consensus_err": float(err[-1]),
+        }
+        if rule == "common":
+            base = row
+        row["extra_wire_bytes"] = row["wire_bytes"] - base["wire_bytes"]
+        row["sim_slowdown"] = (
+            row["simulated_seconds"] / base["simulated_seconds"]
+        )
+        emit(
+            f"async_rules/geo_straggler/{rule}",
+            row["simulated_seconds"] * 1e6 / T,
+            f"T={T};wire_bytes={row['wire_bytes']};"
+            f"extra_wire_bytes={row['extra_wire_bytes']};"
+            f"sim_slowdown={row['sim_slowdown']:.3f};"
+            f"staleness_max={row['staleness_max']};"
+            f"staleness_mean={row['staleness_mean']:.2f}",
+        )
+        axis["rows"].append(row)
+    # the axis's own invariants, hard-asserted so a regression fails the
+    # bench, not just a reader's eyebrow test:
+    by_rule = {r["version_rule"]: r for r in axis["rows"]}
+    det, acked = by_rule["deterministic"], by_rule["acked"]
+    if det["wire_bytes"] != base["wire_bytes"]:
+        raise SystemExit("deterministic rule must add no traffic")
+    if det["simulated_seconds"] != base["simulated_seconds"]:
+        raise SystemExit("deterministic rule must reuse the gated waits")
+    if acked["extra_wire_bytes"] <= 0:
+        raise SystemExit("acked rule must price its acks into wire_bytes")
+    return axis
+
+
 #: the gate's outer-round count — part of the FIXED gate config below
 GATE_T = 12
+
+#: the gate rows: the three policies under the idealized common rule plus
+#: the ISSUE-8 realizable rules on the bounded policy — ALL at the same
+#: fixed config, so baseline/candidate rows stay exactly comparable
+GATE_ROWS = [
+    (label, mode, bound, "common") for label, mode, bound, _ in POLICIES
+] + [
+    ("bounded1_det", "bounded", 1, "deterministic"),
+    ("bounded1_acked", "bounded", 1, "acked"),
+]
 
 
 def run_gate(obs=None, merged_trace_path: str | None = None) -> dict:
@@ -356,24 +443,51 @@ def run_gate(obs=None, merged_trace_path: str | None = None) -> dict:
     o = as_obs(obs)
     block: dict = {"config": config, "policies": {}}
     merge_trace = None
-    for label, mode, bound, _ in POLICIES:
+    for label, mode, bound, rule in GATE_ROWS:
         cache = {}
         tr = (
             NetTrace()
             if merged_trace_path is not None and label == "bounded1"
             else None
         )
-        _, traces_cold, _, mets = _timed_async_run(
+        _, traces_cold, err_c, mets = _timed_async_run(
             "compiled", bundle, topo, cfg, T, GEO_KW, mode, bound, cache,
-            obs=o, label=f"gate/{label}/cold", trace=tr,
+            obs=o, label=f"gate/{label}/cold", trace=tr, version_rule=rule,
         )
         wall_warm, _, _, _ = _timed_async_run(
             "compiled", bundle, topo, cfg, T, GEO_KW, mode, bound, cache,
-            obs=o, label=f"gate/{label}/warm",
+            obs=o, label=f"gate/{label}/warm", version_rule=rule,
         )
         if tr is not None:
             merge_trace = tr
         wire = int(np.asarray(mets["wire_bytes"]).sum())
+        if rule == "deterministic":
+            # realizable-rule parity is part of the gate: the eager
+            # engine under the same rule must reproduce the compiled
+            # run's trajectory AND byte count exactly
+            _, _, err_e, mets_e = _timed_async_run(
+                "eager", bundle, topo, cfg, T, GEO_KW, mode, bound, {},
+                label=f"gate/{label}/eager_parity", version_rule=rule,
+                payload_bytes="analytic",
+            )
+            if not np.array_equal(err_c, err_e, equal_nan=True):
+                raise SystemExit(
+                    f"{label}: eager/compiled trajectories diverged under "
+                    "the deterministic rule"
+                )
+            if int(np.asarray(mets_e["wire_bytes"]).sum()) != wire:
+                raise SystemExit(
+                    f"{label}: eager/compiled byte accounting diverged"
+                )
+        if rule == "acked":
+            from repro.async_gossip import ACK_BYTES
+
+            extra = wire - block["policies"]["bounded1"]["wire_bytes"]
+            if extra <= 0 or extra % ACK_BYTES:
+                raise SystemExit(
+                    f"{label}: ack traffic not priced into wire_bytes "
+                    f"(extra={extra})"
+                )
         block["policies"][label] = {
             "wire_bytes": wire,
             "trace_counts": dict(traces_cold),
@@ -477,6 +591,9 @@ def main() -> None:
         )
     if compiled:
         payload["compiled_axis"] = run_compiled_axis(
+            smoke=args.smoke, obs=obs
+        )
+        payload["realizability"] = run_realizability_axis(
             smoke=args.smoke, obs=obs
         )
         # the gate rows are ALWAYS the fixed smoke-scale config (see

@@ -1,6 +1,6 @@
 """Asynchronous decentralized bilevel training — no more barriers.
 
-    PYTHONPATH=src python examples/async_bilevel.py
+    PYTHONPATH=src python examples/async_bilevel.py [--out DIR]
 
 The same ten-node coefficient-tuning ring as examples/wan_bilevel.py, but
 over an intercontinental (geo) fabric with lognormal stragglers, executed
@@ -13,7 +13,10 @@ the staleness the run actually experienced, then exports a per-node Chrome
 timeline.
 """
 
+import argparse
 import json
+import os
+import tempfile
 
 import jax
 import numpy as np
@@ -25,7 +28,17 @@ from repro.data.bilevel_tasks import coefficient_tuning_task
 from repro.net import NetTrace, make_fabric
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--out", default=None, metavar="DIR",
+        help="directory for the exported trace (default: a temp dir)",
+    )
+    args = ap.parse_args(argv)
+    out_dir = args.out or tempfile.mkdtemp(prefix="async_bilevel_")
+    os.makedirs(out_dir, exist_ok=True)
+    trace_path = os.path.join(out_dir, "async_trace.json")
+
     m, T = 10, 12
     bundle = coefficient_tuning_task(m=m, n=1500, p=120, c=5, h=0.8, seed=0)
     topo = ring(m)
@@ -64,7 +77,7 @@ def main():
         print(f"{label:26s}: {sim:6.1f} simulated s for {T} rounds, "
               f"accuracy {acc:.3f}, staleness max={smax} mean={smean:.2f}")
         if trace is not None:
-            with open("async_trace.json", "w") as fh:
+            with open(trace_path, "w") as fh:
                 json.dump(trace.to_chrome_trace(), fh)
 
     # the compiled runtime: same math as the eager engine (parity-tested),
@@ -93,7 +106,7 @@ def main():
           "1/(1+age), buying stability headroom at larger gamma_in — see "
           "tests/test_async_invariants.py::"
           "test_inverse_age_damping_rescues_fully_async_c2dfb")
-    print("per-node timeline: async_trace.json (load in chrome://tracing — "
+    print(f"per-node timeline: {trace_path} (load in chrome://tracing — "
           "lanes drifting apart IS the staleness)")
 
 

@@ -1,6 +1,10 @@
 """One telemetry spine for every C2DFB execution path.
 
-    PYTHONPATH=src python examples/observability.py
+    PYTHONPATH=src python examples/observability.py [--out DIR]
+
+Artifacts (the JSONL streams and the Perfetto trace) land in ``--out``
+(default: a fresh temporary directory, printed at the end) — never in
+the repository root.
 
 The same six-node coefficient-tuning ring run three ways — the eager
 async engine, the compiled single-`lax.scan` runtime (with live
@@ -25,6 +29,9 @@ record through one ``obs=`` kwarg.  Shows:
 * the report CLI (`python -m repro.obs.report`) summarizing the run.
 """
 
+import argparse
+import os
+import tempfile
 import threading
 
 import jax
@@ -47,9 +54,6 @@ from repro.obs.report import summarize
 from repro.obs.watch import WatchState
 from repro.transport import SimTransport
 
-JSONL = "observability_run.jsonl"
-LIVE = "observability_live.jsonl"
-TRACE = "observability_trace.json"
 
 
 class HeartbeatPrinter:
@@ -71,7 +75,20 @@ class HeartbeatPrinter:
         self.inner.close()
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--out", default=None, metavar="DIR",
+        help="directory for the JSONL/trace artifacts "
+        "(default: a fresh temp dir)",
+    )
+    args = ap.parse_args(argv)
+    out_dir = args.out or tempfile.mkdtemp(prefix="observability_")
+    os.makedirs(out_dir, exist_ok=True)
+    JSONL = os.path.join(out_dir, "observability_run.jsonl")
+    LIVE = os.path.join(out_dir, "observability_live.jsonl")
+    TRACE = os.path.join(out_dir, "observability_trace.json")
+
     m, T = 6, 8
     bundle = coefficient_tuning_task(m=m, n=400, p=60, c=4, h=0.8, seed=0)
     topo = ring(m)

@@ -1,6 +1,6 @@
 """Decentralized bilevel training over a simulated wide-area network.
 
-    PYTHONPATH=src python examples/wan_bilevel.py
+    PYTHONPATH=src python examples/wan_bilevel.py [--out DIR]
 
 Ten nodes co-tune per-feature regularization on a ring, but this time the
 ring is priced by `repro.net`: every compressed residual is serialized by
@@ -10,7 +10,10 @@ trace.  A flaky-link variant shows time-varying topologies plugging into
 the same run.
 """
 
+import argparse
 import json
+import os
+import tempfile
 
 import jax
 import numpy as np
@@ -22,7 +25,17 @@ from repro.data.bilevel_tasks import coefficient_tuning_task
 from repro.net import LinkDropoutSchedule, NetTrace, make_fabric
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--out", default=None, metavar="DIR",
+        help="directory for the exported trace (default: a temp dir)",
+    )
+    args = ap.parse_args(argv)
+    out_dir = args.out or tempfile.mkdtemp(prefix="wan_bilevel_")
+    os.makedirs(out_dir, exist_ok=True)
+    trace_path = os.path.join(out_dir, "wan_trace.json")
+
     m, T = 10, 30
     bundle = coefficient_tuning_task(m=m, n=1500, p=120, c=5, h=0.8, seed=0)
     topo = ring(m)
@@ -52,9 +65,9 @@ def main():
     print(f"  simulated wall clock:   {total_s:.1f} s "
           f"(mean round {total_s / T * 1e3:.0f} ms)")
 
-    with open("wan_trace.json", "w") as fh:
+    with open(trace_path, "w") as fh:
         json.dump(trace.to_json(), fh)
-    print(f"  timeline: wan_trace.json ({len(trace.transfers)} transfers; "
+    print(f"  timeline: {trace_path} ({len(trace.transfers)} transfers; "
           "chrome=True for chrome://tracing)")
 
     # ---- same run over flaky links (20% dropout per round) ----------------

@@ -59,6 +59,7 @@ from repro.async_gossip.mixing import (
     DAMPING_POLICIES,
     damp_weights,
     damping_factor,
+    deterministic_ages,
     init_history,
     mix_delta_delayed,
     push_history,
@@ -66,15 +67,19 @@ from repro.async_gossip.mixing import (
     validate_damping,
 )
 from repro.async_gossip.scheduler import (
+    ACK_BYTES,
     POLICIES,
+    VERSION_RULES,
     AsyncScheduler,
     AsyncTimeline,
     RoundTimeline,
 )
 
 __all__ = [
+    "ACK_BYTES",
     "DAMPING_POLICIES",
     "POLICIES",
+    "VERSION_RULES",
     "AsyncScheduler",
     "AsyncTimeline",
     "LoopRecord",
@@ -90,6 +95,7 @@ __all__ = [
     "damp_weights",
     "damping_factor",
     "delayed_value_scan",
+    "deterministic_ages",
     "edge_age_samples",
     "init_history",
     "mix_delta_delayed",

@@ -87,6 +87,7 @@ def run_async_compiled(
     fabric,
     policy: str = "bounded",
     bound: int = 2,
+    version_rule: str = "common",
     ledger: StalenessLedger | None = None,
     scheduler: AsyncScheduler | None = None,
     schedule=None,
@@ -102,7 +103,11 @@ def run_async_compiled(
     ``c2dfb.run(async_mode=..., compiled=True)``.
 
     Payload sizes are always analytic (that is the point: no round's
-    timeline may depend on the jitted math).  ``fn_cache`` shares the
+    timeline may depend on the jitted math).  ``version_rule`` (the
+    scheduler's `VERSION_RULES`) is inherited wholesale from the replay:
+    the precomputed ages and byte accounting carry the rule, so the
+    compiled path is array-for-array equal to the eager engine under
+    every rule, acked ack pricing included.  ``fn_cache`` shares the
     scan compilation across runs (`engine.cached_jit`); ``donate=True``
     donates the scan carry so XLA reuses the state buffers in place.
 
@@ -129,7 +134,7 @@ def run_async_compiled(
         transport.bind(topo)
         fabric = transport.fabric
     scheduler = scheduler or AsyncScheduler(
-        transport, policy=policy, bound=bound
+        transport, policy=policy, bound=bound, version_rule=version_rule
     )
     ledger = ledger if ledger is not None else StalenessLedger()
     state = init_state(problem, cfg, x0, y0)
@@ -303,6 +308,7 @@ def run_baseline_async_compiled(
     fabric,
     policy: str = "bounded",
     bound: int = 2,
+    version_rule: str = "common",
     ledger: StalenessLedger | None = None,
     mixing_damping: str = "none",
     damping_decay: float = 0.5,
@@ -316,8 +322,10 @@ def run_baseline_async_compiled(
     this is trajectory- AND byte-exact with the eager loop, not just
     math-exact.  ``obs`` streams the same per-round records as the eager
     baseline loop (post hoc), plus optional mid-scan heartbeats."""
+    from repro.async_gossip.ledger import node_staleness_stats
     from repro.async_gossip.mixing import validate_damping
     from repro.core.baselines import madsbo_init, mdbo_init
+    from repro.net.fabric import edge_list
     from repro.obs import as_obs, scan_heartbeat
     from repro.transport.base import as_transport
 
@@ -327,7 +335,9 @@ def run_baseline_async_compiled(
     validate_damping(mixing_damping)
     transport = as_transport(fabric).bind(topo)
     fabric = transport.fabric
-    scheduler = AsyncScheduler(transport, policy=policy, bound=bound)
+    scheduler = AsyncScheduler(
+        transport, policy=policy, bound=bound, version_rule=version_rule
+    )
     ledger = ledger if ledger is not None else StalenessLedger()
     dy_bytes = _dense_node_bytes(y0)
     dx_bytes = _dense_node_bytes(x0)
@@ -416,6 +426,8 @@ def run_baseline_async_compiled(
     metrics["ledger"] = ledger
     if obs is not None:
         tc = trace_counts()
+        edges = edge_list(topo)
+        x_nd = np.asarray(metrics["x_node_dist"])
         for t, rt in enumerate(rounds):
             row = {
                 k: v[t] for k, v in metrics.items() if k != "ledger"
@@ -425,4 +437,22 @@ def run_baseline_async_compiled(
                 bytes_by_stream=rt.wire_bytes_by_stream,
                 trace_counts=tc,
             )
+            # schema-v2 node rows, mirroring the eager baseline loop
+            node_wire = rt.node_wire_bytes
+            ages_list = (
+                (rt.tl_ll.ages,) if rt.tl_h is None
+                else (rt.tl_ll.ages, rt.tl_h.ages)
+            )
+            nmax, nmean = node_staleness_stats(ages_list, edges, topo.m)
+            for i in range(topo.m):
+                obs.node(
+                    engine_name, t, i,
+                    {
+                        "x_dist": x_nd[t, i],
+                        "wire_bytes": node_wire[i],
+                        "staleness_max": nmax[i],
+                        "staleness_mean": nmean[i],
+                    },
+                    bytes_by_stream=rt.node_bytes_by_stream(i),
+                )
     return state, metrics

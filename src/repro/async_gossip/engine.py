@@ -444,6 +444,7 @@ def run_async(
     fabric,
     policy: str = "bounded",
     bound: int = 2,
+    version_rule: str = "common",
     ledger: StalenessLedger | None = None,
     scheduler: AsyncScheduler | None = None,
     schedule=None,
@@ -477,6 +478,15 @@ def run_async(
     and their trajectories must agree array-for-array
     (tests/test_compiled_async.py).  ``fn_cache`` shares the round-body
     jit cache across runs (see `cached_jit`).
+
+    ``version_rule`` selects which version an edge mixes (the scheduler's
+    `VERSION_RULES`): ``"common"`` — the idealized newest commonly-held
+    version (default, bit-exact with pre-rule trajectories);
+    ``"deterministic"`` — exactly version k - S, realizable with no
+    coordination at the same wait times; ``"acked"`` — common freshness
+    with the agreement priced as sequence-number acks on the wire (an
+    ``ack`` stream in the byte accounting).  Ignored when an explicit
+    ``scheduler`` is injected (its own rule wins).
 
     ``schedule`` (a `repro.net.dynamic.TopologySchedule`) composes the
     async engine with per-round mixing matrices: each round runs on the
@@ -513,7 +523,7 @@ def run_async(
         transport.bind(topo)
         fabric = transport.fabric
     scheduler = scheduler or AsyncScheduler(
-        transport, policy=policy, bound=bound
+        transport, policy=policy, bound=bound, version_rule=version_rule
     )
     ledger = ledger if ledger is not None else StalenessLedger()
     state = init_state(problem, cfg, x0, y0)
@@ -740,27 +750,74 @@ class BaselineRoundTimeline:
     """One baseline round's scheduler execution (drive/replay unit —
     ``tl_h`` is None for MDBO, whose Neumann terms are local compute).
     ``outer_wire_bytes`` is the upper-level barrier's dense traffic (the
-    per-stream split the `repro.obs` round record carries)."""
+    per-stream split the `repro.obs` round record carries);
+    ``outer_node_wire_bytes`` its per-sender split.  Under
+    ``version_rule="acked"`` the loops' ack traffic is reported as a
+    separate ``ack`` stream (key present only when nonzero — same
+    convention as `RoundTimeline`)."""
 
     tl_ll: object
     tl_h: object | None
     t_start: float
     t_end: float
     outer_wire_bytes: int = 0
+    outer_node_wire_bytes: np.ndarray | None = None
 
     @property
     def wire_bytes_by_stream(self) -> dict[str, int]:
+        ack = int(self.tl_ll.ack_wire_bytes)
         by = {
             "outer": int(self.outer_wire_bytes),
-            "ll": int(self.tl_ll.wire_bytes),
+            "ll": int(self.tl_ll.wire_bytes) - int(self.tl_ll.ack_wire_bytes),
         }
         if self.tl_h is not None:
-            by["higp"] = int(self.tl_h.wire_bytes)
+            ack += int(self.tl_h.ack_wire_bytes)
+            by["higp"] = (
+                int(self.tl_h.wire_bytes) - int(self.tl_h.ack_wire_bytes)
+            )
+        if ack:
+            by["ack"] = ack
         return by
 
     @property
     def wire_bytes(self) -> int:
         return sum(self.wire_bytes_by_stream.values())
+
+    @property
+    def node_wire_bytes(self) -> np.ndarray | None:
+        """(m,) per-sender egress over the whole round (upper-level
+        barrier + value-gossip loops, acks included); sums to
+        ``wire_bytes`` exactly — the schema-v2 node-row accounting."""
+        parts = [self.outer_node_wire_bytes, self.tl_ll.node_wire_bytes]
+        if self.tl_h is not None:
+            parts.append(self.tl_h.node_wire_bytes)
+        if any(p is None for p in parts):
+            return None
+        return np.sum(parts, axis=0)
+
+    def node_bytes_by_stream(self, i: int) -> dict[str, int] | None:
+        """Node ``i``'s egress split by stream — per-node companion to
+        `wire_bytes_by_stream`."""
+        if self.node_wire_bytes is None:
+            return None
+
+        def _ack(tl) -> int:
+            a = tl.node_ack_wire_bytes
+            return int(a[i]) if a is not None else 0
+
+        ack = _ack(self.tl_ll)
+        by = {
+            "outer": int(self.outer_node_wire_bytes[i]),
+            "ll": int(self.tl_ll.node_wire_bytes[i]) - _ack(self.tl_ll),
+        }
+        if self.tl_h is not None:
+            ack += _ack(self.tl_h)
+            by["higp"] = (
+                int(self.tl_h.node_wire_bytes[i]) - _ack(self.tl_h)
+            )
+        if ack:
+            by["ack"] = ack
+        return by
 
 
 def drive_baseline_round(
@@ -792,12 +849,17 @@ def drive_baseline_round(
     t_end = scheduler.barrier_phase(
         dx_bytes, round_idx, compute_s=compute_step * (1 + N), label="ul"
     )
-    outer_wire = int(dx_bytes) * sum(
-        len(v) for v in scheduler.fabric.topo.neighbors
+    outer_node_wire = np.asarray(
+        [
+            int(dx_bytes) * len(v)
+            for v in scheduler.fabric.topo.neighbors
+        ],
+        dtype=np.int64,
     )
     return BaselineRoundTimeline(
         tl_ll=tl_ll, tl_h=tl_h, t_start=t_start, t_end=t_end,
-        outer_wire_bytes=outer_wire,
+        outer_wire_bytes=int(outer_node_wire.sum()),
+        outer_node_wire_bytes=outer_node_wire,
     )
 
 
@@ -812,6 +874,7 @@ def run_baseline_async(
     fabric,
     policy: str = "bounded",
     bound: int = 2,
+    version_rule: str = "common",
     ledger: StalenessLedger | None = None,
     mixing_damping: str = "none",
     damping_decay: float = 0.5,
@@ -828,9 +891,14 @@ def run_baseline_async(
     dense (analytic already), so ``compiled=True`` — precompute the
     timelines and ride one ``lax.scan``
     (`repro.async_gossip.compiled.run_baseline_async_compiled`) — is
-    trajectory- AND byte-exact with the eager loop."""
+    trajectory- AND byte-exact with the eager loop.  ``version_rule``
+    selects the edge-version protocol exactly as in `run_async` (the
+    scheduler's `VERSION_RULES`; acked runs carry an ``ack`` stream in
+    the byte accounting)."""
+    from repro.async_gossip.ledger import node_staleness_stats
     from repro.async_gossip.mixing import validate_damping
     from repro.core.baselines import madsbo_init, mdbo_init
+    from repro.net.fabric import edge_list
     from repro.obs import as_obs
 
     if alg not in ("madsbo", "mdbo"):
@@ -841,15 +909,18 @@ def run_baseline_async(
 
         return run_baseline_async_compiled(
             alg, problem, topo, cfg, x0, y0, T, fabric, policy=policy,
-            bound=bound, ledger=ledger, mixing_damping=mixing_damping,
-            damping_decay=damping_decay, fn_cache=fn_cache, obs=obs,
+            bound=bound, version_rule=version_rule, ledger=ledger,
+            mixing_damping=mixing_damping, damping_decay=damping_decay,
+            fn_cache=fn_cache, obs=obs,
         )
     obs = as_obs(obs)
     from repro.transport.base import as_transport
 
     transport = as_transport(fabric).bind(topo)
     fabric = transport.fabric
-    scheduler = AsyncScheduler(transport, policy=policy, bound=bound)
+    scheduler = AsyncScheduler(
+        transport, policy=policy, bound=bound, version_rule=version_rule
+    )
     ledger = ledger if ledger is not None else StalenessLedger()
     dy_bytes = _dense_node_bytes(y0)
     dx_bytes = _dense_node_bytes(x0)
@@ -868,6 +939,7 @@ def run_baseline_async(
     round_fn = _baseline_round_fn(
         cache, alg, problem, topo, cfg, depth, mixing_damping, damping_decay
     )
+    edges = edge_list(topo)
 
     rows = []
     for t in range(T):
@@ -901,6 +973,28 @@ def run_baseline_async(
                 bytes_by_stream=rt.wire_bytes_by_stream,
                 wall_seconds=w1 - w0, trace_counts=trace_counts(),
             )
+            # schema-v2 node rows, same contract as every other engine:
+            # per-sender egress from the scheduler, per-node consensus
+            # distance from the round body, per-node staleness over each
+            # node's incident in-edges
+            node_wire = rt.node_wire_bytes
+            ages_list = (
+                (tl_ll.ages,) if tl_h is None
+                else (tl_ll.ages, tl_h.ages)
+            )
+            nmax, nmean = node_staleness_stats(ages_list, edges, topo.m)
+            x_nd = np.asarray(mets["x_node_dist"])
+            for i in range(topo.m):
+                obs.node(
+                    "baseline-eager", t, i,
+                    {
+                        "x_dist": x_nd[i],
+                        "wire_bytes": node_wire[i],
+                        "staleness_max": nmax[i],
+                        "staleness_mean": nmean[i],
+                    },
+                    bytes_by_stream=rt.node_bytes_by_stream(i),
+                )
 
     metrics = {k: np.stack([r[k] for r in rows]) for k in rows[0]}
     metrics["ledger"] = ledger

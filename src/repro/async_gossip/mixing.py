@@ -50,6 +50,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.types import Pytree
 
@@ -125,6 +126,40 @@ def required_depth(policy: str, bound: int, K: int, max_lag: int = 0) -> int:
     if policy == "full":
         return max_possible_age + 1
     return min(bound, max_possible_age) + 1
+
+
+def deterministic_ages(
+    K: int, S: int, lag: np.ndarray, neighbors,
+) -> np.ndarray:
+    """Closed-form (K, m, m) age tensor for the scheduler's
+    ``version_rule="deterministic"``: at step k every active edge mixes
+    exactly version ``k - S`` (S = the staleness bound, 0 for sync),
+    clipped under churn to the catch-up version 0 while ``k - S`` is not
+    yet a positive in-round version, and to the frozen pre-dropout version
+    ``-lag`` while the bound still admits it (``k - S <= -lag`` — the same
+    condition the bounded gate uses to skip the catch-up wait).
+
+    The result is a pure function of (k, S, lag): both endpoints can
+    compute it locally with no coordination, it is symmetric by
+    construction (lag is), and every age is <= max(S, 0) — so the realized
+    damped operator stays a valid Assumption-1 gossip matrix and fits the
+    `required_depth` history sizing unchanged.  ``neighbors`` is the
+    loop's ACTIVE per-node neighbor lists; non-edges stay age 0 (ignored
+    by the weighting, same convention as the scheduler's common rule).
+    """
+    m = len(neighbors)
+    lag = np.asarray(lag, dtype=np.int64)
+    ages = np.zeros((K, m, m), dtype=np.int32)
+    for k in range(K):
+        for i in range(m):
+            for j in neighbors[i]:
+                if j < i:
+                    continue  # fill symmetric pairs once
+                v = k - S
+                if v < 1:
+                    v = 0 if v > -int(lag[i, j]) else -int(lag[i, j])
+                ages[k, i, j] = ages[k, j, i] = k - v
+    return ages
 
 
 def init_history(tree: Pytree, depth: int) -> Pytree:

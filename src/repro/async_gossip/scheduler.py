@@ -34,17 +34,47 @@ dynamic program yields the exact event-driven fixpoint.  Randomness
 dedicated stream, so timelines are reproducible event-for-event and do not
 perturb the fabric's own barrier pricing.
 
-A modeling caveat on the AGES: the "newest commonly-held version" of an
-edge compares i's receipts at i's mix time with j's receipts at j's (same
-local step, possibly later wall-clock) mix time — a simulator idealization
-of sequence-numbered acks that a real protocol can only approach from
-below (it would need extra, here-unpriced coordination to agree that
-precisely).  The timing itself stays sound for the bounded policy: the
-gate guarantees version k - S is causally held by BOTH endpoints before
-either mixes step k, so a deployment that deterministically mixes version
-k - S needs no acks and sees exactly the gated wait times; the common-
-version ages then only grant it fresher data than that worst case.  See
-the ROADMAP's "causally-priced version agreement" follow-up.
+VERSION RULES.  Which version an edge mixes at step k is a protocol
+choice, selected by ``version_rule``:
+
+* ``common``        — the newest version held by BOTH endpoints at their
+                      respective step-k mix times.  This is the freshest
+                      symmetric choice, but it is a simulator idealization:
+                      i's pick depends on j's receipts at j's (possibly
+                      later wall-clock) mix time, which no deployment can
+                      know without extra, here-unpriced coordination.
+                      Kept as the default for continuity (bit-exact with
+                      all pre-rule trajectories) and as the freshness
+                      upper bound the realizable rules are compared to.
+* ``deterministic`` — mix exactly version ``k - S`` (clipped to the
+                      catch-up / frozen pre-dropout version under churn).
+                      The bounded gate already guarantees both endpoints
+                      causally hold that version before either mixes, and
+                      the rule is a deterministic function of (k, S, lag)
+                      known to both endpoints — so NO acks are needed, the
+                      timeline reuses the existing gated wait times
+                      unchanged, and every age is realizable as-is.
+                      Requires a gated policy (``sync``/``bounded``); the
+                      ``full`` policy has no such guarantee and rejects it.
+* ``acked``         — keep common-version freshness, but pay for the
+                      agreement: every data packet (catch-ups included) is
+                      answered by a sequence-number ack that rides the
+                      fabric with real egress serialization and arrival
+                      pricing (``ACK_BYTES`` per ack, counted in
+                      ``wire_bytes`` and reported as a separate ``ack``
+                      stream).  Gated policies additionally wait until the
+                      ack of their own version-(k - S) packet has returned,
+                      so at mix time each endpoint provably KNOWS the other
+                      holds the bound version — the coordination the common
+                      rule assumed for free is now on the wire, perturbing
+                      NIC contention and wait times measurably.
+
+Acks are processed in the same deterministic (step, sender, neighbor)
+order as data packets: an ack departs the receiver's NIC no earlier than
+the data packet's arrival, and acks triggered by step-k packets serialize
+on the receiver's NIC before its step-(k+1) data departures (a fixed
+ack-priority discipline, so the step-ordered DP stays an exact fixpoint).
+The outer x / s_x barriers are already global joins and carry no acks.
 
 The round boundary DRAINS the wire: the outer barrier waits for every
 in-flight residual, so the next round's version-0 reference points are
@@ -78,6 +108,12 @@ from repro.net.fabric import NetworkFabric
 from repro.net.trace import StepEvent, TransferEvent
 
 POLICIES = ("sync", "bounded", "full")
+VERSION_RULES = ("common", "deterministic", "acked")
+
+#: bytes of one sequence-number ack packet under ``version_rule="acked"``
+#: (a 32-bit sequence number + minimal framing; deliberately small so the
+#: cost is dominated by egress serialization + propagation, not payload)
+ACK_BYTES = 8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,6 +134,12 @@ class AsyncTimeline:
                 (its egress over all directed edges and catch-ups); sums
                 to ``wire_bytes`` exactly.  This is what the schema-v2
                 per-node round records report for the simulator engines.
+    ack_wire_bytes  ack-stream share of ``wire_bytes`` (0 except under
+                ``version_rule="acked"``); ``wire_bytes`` is always the
+                TOTAL including acks, so existing consumers price the
+                agreement automatically.
+    node_ack_wire_bytes  (m,) int64 — per-node ack egress (acks are the
+                data RECEIVER's egress); sums to ``ack_wire_bytes``.
     """
 
     ages: np.ndarray
@@ -106,6 +148,8 @@ class AsyncTimeline:
     end_s: float
     wire_bytes: int
     node_wire_bytes: np.ndarray | None = None
+    ack_wire_bytes: int = 0
+    node_ack_wire_bytes: np.ndarray | None = None
 
     @property
     def max_age(self) -> int:
@@ -145,12 +189,20 @@ class RoundTimeline:
     @property
     def wire_bytes_by_stream(self) -> dict[str, int]:
         """Per-link bytes split by protocol stream (outer barriers, y
-        loop, z loop) — the round's total is their sum."""
-        return {
+        loop, z loop, and — under ``version_rule="acked"`` only — the
+        ``ack`` agreement stream) — the round's total is their sum.  The
+        ``ack`` key is present only when its share is nonzero, so
+        common/deterministic records stay byte-identical to pre-rule
+        runs."""
+        ack = int(self.tl_y.ack_wire_bytes) + int(self.tl_z.ack_wire_bytes)
+        out = {
             "outer": int(self.outer_wire_bytes),
-            "y": int(self.tl_y.wire_bytes),
-            "z": int(self.tl_z.wire_bytes),
+            "y": int(self.tl_y.wire_bytes) - int(self.tl_y.ack_wire_bytes),
+            "z": int(self.tl_z.wire_bytes) - int(self.tl_z.ack_wire_bytes),
         }
+        if ack:
+            out["ack"] = ack
+        return out
 
     @property
     def node_wire_bytes(self) -> np.ndarray | None:
@@ -171,11 +223,20 @@ class RoundTimeline:
         to `wire_bytes_by_stream` (schema-v2 node rows carry this)."""
         if self.node_wire_bytes is None:
             return None
-        return {
+
+        def _ack(tl) -> int:
+            a = tl.node_ack_wire_bytes
+            return int(a[i]) if a is not None else 0
+
+        ack = _ack(self.tl_y) + _ack(self.tl_z)
+        out = {
             "outer": int(self.outer_node_wire_bytes[i]),
-            "y": int(self.tl_y.node_wire_bytes[i]),
-            "z": int(self.tl_z.node_wire_bytes[i]),
+            "y": int(self.tl_y.node_wire_bytes[i]) - _ack(self.tl_y),
+            "z": int(self.tl_z.node_wire_bytes[i]) - _ack(self.tl_z),
         }
+        if ack:
+            out["ack"] = ack
+        return out
 
 
 class AsyncScheduler:
@@ -195,6 +256,7 @@ class AsyncScheduler:
         fabric: NetworkFabric,
         policy: str = "bounded",
         bound: int = 2,
+        version_rule: str = "common",
     ) -> None:
         from repro.transport.base import as_transport
 
@@ -202,6 +264,17 @@ class AsyncScheduler:
             raise ValueError(f"unknown policy {policy!r}; have {POLICIES}")
         if policy == "bounded" and bound < 0:
             raise ValueError("staleness bound must be >= 0")
+        if version_rule not in VERSION_RULES:
+            raise ValueError(
+                f"unknown version_rule {version_rule!r}; have {VERSION_RULES}"
+            )
+        if version_rule == "deterministic" and policy == "full":
+            raise ValueError(
+                "version_rule='deterministic' needs a gated policy "
+                "('sync' or 'bounded'): the full policy never waits, so "
+                "nothing guarantees version k - S is held by both "
+                "endpoints — use 'common' or 'acked' with policy='full'"
+            )
         self.transport = as_transport(fabric)
         if self.transport is None:
             raise ValueError(
@@ -211,6 +284,7 @@ class AsyncScheduler:
         self.fabric = self.transport.fabric  # "call bind(topo)" ValueError
         self.policy = policy
         self.bound = bound
+        self.version_rule = version_rule
         m = self.fabric.topo.m
         self.clock = np.zeros(m)        # per-node absolute clocks
         self.egress_free = np.zeros(m)  # per-node NIC availability
@@ -347,6 +421,38 @@ class AsyncScheduler:
         node_wire = np.zeros(m, dtype=np.int64)  # per-sender egress
         tr = self.fabric.trace if trace else None
 
+        acked = self.version_rule == "acked"
+        # ack_arrive[v, src, dst]: absolute time the data SENDER src learns
+        # dst holds src's version-v packet (the ack's return arrival)
+        ack_arrive = np.full((K + 1, m, m), np.inf)
+        ack_total = 0
+        node_ack = np.zeros(m, dtype=np.int64)  # acks are RECEIVER egress
+
+        def send_ack(v: int, src: int, dst: int, data_arrival: float,
+                     phase: int) -> None:
+            """dst answers src's version-v packet with a priced ack: real
+            NIC egress serialization on dst plus the fabric's arrival
+            model, in the fixed (step, sender, neighbor) processing order
+            (ack-priority discipline — see the module docstring)."""
+            nonlocal ack_total, total_bytes
+            depart = max(self.egress_free[dst], data_arrival)
+            self.egress_free[dst] = depart + self.transport.egress_s(ACK_BYTES)
+            ack_arrive[v, src, dst] = self.transport.message_arrival(
+                depart, ACK_BYTES, rng
+            )
+            ack_total += ACK_BYTES
+            total_bytes += ACK_BYTES
+            node_ack[dst] += ACK_BYTES
+            node_wire[dst] += ACK_BYTES
+            if tr is not None:
+                tr.add_transfer(
+                    TransferEvent(
+                        round=round_idx, phase=phase, src=dst, dst=src,
+                        bytes=ACK_BYTES, t_start=depart,
+                        t_end=ack_arrive[v, src, dst],
+                    )
+                )
+
         # ---- re-entry catch-up: dense version-0 refs on lagged edges ------
         for i in range(m):
             for j in neighbors[i]:
@@ -368,6 +474,8 @@ class AsyncScheduler:
                             t_end=arrive[0, i, j],
                         )
                     )
+                if acked:
+                    send_ack(0, i, j, arrive[0, i, j], phase=-2)
 
         for k in range(K):
             # ---- gate + mix time ------------------------------------------
@@ -379,8 +487,12 @@ class AsyncScheduler:
                     for j in neighbors[i]:
                         if k >= 1:
                             t = max(t, arrive[k, j, i])
+                            if acked:
+                                t = max(t, ack_arrive[k, j, i])
                         elif lag[i, j] > 0:
                             t = max(t, arrive[0, j, i])
+                            if acked:
+                                t = max(t, ack_arrive[0, j, i])
                 mix_t[k, :] = t
             else:
                 for i in range(m):
@@ -395,8 +507,19 @@ class AsyncScheduler:
                                 # at EVERY such step (jitter can land it
                                 # after later residual packets)
                                 t = max(t, arrive[0, j, i])
+                                if acked:
+                                    # ...and for the returned ack of i's
+                                    # OWN catch-up: only then does i know
+                                    # j holds the shared base
+                                    t = max(t, ack_arrive[0, i, j])
                             if need >= 1:
                                 t = max(t, arrive[need, j, i])
+                                if acked:
+                                    # i must KNOW j holds i's version-need
+                                    # packet before mixing a version the
+                                    # bound admits — the agreement the
+                                    # common rule assumed for free
+                                    t = max(t, ack_arrive[need, i, j])
                     mix_t[k, i] = t
 
             # ---- compute + transmit ---------------------------------------
@@ -429,40 +552,54 @@ class AsyncScheduler:
                                 t_end=arrive[k + 1, i, j],
                             )
                         )
+                    if acked:
+                        send_ack(k + 1, i, j, arrive[k + 1, i, j], phase=k)
 
         # ---- per-edge version ages (symmetric -> Eq. 7 preserved) ---------
-        # held[k, j, i] = newest version from j that i holds at its step-k
-        # mix; the edge mixes on the newest COMMON version min(held both
-        # ways, k), as with sequence-numbered acks.  In-round residuals
-        # (v >= 1) only count once the catch-up / round-start version is
-        # held (cumulative residuals need the full prefix base); with
-        # nothing held the pair falls back to its frozen pre-dropout
-        # common version, lag versions behind round start.
-        for k in range(K):
-            for i in range(m):
-                for j in neighbors[i]:
-                    if j < i:
-                        continue  # fill symmetric pairs once
-                    held_i = held_j = None
-                    if arrive[0, j, i] <= mix_t[k, i]:
-                        held_i = 0
-                        for v in range(min(k, K), 0, -1):
-                            if arrive[v, j, i] <= mix_t[k, i]:
-                                held_i = v
-                                break
-                    if arrive[0, i, j] <= mix_t[k, j]:
-                        held_j = 0
-                        for v in range(min(k, K), 0, -1):
-                            if arrive[v, i, j] <= mix_t[k, j]:
-                                held_j = v
-                                break
-                    if held_i is None or held_j is None:
-                        common = -int(lag[i, j])
-                    else:
-                        common = min(held_i, held_j, k)
-                    ages[k, i, j] = ages[k, j, i] = k - common
+        # deterministic rule: closed form — version k - S exactly, clipped
+        # to the catch-up (0) / frozen pre-dropout (-lag) version under
+        # churn; a pure function of (k, S, lag) both endpoints know, so the
+        # age tensor is realizable with no coordination at all.
+        if self.version_rule == "deterministic":
+            from repro.async_gossip.mixing import deterministic_ages
+
+            ages = deterministic_ages(K, S, lag, neighbors)
+        # common / acked rules: held[k, j, i] = newest version from j that
+        # i holds at its step-k mix; the edge mixes on the newest COMMON
+        # version min(held both ways, k), as with sequence-numbered acks
+        # (which the acked rule actually sends and prices — its gate waits
+        # on the returned acks, so the agreement is causally justified).
+        # In-round residuals (v >= 1) only count once the catch-up /
+        # round-start version is held (cumulative residuals need the full
+        # prefix base); with nothing held the pair falls back to its frozen
+        # pre-dropout common version, lag versions behind round start.
+        else:
+            for k in range(K):
+                for i in range(m):
+                    for j in neighbors[i]:
+                        if j < i:
+                            continue  # fill symmetric pairs once
+                        held_i = held_j = None
+                        if arrive[0, j, i] <= mix_t[k, i]:
+                            held_i = 0
+                            for v in range(min(k, K), 0, -1):
+                                if arrive[v, j, i] <= mix_t[k, i]:
+                                    held_i = v
+                                    break
+                        if arrive[0, i, j] <= mix_t[k, j]:
+                            held_j = 0
+                            for v in range(min(k, K), 0, -1):
+                                if arrive[v, i, j] <= mix_t[k, j]:
+                                    held_j = v
+                                    break
+                        if held_i is None or held_j is None:
+                            common = -int(lag[i, j])
+                        else:
+                            common = min(held_i, held_j, k)
+                        ages[k, i, j] = ages[k, j, i] = k - common
 
         # ---- drain: the loop is over when every packet has landed ---------
+        # (acks included: the round boundary cannot cut an in-flight ack)
         end = float(self.clock.max()) if m else 0.0
         for i in range(m):
             for j in neighbors[i]:
@@ -470,9 +607,15 @@ class AsyncScheduler:
                 landed = landed[np.isfinite(landed)]
                 if landed.size:
                     end = max(end, float(landed.max()))
+                if acked:
+                    back = ack_arrive[:, i, j]
+                    back = back[np.isfinite(back)]
+                    if back.size:
+                        end = max(end, float(back.max()))
         return AsyncTimeline(
             ages=ages, mix_s=mix_t, finish_s=finish_t, end_s=end,
             wire_bytes=total_bytes, node_wire_bytes=node_wire,
+            ack_wire_bytes=ack_total, node_ack_wire_bytes=node_ack,
         )
 
     # ------------------------------------------------------------------

@@ -4,18 +4,48 @@ Sharding-aware in the practical sense for this container: arrays are pulled
 to host (jax.device_get) and stored with their tree structure; on restore
 the caller re-shards by passing the target shardings.  Writes are atomic
 (tmp + rename) and each checkpoint carries a manifest with step/config.
+
+``zstandard`` is an optional extra: without it, payloads compress with
+stdlib ``zlib`` instead (same file name; `load_pytree` tells the two
+apart by the compressed stream's magic bytes, so checkpoints written
+with zstd still load on a box that has it).
 """
 
 from __future__ import annotations
 
 import json
 import os
+import zlib
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as zstd
+except ImportError:  # optional extra; fall back to stdlib zlib
+    zstd = None
+
+#: zstd frame header (RFC 8878) — how `load_pytree` recognizes the codec.
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstd is not None:
+        return zstd.ZstdCompressor(level=3).compress(raw)
+    return zlib.compress(raw, 6)
+
+
+def _decompress(blob: bytes) -> bytes:
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstd is None:
+            raise ModuleNotFoundError(
+                "checkpoint was written with zstandard, which is not "
+                "installed here — install the 'checkpoint' extra to load it"
+            )
+        return zstd.ZstdDecompressor().decompress(blob)
+    return zlib.decompress(blob)
 
 
 def _pack_leaf(x):
@@ -39,7 +69,7 @@ def save_pytree(path: str, tree, step: int = 0, meta: dict | None = None):
         b"treedef": str(treedef).encode(),
     }
     raw = msgpack.packb(payload)
-    comp = zstd.ZstdCompressor(level=3).compress(raw)
+    comp = _compress(raw)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
@@ -54,7 +84,7 @@ def save_pytree(path: str, tree, step: int = 0, meta: dict | None = None):
 def load_pytree(path: str, like):
     """Restore into the structure of ``like`` (arrays or ShapeDtypeStructs)."""
     with open(path, "rb") as f:
-        raw = zstd.ZstdDecompressor().decompress(f.read())
+        raw = _decompress(f.read())
     payload = msgpack.unpackb(raw)
     leaves_like, treedef = jax.tree.flatten(like)
     stored = payload[b"leaves"]

@@ -33,6 +33,7 @@ from repro.core.topology import Topology
 from repro.core.types import (
     Pytree,
     consensus_error,
+    node_consensus_dist,
     node_mean,
     tree_count,
     tree_sq_norm,
@@ -147,6 +148,7 @@ def _mdbo_round_core(
     metrics = {
         "hypergrad_norm": jnp.sqrt(tree_sq_norm(node_mean(hyper))),
         "x_consensus_err": consensus_error(x),
+        "x_node_dist": node_consensus_dist(x),
     }
     return MDBOState(x=x, y=y, t=state.t + 1), metrics
 
@@ -295,6 +297,7 @@ def _madsbo_round_core(
     metrics = {
         "hypergrad_norm": jnp.sqrt(tree_sq_norm(node_mean(u))),
         "x_consensus_err": consensus_error(x),
+        "x_node_dist": node_consensus_dist(x),
     }
     return MADSBOState(x=x, y=y, v=v, u=u, t=state.t + 1), metrics
 

@@ -298,6 +298,7 @@ def run(
     fabric=None,
     async_mode: str | None = None,
     staleness_bound: int = 2,
+    version_rule: str = "common",
     ledger=None,
     mixing_damping: str = "none",
     damping_decay: float = 0.5,
@@ -332,6 +333,11 @@ def run(
     policy contractive at mixing steps where undamped delayed gossip
     diverges.
 
+    ``version_rule`` (async modes only) selects the edge-version protocol
+    (`repro.async_gossip.VERSION_RULES`): the idealized ``"common"``
+    default, the realizable ``"deterministic"`` k - S rule, or the
+    ``"acked"`` rule pricing sequence-number acks on the wire.
+
     ``transport`` (a `repro.transport.Transport`) selects the backend the
     round's gossip runs on: `SimTransport` is the priced simulation (this
     function with ``fabric=transport.fabric`` — bit-exact, golden-trace
@@ -365,9 +371,9 @@ def run(
         return run_c2dfb_transport(
             problem, topo, cfg, x0, y0, T, key, transport, jit=jit,
             schedule=schedule, async_mode=async_mode,
-            staleness_bound=staleness_bound, ledger=ledger,
-            mixing_damping=mixing_damping, damping_decay=damping_decay,
-            compiled=compiled, obs=obs,
+            staleness_bound=staleness_bound, version_rule=version_rule,
+            ledger=ledger, mixing_damping=mixing_damping,
+            damping_decay=damping_decay, compiled=compiled, obs=obs,
         )
     if async_mode is not None:
         if fabric is None:
@@ -377,7 +383,8 @@ def run(
 
             return run_async_compiled(
                 problem, topo, cfg, x0, y0, T, key, fabric,
-                policy=async_mode, bound=staleness_bound, ledger=ledger,
+                policy=async_mode, bound=staleness_bound,
+                version_rule=version_rule, ledger=ledger,
                 schedule=schedule, mixing_damping=mixing_damping,
                 damping_decay=damping_decay, obs=obs,
             )
@@ -385,7 +392,8 @@ def run(
 
         return run_async(
             problem, topo, cfg, x0, y0, T, key, fabric,
-            policy=async_mode, bound=staleness_bound, ledger=ledger,
+            policy=async_mode, bound=staleness_bound,
+            version_rule=version_rule, ledger=ledger,
             schedule=schedule, mixing_damping=mixing_damping,
             damping_decay=damping_decay, obs=obs,
         )
@@ -395,6 +403,13 @@ def run(
             "synchronous path already runs as one jitted lax.scan — drop "
             'compiled, or pass async_mode="sync"/"bounded"/"full" (with a '
             "fabric) to run the compiled async engine"
+        )
+    if version_rule != "common":
+        raise ValueError(
+            "version_rule is an async protocol choice: the synchronous "
+            "path has no versions to agree on — pass async_mode="
+            '"sync"/"bounded"/"full" (with a fabric) to select '
+            "'deterministic' or 'acked' timelines"
         )
     if mixing_damping != "none":
         raise ValueError(

@@ -28,12 +28,22 @@ def parse_args(argv=None):
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--obs", default=None, metavar="SPEC",
+        help="stream repro.obs timing records: jsonl:PATH, socket:ADDR, "
+        "or a bare JSONL path",
+    )
     return ap.parse_args(argv)
 
 
 def main(argv=None):
     args = parse_args(argv)
     cfg = get_config(args.arch, smoke=args.smoke)
+    obs = None
+    if args.obs:
+        from repro.obs import Obs, sink_from_spec
+
+        obs = Obs(sink=sink_from_spec(args.obs), run=f"serve-{args.arch}")
     key = jax.random.PRNGKey(args.seed)
     params, _ = init_lm_params(cfg, key)
 
@@ -61,6 +71,10 @@ def main(argv=None):
     logits.block_until_ready()
     t_prefill = time.time() - t0
     print(f"[serve] prefill {B}x{S} in {t_prefill*1e3:.1f} ms")
+    if obs is not None:
+        obs.timing(
+            "prefill", t_prefill, engine="serve", batch=B, prompt_len=S,
+        )
 
     def sample(logits, k):
         if args.temperature <= 0:
@@ -80,6 +94,12 @@ def main(argv=None):
     toks = B * (G - 1)
     print(f"[serve] decoded {G-1} steps x {B} seqs in {dt:.2f}s "
           f"({toks/max(dt,1e-9):.1f} tok/s on CPU)")
+    if obs is not None:
+        obs.timing(
+            "decode", dt, engine="serve", batch=B, gen=G - 1,
+            tokens_per_s=toks / max(dt, 1e-9),
+        )
+        obs.close()
     out = jnp.stack(generated, axis=1)
     print("[serve] sample output ids:", np.asarray(out[0, :16]))
     return out

@@ -26,12 +26,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.io import checkpoint_path, save_pytree
 from repro.configs import get_config
 from repro.core.c2dfb import C2DFBConfig, c2dfb_round, init_state, round_wire_bytes
 from repro.core.lm_bilevel import init_node_params, make_lm_bilevel
 from repro.core.topology import make_topology
-from repro.core.types import node_mean
+from repro.core.types import node_consensus_dist, node_mean
 from repro.data.synthetic import TokenStream, node_streams
 from repro.models.steps import make_train_step
 from repro.models.transformer import init_lm_params
@@ -55,10 +54,16 @@ def parse_args(argv=None):
     ap.add_argument("--ratio", type=float, default=0.2)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--obs", default=None, metavar="SPEC",
+        help="stream repro.obs telemetry: jsonl:PATH, socket:ADDR "
+        "(point at `python -m repro.obs.watch --listen ADDR`), or a "
+        "bare JSONL path",
+    )
     return ap.parse_args(argv)
 
 
-def run_single_level(args, cfg):
+def run_single_level(args, cfg, obs=None):
     key = jax.random.PRNGKey(args.seed)
     params, _ = init_lm_params(cfg, key)
     n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
@@ -85,11 +90,18 @@ def run_single_level(args, cfg):
         params, opt_state, metrics = step_fn(params, opt_state, batch)
         loss = float(metrics["loss"])
         history.append(loss)
+        if obs is not None:
+            obs.heartbeat(f"train-{args.algo}", step, {"loss": loss})
         print(f"  step {step:4d} loss {loss:.4f}", flush=True)
     dt = time.time() - t0
     print(f"[train] {args.steps} steps in {dt:.1f}s; "
           f"loss {history[0]:.4f} -> {history[-1]:.4f}")
     if args.ckpt_dir:
+        # deferred: checkpoint.io needs msgpack/zstandard, which the
+        # launcher itself does not — a run without --ckpt-dir must work
+        # on a box without them
+        from repro.checkpoint.io import checkpoint_path, save_pytree
+
         save_pytree(
             checkpoint_path(args.ckpt_dir, args.steps), params,
             step=args.steps, meta={"arch": cfg.name},
@@ -98,7 +110,7 @@ def run_single_level(args, cfg):
     return history
 
 
-def run_bilevel(args, cfg):
+def run_bilevel(args, cfg, obs=None):
     if cfg.tie_embeddings:
         cfg = dataclasses.replace(cfg, tie_embeddings=False)
     m = args.nodes
@@ -146,6 +158,27 @@ def run_bilevel(args, cfg):
         state, metrics = round_fn(state, k)
         val = float(eval_f(node_mean(state.x), node_mean(state.inner_y.d)))
         val0 = val if val0 is None else val0
+        if obs is not None:
+            row = {
+                k_: float(v) for k_, v in metrics.items()
+                if np.ndim(v) == 0
+            }
+            row["val_loss"] = val
+            row["wire_bytes"] = wire["total_bytes"]
+            obs.round(f"launch-{args.algo}", step, row)
+            # schema-v2 per-node rows: consensus distance plus each
+            # node's share of the (uniform, synchronous) round egress
+            x_nd = np.asarray(node_consensus_dist(state.x))
+            for i in range(m):
+                obs.node(
+                    f"launch-{args.algo}", step, i,
+                    {
+                        "x_dist": x_nd[i],
+                        "wire_bytes": wire["total_bytes"] // m,
+                        "staleness_max": 0,
+                        "staleness_mean": 0.0,
+                    },
+                )
         print(
             f"  round {step:4d} val-loss {val:.4f} "
             f"|hypergrad| {float(metrics['hypergrad_norm']):.5f} "
@@ -157,6 +190,7 @@ def run_bilevel(args, cfg):
         f"val loss {val0:.4f} -> {val:.4f}"
     )
     if args.ckpt_dir:
+        from repro.checkpoint.io import checkpoint_path, save_pytree
         from repro.core.lm_bilevel import merge_params
 
         params = merge_params(
@@ -172,10 +206,19 @@ def run_bilevel(args, cfg):
 def main(argv=None):
     args = parse_args(argv)
     cfg = get_config(args.arch, smoke=args.smoke)
-    if args.algo in ("sgd", "adamw"):
-        run_single_level(args, cfg)
-    else:
-        run_bilevel(args, cfg)
+    obs = None
+    if args.obs:
+        from repro.obs import Obs, sink_from_spec
+
+        obs = Obs(sink=sink_from_spec(args.obs), run=f"train-{args.arch}")
+    try:
+        if args.algo in ("sgd", "adamw"):
+            run_single_level(args, cfg, obs=obs)
+        else:
+            run_bilevel(args, cfg, obs=obs)
+    finally:
+        if obs is not None:
+            obs.close()
 
 
 if __name__ == "__main__":

@@ -56,6 +56,7 @@ from repro.obs.sink import (
     iter_jsonl,
     json_safe,
     read_jsonl,
+    sink_from_spec,
 )
 from repro.obs.timeline import (
     HostSpan,
@@ -95,5 +96,6 @@ __all__ = [
     "round_record",
     "save_merged_trace",
     "scan_heartbeat",
+    "sink_from_spec",
     "timing_record",
 ]

@@ -239,6 +239,28 @@ class SocketSink:
         self.close()
 
 
+def sink_from_spec(spec: str) -> MetricsSink:
+    """Build a sink from a CLI spec string — the one parser behind every
+    launcher's ``--obs`` flag:
+
+    * ``jsonl:PATH``  -> `JsonlSink(PATH)`;
+    * ``socket:ADDR`` -> `SocketSink(ADDR)` (``host:port`` TCP or a
+      Unix-socket path — point it at ``python -m repro.obs.watch
+      --listen ADDR``);
+    * a bare path     -> `JsonlSink` (the common case).
+
+    The ``socket:`` prefix is required for sockets because a bare
+    ``host:port`` is indistinguishable from a relative file path with a
+    colon in it; ``jsonl:`` exists for symmetry."""
+    spec = str(spec)
+    scheme, sep, rest = spec.partition(":")
+    if sep and scheme == "socket":
+        return SocketSink(rest)
+    if sep and scheme == "jsonl":
+        return JsonlSink(rest)
+    return JsonlSink(spec)
+
+
 class MultiSink:
     """Fan each record out to every wrapped sink, in order."""
 

@@ -221,12 +221,16 @@ def listen_records(
     poll_s: float = 0.2,
 ) -> Iterator[dict]:
     """Listen on ``address`` (``host:port`` TCP or a Unix-socket path)
-    and yield each line-delimited JSON record a connecting `SocketSink`
-    sends.  One writer at a time; when the writer disconnects the
-    listener goes back to accepting, so several short runs can feed one
-    dashboard session.  Ends on ``stop()`` / ``timeout_s``."""
+    and yield each line-delimited JSON record the connecting `SocketSink`
+    writers send.  CONCURRENT writers are multiplexed (``select`` over
+    the accepted connections, one carry buffer per connection), so
+    several simultaneous runs can feed one dashboard — records interleave
+    at line granularity, each line staying intact.  A writer
+    disconnecting just drops its connection; the listener keeps serving
+    the others and keeps accepting.  Ends on ``stop()`` / ``timeout_s``."""
     import json as jsonlib
     import os
+    import select
 
     family, addr = parse_address(address)
     if family == socketlib.AF_UNIX and os.path.exists(addr):
@@ -239,38 +243,47 @@ def listen_records(
         return deadline is not None and time.monotonic() >= deadline
 
     srv = socketlib.socket(family, socketlib.SOCK_STREAM)
+    conns: dict[socketlib.socket, bytes] = {}  # connection -> carry buffer
     try:
         if family == socketlib.AF_INET:
             srv.setsockopt(
                 socketlib.SOL_SOCKET, socketlib.SO_REUSEADDR, 1
             )
         srv.bind(addr)
-        srv.listen(1)
-        srv.settimeout(poll_s)
+        srv.listen(16)
+        srv.setblocking(False)
         while not expired():
-            try:
-                conn, _ = srv.accept()
-            except socketlib.timeout:
-                continue
-            with conn:
-                conn.settimeout(poll_s)
-                carry = b""
-                while not expired():
+            readable, _, _ = select.select(
+                [srv, *conns], [], [], poll_s
+            )
+            for sock in readable:
+                if sock is srv:
                     try:
-                        chunk = conn.recv(1 << 16)
-                    except socketlib.timeout:
-                        continue
+                        conn, _ = srv.accept()
                     except OSError:
-                        break
-                    if not chunk:
-                        break  # writer closed; back to accept
-                    carry += chunk
-                    *lines, carry = carry.split(b"\n")
-                    for raw in lines:
-                        raw = raw.strip()
-                        if raw:
-                            yield jsonlib.loads(raw)
+                        continue
+                    conn.setblocking(False)
+                    conns[conn] = b""
+                    continue
+                try:
+                    chunk = sock.recv(1 << 16)
+                except BlockingIOError:
+                    continue
+                except OSError:
+                    chunk = b""
+                if not chunk:  # writer closed or died; drop just this one
+                    sock.close()
+                    conns.pop(sock, None)
+                    continue
+                carry = conns[sock] + chunk
+                *lines, conns[sock] = carry.split(b"\n")
+                for raw in lines:
+                    raw = raw.strip()
+                    if raw:
+                        yield jsonlib.loads(raw)
     finally:
+        for sock in conns:
+            sock.close()
         srv.close()
         if family == socketlib.AF_UNIX and os.path.exists(addr):
             os.unlink(addr)

@@ -51,6 +51,7 @@ def run_c2dfb_transport(
     schedule=None,
     async_mode: str | None = None,
     staleness_bound: int = 2,
+    version_rule: str = "common",
     ledger=None,
     mixing_damping: str = "none",
     damping_decay: float = 0.5,
@@ -78,8 +79,9 @@ def run_c2dfb_transport(
             problem, topo, cfg, x0, y0, T, key, jit=jit,
             schedule=schedule, fabric=transport.fabric,
             async_mode=async_mode, staleness_bound=staleness_bound,
-            ledger=ledger, mixing_damping=mixing_damping,
-            damping_decay=damping_decay, compiled=compiled, obs=obs,
+            version_rule=version_rule, ledger=ledger,
+            mixing_damping=mixing_damping, damping_decay=damping_decay,
+            compiled=compiled, obs=obs,
         )
 
     if async_mode is not None:
@@ -88,6 +90,12 @@ def run_c2dfb_transport(
             "synchronous rounds; async needs the priced SimTransport — a "
             "real asynchronous multi-process backend is the ROADMAP "
             "follow-on"
+        )
+    if version_rule != "common":
+        raise NotImplementedError(
+            "DeviceTransport executes synchronous rounds: version_rule "
+            "selects an ASYNC edge-version protocol — use SimTransport "
+            "(or a bare fabric) with async_mode"
         )
     if compiled:
         raise NotImplementedError(

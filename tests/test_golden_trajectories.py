@@ -88,6 +88,25 @@ def _run_bounded() -> dict:
     return _trace(state, mets, extra_keys=("staleness_max", "wire_bytes"))
 
 
+def _run_deterministic() -> dict:
+    # the bounded case's exact configuration, switched to the
+    # deterministic k-S version rule: ages become the closed form
+    # (every edge exactly S stale once the pipeline fills) while the
+    # gated wait times and byte counts stay those of the common rule
+    from repro.core.c2dfb import run
+    from repro.net import make_fabric
+
+    bundle, topo, cfg = _setup()
+    fab = make_fabric(topo, profile="geo", straggler="lognormal", sigma=0.8,
+                      compute_s=0.05, seed=1)
+    state, mets = run(
+        bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=3,
+        key=_jax().random.PRNGKey(0), fabric=fab, async_mode="bounded",
+        staleness_bound=1, version_rule="deterministic",
+    )
+    return _trace(state, mets, extra_keys=("staleness_max", "wire_bytes"))
+
+
 def _run_schedule_composed() -> dict:
     from repro.core.c2dfb import run
     from repro.net import BConnectedSchedule, make_fabric
@@ -106,6 +125,7 @@ def _run_schedule_composed() -> dict:
 CASES = {
     "sync": _run_sync,
     "bounded_stale": _run_bounded,
+    "deterministic_rule": _run_deterministic,
     "schedule_composed": _run_schedule_composed,
 }
 
@@ -152,9 +172,11 @@ def test_trajectory_matches_golden(case):
         )
 
 
-def regenerate() -> None:
+def regenerate(only: list[str] | None = None) -> None:
     os.makedirs(GOLDEN_DIR, exist_ok=True)
     for case, fn in CASES.items():
+        if only and case not in only:
+            continue
         path = _golden_path(case)
         np.savez(path, **fn())
         size = os.path.getsize(path)
@@ -163,6 +185,12 @@ def regenerate() -> None:
 
 if __name__ == "__main__":
     if "--regen" in sys.argv:
-        regenerate()
+        # names after --regen restrict regeneration to those cases (a new
+        # case should not silently rewrite the existing traces)
+        names = [a for a in sys.argv[1:] if a != "--regen"]
+        unknown = set(names) - set(CASES)
+        if unknown:
+            sys.exit(f"unknown cases {sorted(unknown)}; have {sorted(CASES)}")
+        regenerate(only=names or None)
     else:
         print(__doc__)

@@ -300,6 +300,85 @@ def test_sim_node_wire_shares_sum_to_fleet(bundle):
             assert sum(r["bytes_by_stream"].values()) == r["wire_bytes"]
 
 
+@pytest.mark.parametrize("compiled", [False, True])
+def test_baseline_async_emits_node_rows(bundle, compiled):
+    """The async MDBO baseline emits schema-v2 node rows (ISSUE 8 S1):
+    per-node egress sums to the fleet row, by-stream splits sum per node,
+    and the v1 parity view stays blind to them."""
+    from repro.async_gossip import run_baseline_async
+    from repro.core.baselines import MDBOConfig
+
+    topo = ring(4)
+    sink = MemorySink()
+    run_baseline_async(
+        "mdbo", bundle.problem, topo, MDBOConfig(K=3, neumann_N=3),
+        bundle.x0, bundle.y0, 3,
+        make_fabric(topo, profile="geo", straggler="lognormal",
+                    compute_s=0.01, seed=0),
+        policy="bounded", bound=1, compiled=compiled, obs=sink,
+    )
+    engine = "baseline-compiled" if compiled else "baseline-eager"
+    per_node = node_rows(sink.records)
+    assert len(per_node) == 3 * 4
+    assert all(r["engine"] == engine for r in per_node)
+    fleet = {r["round"]: r for r in sink.rows(kind="round")}
+    for t in range(3):
+        rows_t = node_rows(sink.records, round_idx=t)
+        assert [r["node"] for r in rows_t] == list(range(4))
+        assert (
+            sum(r["wire_bytes"] for r in rows_t) == fleet[t]["wire_bytes"]
+        )
+        for r in rows_t:
+            assert sum(r["bytes_by_stream"].values()) == r["wire_bytes"]
+            assert r["staleness_max"] is not None
+            assert r["x_dist"] is not None
+    # v1 consumers never see them
+    assert parity_rows(sink.records) == parity_rows(sink.rows(kind="round"))
+
+
+def test_listener_multiplexes_concurrent_writers(tmp_path):
+    """Two SocketSink writers stream into ONE listener at the same time
+    (ISSUE 8 S2): every record from both arrives intact, per-writer order
+    preserved, and one writer dying never disturbs the other."""
+    import os
+
+    addr = str(tmp_path / "multi.sock")
+    n = 20
+
+    def writer(tag, die_early):
+        deadline = time.monotonic() + 10.0
+        while not os.path.exists(addr):
+            assert time.monotonic() < deadline, "listener never bound"
+            time.sleep(0.01)
+        sink = SocketSink(addr)
+        count = n // 2 if die_early else n
+        for t in range(count):
+            sink.emit(round_record(tag, tag, t, {"wire_bytes": t}))
+            time.sleep(0.002)
+        sink.close()  # die_early closes mid-session; the other keeps going
+
+    threads = [
+        threading.Thread(target=writer, args=("steady", False)),
+        threading.Thread(target=writer, args=("flaky", True)),
+    ]
+    for th in threads:
+        th.start()
+    want = n + n // 2
+    got = []
+    try:
+        for rec in listen_records(
+            addr, timeout_s=15.0, stop=lambda: len(got) >= want
+        ):
+            got.append(rec)
+    finally:
+        for th in threads:
+            th.join()
+    assert len(got) == want
+    for tag, count in (("steady", n), ("flaky", n // 2)):
+        seq = [r["round"] for r in got if r["engine"] == tag]
+        assert seq == list(range(count))  # intact and in order
+
+
 def test_sync_run_emits_node_rows_alongside_fleet(bundle):
     sink = MemorySink()
     run(

@@ -7,9 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-# optional checkpoint deps (pyproject 'checkpoint' extra); skip cleanly
+# msgpack is the one hard checkpoint dep (pyproject 'checkpoint' extra);
+# zstandard is optional — io.py falls back to stdlib zlib without it
 pytest.importorskip("msgpack")
-pytest.importorskip("zstandard")
 from repro.checkpoint.io import (
     checkpoint_path,
     latest_checkpoint,

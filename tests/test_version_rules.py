@@ -1,0 +1,289 @@
+"""Realizable version rules (ISSUE 8): deterministic k-S mixing and
+priced ack agreement.
+
+* property: the deterministic closed-form age tensor is symmetric, never
+  exceeds max(S, 0) under any churned lag pattern, and the realized
+  damped operator stays a valid Assumption-1 gossip matrix;
+* the scheduler's deterministic rule reproduces that closed form exactly
+  (and reuses the common rule's gated wait times and byte counts);
+* acked runs price the agreement: ack bytes are strictly positive, ride
+  ``wire_bytes`` and the per-stream/per-node splits, and the splits sum
+  exactly to the totals;
+* eager <-> compiled parity holds array-for-array under both new rules,
+  for C2DFB and for the async MDBO/MADSBO baselines;
+* the guards: "full" + deterministic is rejected (no gate, no bound),
+  unknown rules are rejected, and the synchronous path refuses
+  ``version_rule`` (there are no versions to agree on).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.async_gossip import (
+    ACK_BYTES,
+    AsyncScheduler,
+    deterministic_ages,
+    run_async,
+    run_baseline_async,
+)
+from repro.async_gossip.compiled import run_async_compiled
+from repro.core.c2dfb import C2DFBConfig, run
+from repro.core.topology import erdos_renyi, ring
+from repro.net import make_fabric
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _bundle():
+    from repro.data.bilevel_tasks import coefficient_tuning_task
+
+    return coefficient_tuning_task(m=4, n=80, p=12, c=3, h=0.5, seed=0)
+
+
+def _cfg():
+    return C2DFBConfig(
+        K=3, compressor="topk", comp_ratio=0.3, gamma_in=0.3, eta_in=0.3
+    )
+
+
+def _fabric(topo, **kw):
+    defaults = dict(
+        profile="geo", straggler="lognormal", sigma=0.8, compute_s=0.05,
+        seed=1,
+    )
+    defaults.update(kw)
+    return make_fabric(topo, **defaults)
+
+
+def _assert_parity(st_e, me, st_c, mc):
+    for le, lc in zip(jax.tree.leaves(st_e), jax.tree.leaves(st_c)):
+        np.testing.assert_array_equal(np.asarray(le), np.asarray(lc))
+    assert set(me) == set(mc)
+    for k in me:
+        if k == "ledger":
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(me[k]), np.asarray(mc[k]), err_msg=k
+        )
+
+
+# ---------------------------------------------------------------------------
+# the closed form itself
+
+
+@pytest.mark.property
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(min_value=3, max_value=8),
+    st.integers(min_value=0, max_value=3),
+    st.integers(min_value=1, max_value=6),
+    st.integers(min_value=0, max_value=2**31 - 1),
+    st.sampled_from(["none", "inverse-age", "exp-decay"]),
+)
+def test_deterministic_ages_always_realizable(m, S, K, lag_seed, policy):
+    """Symmetric, bounded by max(S, 0) under ANY churned lag pattern, and
+    the realized damped operator stays symmetric / row-stochastic /
+    non-negative at every step — valid to mix, always."""
+    from repro.async_gossip import damp_weights
+
+    topo = erdos_renyi(m, 0.5, seed=1) if m > 4 else ring(m)
+    rng = np.random.default_rng(lag_seed)
+    # churned re-entry lags: multiples of K (the scheduler's advance_lag
+    # bookkeeping), symmetric, only meaningful under the bound
+    lag = rng.integers(0, 3, size=(m, m)) * K
+    lag = np.minimum(lag, np.maximum(S - 1, 0))
+    lag = np.triu(lag, 1)
+    lag = lag + lag.T
+
+    ages = deterministic_ages(K, S, lag, topo.neighbors)
+    assert ages.shape == (K, m, m)
+    np.testing.assert_array_equal(ages, np.swapaxes(ages, 1, 2))
+    assert ages.min() >= 0
+    assert ages.max() <= max(S, 0)
+
+    W = jax.numpy.asarray(topo.W, jax.numpy.float32)
+    for k in range(K):
+        Wk = np.asarray(damp_weights(W, ages[k], policy))
+        np.testing.assert_allclose(Wk, Wk.T, atol=1e-6)
+        np.testing.assert_allclose(Wk.sum(axis=1), 1.0, atol=1e-5)
+        assert Wk.min() >= -1e-6
+
+
+@pytest.mark.parametrize("S", [1, 2])
+def test_scheduler_deterministic_matches_closed_form(S):
+    """The scheduler under ``version_rule="deterministic"`` emits EXACTLY
+    the closed-form ages while keeping the common rule's wait times and
+    byte accounting (the gate already guaranteed availability)."""
+    topo = ring(4)
+    K = 4
+    common = AsyncScheduler(
+        _fabric(topo), policy="bounded", bound=S, version_rule="common"
+    )
+    det = AsyncScheduler(
+        _fabric(topo), policy="bounded", bound=S, version_rule="deterministic"
+    )
+    for r in range(3):
+        tl_c = common.run_loop(K, 1000, r, compute_s_step=0.01, loop=f"c{r}")
+        tl_d = det.run_loop(K, 1000, r, compute_s_step=0.01, loop=f"d{r}")
+        want = deterministic_ages(
+            K, S, np.zeros((4, 4), np.int64), topo.neighbors
+        )
+        np.testing.assert_array_equal(tl_d.ages, want)
+        assert tl_d.ages.max() <= S
+        # same gated schedule, same pricing — only the version choice moved
+        np.testing.assert_array_equal(tl_d.mix_s, tl_c.mix_s)
+        assert tl_d.wire_bytes == tl_c.wire_bytes
+        assert tl_d.ack_wire_bytes == 0
+
+
+def test_deterministic_needs_a_gate():
+    topo = ring(4)
+    with pytest.raises(ValueError, match="gated"):
+        AsyncScheduler(
+            _fabric(topo), policy="full", version_rule="deterministic"
+        )
+    with pytest.raises(ValueError, match="version_rule"):
+        AsyncScheduler(_fabric(topo), policy="bounded", version_rule="nope")
+
+
+def test_sync_path_rejects_version_rule():
+    bundle = _bundle()
+    with pytest.raises(ValueError, match="async"):
+        run(
+            bundle.problem, ring(4), _cfg(), bundle.x0, bundle.y0, T=1,
+            key=KEY, version_rule="deterministic",
+        )
+
+
+# ---------------------------------------------------------------------------
+# acked pricing
+
+
+def test_acked_prices_the_agreement():
+    """Acks are real traffic: strictly positive, a separate ``ack``
+    stream, included in ``wire_bytes`` (fleet AND per node), and the
+    run's total exceeds the common rule's by exactly the ack share."""
+    from repro.obs import MemorySink
+
+    bundle = _bundle()
+    topo = ring(4)
+    kw = dict(policy="bounded", bound=1, payload_bytes="analytic")
+    _, m_common = run_async(
+        bundle.problem, topo, _cfg(), bundle.x0, bundle.y0, 3, KEY,
+        _fabric(topo), version_rule="common", **kw,
+    )
+    sink = MemorySink()
+    _, m_acked = run_async(
+        bundle.problem, topo, _cfg(), bundle.x0, bundle.y0, 3, KEY,
+        _fabric(topo), version_rule="acked", obs=sink, **kw,
+    )
+    rounds = sink.rows(kind="round")
+    nodes = sink.rows(kind="node")
+    assert len(rounds) == 3 and len(nodes) == 3 * topo.m
+    ack_total = 0
+    for r in rounds:
+        split = r["bytes_by_stream"]
+        assert split["ack"] > 0
+        assert split["ack"] % ACK_BYTES == 0
+        assert sum(split.values()) == r["wire_bytes"]
+        ack_total += split["ack"]
+        per_node = [
+            n for n in nodes if n["round"] == r["round"]
+        ]
+        # node egress (data + the acks each node sends) covers the fleet
+        assert sum(n["wire_bytes"] for n in per_node) == r["wire_bytes"]
+        assert sum(
+            n["bytes_by_stream"]["ack"] for n in per_node
+        ) == split["ack"]
+    assert ack_total == int(
+        np.asarray(m_acked["wire_bytes"]).sum()
+        - np.asarray(m_common["wire_bytes"]).sum()
+    )
+
+
+def test_deterministic_keeps_common_bytes_and_records():
+    """Deterministic mixing adds NO traffic and no new record fields —
+    only the ages (and hence the trajectory) move."""
+    from repro.obs import MemorySink
+
+    bundle = _bundle()
+    topo = ring(4)
+    kw = dict(policy="bounded", bound=1, payload_bytes="analytic")
+    _, m_common = run_async(
+        bundle.problem, topo, _cfg(), bundle.x0, bundle.y0, 3, KEY,
+        _fabric(topo), version_rule="common", **kw,
+    )
+    sink = MemorySink()
+    _, m_det = run_async(
+        bundle.problem, topo, _cfg(), bundle.x0, bundle.y0, 3, KEY,
+        _fabric(topo), version_rule="deterministic", obs=sink, **kw,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(m_common["wire_bytes"]), np.asarray(m_det["wire_bytes"])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(m_common["sim_seconds"]), np.asarray(m_det["sim_seconds"])
+    )
+    for r in sink.rows(kind="round"):
+        assert "ack" not in r["bytes_by_stream"]
+    # once the pipeline fills, every edge is exactly S stale
+    assert int(np.asarray(m_det["staleness_max"])[-1]) == 1
+
+
+# ---------------------------------------------------------------------------
+# eager <-> compiled parity under the new rules
+
+
+@pytest.mark.parametrize("rule", ["deterministic", "acked"])
+def test_compiled_matches_eager_under_rule(rule):
+    bundle = _bundle()
+    topo = ring(4)
+    cfg = _cfg()
+    st_e, me = run_async(
+        bundle.problem, topo, cfg, bundle.x0, bundle.y0, 4, KEY,
+        _fabric(topo), policy="bounded", bound=1, version_rule=rule,
+        payload_bytes="analytic",
+    )
+    st_c, mc = run_async_compiled(
+        bundle.problem, topo, cfg, bundle.x0, bundle.y0, 4, KEY,
+        _fabric(topo), policy="bounded", bound=1, version_rule=rule,
+    )
+    _assert_parity(st_e, me, st_c, mc)
+
+
+@pytest.mark.parametrize("alg", ["mdbo", "madsbo"])
+@pytest.mark.parametrize("rule", ["deterministic", "acked"])
+def test_baseline_compiled_matches_eager_under_rule(alg, rule):
+    from repro.core.baselines import MADSBOConfig, MDBOConfig
+
+    bundle = _bundle()
+    topo = ring(4)
+    cfg = (
+        MDBOConfig(K=3, neumann_N=3) if alg == "mdbo"
+        else MADSBOConfig(K=3, Q=2)
+    )
+    kw = dict(policy="bounded", bound=1, version_rule=rule)
+    st_e, me = run_baseline_async(
+        alg, bundle.problem, topo, cfg, bundle.x0, bundle.y0, 3,
+        _fabric(topo), compiled=False, **kw,
+    )
+    st_c, mc = run_baseline_async(
+        alg, bundle.problem, topo, cfg, bundle.x0, bundle.y0, 3,
+        _fabric(topo), compiled=True, **kw,
+    )
+    _assert_parity(st_e, me, st_c, mc)
+    if rule == "acked":
+        assert int(np.asarray(me["wire_bytes"]).sum()) > 0
+        # acked baselines price their acks too
+        _, m_common = run_baseline_async(
+            alg, bundle.problem, topo, cfg, bundle.x0, bundle.y0, 3,
+            _fabric(topo), compiled=False, policy="bounded", bound=1,
+            version_rule="common",
+        )
+        extra = int(
+            np.asarray(me["wire_bytes"]).sum()
+            - np.asarray(m_common["wire_bytes"]).sum()
+        )
+        assert extra > 0 and extra % ACK_BYTES == 0
