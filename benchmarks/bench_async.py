@@ -427,7 +427,8 @@ def run_gate(obs=None, merged_trace_path: str | None = None) -> dict:
     ``merged_trace_path`` the bounded policy's cold run also exports the
     merged Perfetto timeline (simulated fabric lanes + host spans)."""
     from repro.net import NetTrace
-    from repro.obs import as_obs, gate_record
+    from repro.obs import Obs, as_obs, gate_record, oracle_calls_for
+    from repro.obs.sink import MemorySink, MultiSink
 
     T = GATE_T
     m, K, bundle, topo = _task(True, comm_bound=True)
@@ -443,6 +444,8 @@ def run_gate(obs=None, merged_trace_path: str | None = None) -> dict:
     o = as_obs(obs)
     block: dict = {"config": config, "policies": {}}
     merge_trace = None
+    merge_records: list = []
+    oc_expected = oracle_calls_for("c2dfb", cfg, m=m)
     for label, mode, bound, rule in GATE_ROWS:
         cache = {}
         tr = (
@@ -450,16 +453,56 @@ def run_gate(obs=None, merged_trace_path: str | None = None) -> dict:
             if merged_trace_path is not None and label == "bounded1"
             else None
         )
+        # tee the row's records through a MemorySink so the gate can read
+        # the compute meter (schema-v3 round fields) off the compiled run
+        # without changing what reaches the caller's sink
+        mem = MemorySink()
+        row_sink = (
+            mem if o is None or o.sink is None else MultiSink(o.sink, mem)
+        )
+        o_row = Obs(
+            sink=row_sink,
+            heartbeat_every=(o.heartbeat_every if o is not None else 0),
+            run=(o.run if o is not None else "run"),
+        )
         _, traces_cold, err_c, mets = _timed_async_run(
             "compiled", bundle, topo, cfg, T, GEO_KW, mode, bound, cache,
-            obs=o, label=f"gate/{label}/cold", trace=tr, version_rule=rule,
+            obs=o_row, label=f"gate/{label}/cold", trace=tr,
+            version_rule=rule,
         )
         wall_warm, _, _, _ = _timed_async_run(
             "compiled", bundle, topo, cfg, T, GEO_KW, mode, bound, cache,
-            obs=o, label=f"gate/{label}/warm", version_rule=rule,
+            obs=o_row, label=f"gate/{label}/warm", version_rule=rule,
         )
+        r0 = next(
+            (
+                r for r in mem.records
+                if r.get("kind") == "round"
+                and r.get("engine") == "async-compiled"
+            ),
+            None,
+        )
+        oracle_calls = flops_total = compile_s = mem_peak = None
+        if r0 is not None and r0.get("oracle_calls") is not None:
+            # the meter is structural: a gate row whose per-round oracle
+            # mix drifts from the closed-form C2DFB count is a bug, not
+            # a baseline update
+            if dict(r0["oracle_calls"]) != oc_expected:
+                raise SystemExit(
+                    f"{label}: per-round oracle_calls "
+                    f"{r0['oracle_calls']} != closed form {oc_expected}"
+                )
+            oracle_calls = {k: v * T for k, v in oc_expected.items()}
+        if r0 is not None and r0.get("compute_flops") is not None:
+            flops_total = float(r0["compute_flops"]) * T
+        if r0 is not None:
+            compile_s = r0.get("compile_seconds")
+            mem_peak = r0.get("memory_peak_bytes")
         if tr is not None:
             merge_trace = tr
+            # the traced row's records feed the exported timeline's
+            # per-node and FLOPs/oracle counter lanes
+            merge_records = list(mem.records)
         wire = int(np.asarray(mets["wire_bytes"]).sum())
         if rule == "deterministic":
             # realizable-rule parity is part of the gate: the eager
@@ -492,11 +535,17 @@ def run_gate(obs=None, merged_trace_path: str | None = None) -> dict:
             "wire_bytes": wire,
             "trace_counts": dict(traces_cold),
             "warm_wall_s": wall_warm,
+            "oracle_calls": oracle_calls,
+            "compute_flops": flops_total,
+            "compile_seconds": compile_s,
+            "memory_peak_bytes": mem_peak,
         }
         if o is not None:
             o.emit(gate_record(
                 o.run, label, wire_bytes=wire, trace_counts=traces_cold,
                 warm_wall_s=wall_warm, config=config,
+                oracle_calls=oracle_calls, compute_flops=flops_total,
+                compile_seconds=compile_s, memory_peak_bytes=mem_peak,
             ))
         emit(
             f"async_gate/{label}",
@@ -505,7 +554,8 @@ def run_gate(obs=None, merged_trace_path: str | None = None) -> dict:
             f"warm_wall_s={wall_warm:.4f}",
         )
     if o is not None and merged_trace_path is not None:
-        o.save_timeline(merged_trace_path, merge_trace)
+        o.save_timeline(merged_trace_path, merge_trace,
+                        node_records=merge_records)
         print(f"# merged perfetto trace: {merged_trace_path}", flush=True)
     return block
 

@@ -18,9 +18,14 @@ record through one ``obs=`` kwarg.  Shows:
 * the parity contract: the engines' rows are field-for-field equal
   once machine-dependent fields are dropped (`parity_rows`) — and the
   schema-v2 per-NODE rows ride alongside without touching that view;
+* the schema-v3 compute meter riding the same rows: per-round
+  `oracle_calls` (C2DFB's hvp column is structurally zero — the paper's
+  fully-first-order claim as a field) and trip-count-aware
+  `compute_flops`, priced identically by all three engines;
 * a merged Perfetto/Chrome timeline joining the fabric's *simulated*
   per-node lanes, the host's *wall-clock* spans (replay, compile,
-  scan), and per-node counter lanes from the node rows — load
+  scan), per-node counter lanes from the node rows, and cumulative
+  FLOPs/oracle counter lanes from the compute meter — load
   observability_trace.json in ui.perfetto.dev;
 * LIVE tailing: a second run streams to a JSONL file from a background
   thread while the foreground follows it crash-safely (`follow_jsonl`)
@@ -152,6 +157,25 @@ def main(argv=None):
     print(f"node rows (schema v2): {len(node_rows(mem.records))} total; "
           "final round per-node egress "
           f"{[r['wire_bytes'] for r in per_node]} bytes")
+
+    # 3b. the compute meter (schema v3): every row that prices the wire
+    # also prices the computation — closed-form oracle counts (C2DFB's
+    # hvp column is zero BY STRUCTURE, checked at trace time) and the
+    # XLA cost analysis of the one compiled round body, identical across
+    # engines because they share the memoized analysis.
+    r0 = next(r for r in mem.records
+              if r.get("kind") == "round" and r.get("engine") == "async-eager")
+    oc = r0["oracle_calls"]
+    print("\ncompute meter (per fleet round): "
+          + "  ".join(f"{k}={v}" for k, v in oc.items())
+          + f"  flops={r0['compute_flops']:.3e}"
+          + f"  hbm={r0['hbm_bytes']:.3e}")
+    assert oc["hvp"] == 0 and oc["jvp"] == 0  # fully first-order
+    assert all(
+        r["oracle_calls"] == oc and
+        r["compute_flops"] == r0["compute_flops"]
+        for r in mem.records + tmem.records if r.get("kind") == "round"
+    ), "every engine prices the same round identically"
 
     # 4. LIVE: tail a run that is still writing.  A background thread
     # streams a fresh run to its own JSONL; the foreground follows the

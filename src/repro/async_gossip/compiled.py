@@ -51,7 +51,9 @@ from repro.async_gossip.engine import (
     _baseline_round_fn,
     _prepare_async_run,
     analytic_message_bytes,
+    async_round_cost,
     baseline_masked_round,  # noqa: F401  (re-exported for symmetry)
+    baseline_round_cost,
     c2dfb_masked_round,
     c2dfb_schedule_round,
     cached_jit,
@@ -165,6 +167,24 @@ def run_async_compiled(
     )
     keys = jax.random.split(key, T)
 
+    # one round body's trip-count-aware cost — the SAME closure + cache
+    # key as the eager engine's (no donate/heartbeat components), so the
+    # two paths share one analysis and agree exactly; computed BEFORE the
+    # carry is donated (lowering is abstract, but the state must exist)
+    cost = mem0 = fleet_oracles = None
+    if obs is not None:
+        from repro.obs.compute import c2dfb_oracle_calls, memory_peak_bytes
+
+        with obs.span("cost_analysis", engine="async-compiled"):
+            cost = async_round_cost(
+                problem, topo, cfg, plan, mixing_damping, damping_decay,
+                state, keys[0],
+            )
+        fleet_oracles = {
+            k: v * topo.m for k, v in c2dfb_oracle_calls(cfg).items()
+        }
+        mem0 = memory_peak_bytes()
+
     # ---- phase 2: one scan, donated carry -----------------------------
     cache = fn_cache if fn_cache is not None else {}
     hb = obs is not None and obs.heartbeat_on
@@ -276,6 +296,11 @@ def run_async_compiled(
                 "async-compiled", t, row,
                 bytes_by_stream=rt.wire_bytes_by_stream,
                 trace_counts=tc,
+                oracle_calls=fleet_oracles,
+                compute_flops=cost.flops,
+                hbm_bytes=cost.hbm_bytes,
+                compile_seconds=cost.compile_seconds if t == 0 else None,
+                memory_peak_bytes=mem0 if t == 0 else None,
             )
             # schema-v2 node rows from the same replayed timelines the
             # eager engine accounts with — per-node parity by construction
@@ -291,6 +316,7 @@ def run_async_compiled(
                         "wire_bytes": node_wire[i],
                         "staleness_max": nmax[i],
                         "staleness_mean": nmean[i],
+                        "compute_flops": cost.flops / topo.m,
                     },
                     bytes_by_stream=rt.node_bytes_by_stream(i),
                 )
@@ -371,6 +397,20 @@ def run_baseline_async_compiled(
         if alg == "madsbo" else None
     )
 
+    # one round body's cost, shared closure + key with the eager baseline
+    # loop (computed before the carry is donated)
+    cost = mem0 = fleet_oracles = None
+    if obs is not None:
+        from repro.obs.compute import memory_peak_bytes, oracle_calls_for
+
+        with obs.span("cost_analysis", engine=engine_name):
+            cost = baseline_round_cost(
+                alg, problem, topo, cfg, depth, mixing_damping,
+                damping_decay, state,
+            )
+        fleet_oracles = oracle_calls_for(alg, cfg, m=topo.m)
+        mem0 = memory_peak_bytes()
+
     # ---- phase 2: one scan --------------------------------------------
     cache = fn_cache if fn_cache is not None else {}
     hb = obs is not None and obs.heartbeat_on
@@ -436,6 +476,11 @@ def run_baseline_async_compiled(
                 engine_name, t, row,
                 bytes_by_stream=rt.wire_bytes_by_stream,
                 trace_counts=tc,
+                oracle_calls=fleet_oracles,
+                compute_flops=cost.flops,
+                hbm_bytes=cost.hbm_bytes,
+                compile_seconds=cost.compile_seconds if t == 0 else None,
+                memory_peak_bytes=mem0 if t == 0 else None,
             )
             # schema-v2 node rows, mirroring the eager baseline loop
             node_wire = rt.node_wire_bytes
@@ -452,6 +497,7 @@ def run_baseline_async_compiled(
                         "wire_bytes": node_wire[i],
                         "staleness_max": nmax[i],
                         "staleness_mean": nmean[i],
+                        "compute_flops": cost.flops / topo.m,
                     },
                     bytes_by_stream=rt.node_bytes_by_stream(i),
                 )

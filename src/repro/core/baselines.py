@@ -30,6 +30,7 @@ from repro.core.compression import Compressor
 from repro.core.gossip import mix_delta_dense, mix_step_dense
 from repro.core.inner_loop import compress_stacked
 from repro.core.topology import Topology
+from repro.obs.compute import record_oracle
 from repro.core.types import (
     Pytree,
     consensus_error,
@@ -46,12 +47,14 @@ from repro.core.types import (
 
 def _hvp_yy(g, x, y, v, data):
     """(d^2/dy^2 g) @ v  via forward-over-reverse."""
+    record_oracle("hvp")
     grad_y = lambda y_: jax.grad(g, argnums=1)(x, y_, data)
     return jax.jvp(grad_y, (y,), (v,))[1]
 
 
 def _jvp_xy(g, x, y, v, data):
     """(d^2/dxdy g) @ v : differentiate grad_x along y-direction v."""
+    record_oracle("jvp")
     grad_x = lambda y_: jax.grad(g, argnums=0)(x, y_, data)
     return jax.jvp(grad_x, (y,), (v,))[1]
 
@@ -108,16 +111,19 @@ def _mdbo_round_core(
 
     # LL: K gossip + gradient steps on y
     grad_g_y = jax.vmap(jax.grad(problem.g, argnums=1))
-    y = ll_fn(
-        y,
-        lambda mixed, pre: jax.tree.map(
+
+    def ll_update(mixed, pre):
+        record_oracle("ll_grad")
+        return jax.tree.map(
             lambda v, g_: v - cfg.eta_y * g_,
             mixed, grad_g_y(x, pre, problem.data_g),
-        ),
-    )
+        )
+
+    y = ll_fn(y, ll_update)
 
     # Hypergradient via truncated Neumann series:
     #   v approx [d2yy g]^{-1} grad_y f ;  v_{n+1} = v_n - eta*(H v_n) + eta*grad_y f
+    record_oracle("ll_grad")  # grad_y f seeds the Neumann solve
     grad_f_y = jax.vmap(jax.grad(problem.f, argnums=1))(x, y, problem.data_f)
 
     def neumann_body(v, _):
@@ -138,6 +144,7 @@ def _mdbo_round_core(
     cross = jax.vmap(lambda xi, yi, vi, dg: _jvp_xy(problem.g, xi, yi, vi, dg))(
         x, y, v, problem.data_g
     )
+    record_oracle("ul_grad")
     grad_f_x = jax.vmap(jax.grad(problem.f, argnums=0))(x, y, problem.data_f)
     hyper = jax.tree.map(jnp.subtract, grad_f_x, cross)
 
@@ -262,15 +269,18 @@ def _madsbo_round_core(
     x, y, v, u = state.x, state.y, state.v, state.u
 
     grad_g_y = jax.vmap(jax.grad(problem.g, argnums=1))
-    y = ll_fn(
-        y,
-        lambda mixed, pre: jax.tree.map(
+
+    def ll_update(mixed, pre):
+        record_oracle("ll_grad")
+        return jax.tree.map(
             lambda a, b: a - cfg.eta_y * b,
             mixed, grad_g_y(x, pre, problem.data_g),
-        ),
-    )
+        )
+
+    y = ll_fn(y, ll_update)
 
     # HIGP: min_v 0.5 v^T H v - v^T grad_y f  solved by Q gossip-GD steps
+    record_oracle("ll_grad")  # grad_y f is the HIGP linear target
     grad_f_y = jax.vmap(jax.grad(problem.f, argnums=1))(x, y, problem.data_f)
 
     def higp_update(mixed, pre):
@@ -286,6 +296,7 @@ def _madsbo_round_core(
     cross = jax.vmap(lambda xi, yi, vi, dg: _jvp_xy(problem.g, xi, yi, vi, dg))(
         x, y, v, problem.data_g
     )
+    record_oracle("ul_grad")
     grad_f_x = jax.vmap(jax.grad(problem.f, argnums=0))(x, y, problem.data_f)
     p = jax.tree.map(jnp.subtract, grad_f_x, cross)
 

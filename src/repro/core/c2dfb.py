@@ -453,6 +453,31 @@ def run(
         )
     from repro.async_gossip.engine import record_trace
 
+    cost = mem0 = fleet_oracles = None
+    if obs is not None:
+        from repro.obs.compute import (
+            c2dfb_oracle_calls,
+            memory_peak_bytes,
+            round_cost,
+        )
+
+        # one ROUND body's trip-count-aware cost (memoized; the scan
+        # runs T of these) — keyed like the async engines' cost closures
+        with obs.span("cost_analysis", engine="sync"):
+            cost = round_cost(
+                ("c2dfb/sync", id(problem), id(topo), cfg),
+                lambda st, k, W: c2dfb_round(
+                    st, k, problem, topo, cfg, W=W
+                ),
+                state, keys[0], Ws[0],
+                expected_oracles=c2dfb_oracle_calls(cfg),
+                label="c2dfb/sync",
+            )
+        fleet_oracles = {
+            k: v * topo.m for k, v in c2dfb_oracle_calls(cfg).items()
+        }
+        mem0 = memory_peak_bytes()
+
     def scanned(s):
         record_trace("sync_scan")  # one bump per (re)trace of the scan
         return jax.lax.scan(body, s, (keys, Ws))
@@ -495,11 +520,24 @@ def run(
 
         host = {k: np.asarray(v) for k, v in metrics.items()}
         for t in range(T):
-            obs.round("sync", t, {k: v[t] for k, v in host.items()})
+            obs.round(
+                "sync", t, {k: v[t] for k, v in host.items()},
+                oracle_calls=fleet_oracles,
+                compute_flops=cost.flops,
+                hbm_bytes=cost.hbm_bytes,
+                compile_seconds=cost.compile_seconds if t == 0 else None,
+                memory_peak_bytes=mem0 if t == 0 else None,
+            )
             # schema-v2 node rows: the sync scan knows per-node consensus
             # distance; byte/staleness signals stay None (the barrier path
             # accounts bytes fleet-wide, and all ages are zero)
             x_nd = host["x_node_dist"][t]
             for i in range(x_nd.shape[0]):
-                obs.node("sync", t, i, {"x_dist": x_nd[i]})
+                obs.node(
+                    "sync", t, i,
+                    {
+                        "x_dist": x_nd[i],
+                        "compute_flops": cost.flops / topo.m,
+                    },
+                )
     return state, metrics

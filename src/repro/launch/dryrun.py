@@ -251,6 +251,17 @@ def dryrun_one(arch, shape_name, multi_pod, parse_hlo=True, variant="baseline"):
         byts = res["dot_bytes"]
         record["hlo_flops"] = flops            # per-device, trip-aware
         record["hlo_bytes"] = byts             # dot operand/output traffic proxy
+        # body-once vs trip-aware divergence: when the module contains
+        # scanned/while-looped layers, cost_analysis() undercounts by the
+        # trip count — surface the ratio and flag it so a dryrun record
+        # can never pass a body-once number off as the real FLOPs
+        body_once = record["xla_cost_flops_body_once"]
+        record["flops_trip_ratio"] = (
+            flops / body_once if (parse_hlo and body_once) else None
+        )
+        record["flops_undercounted"] = bool(
+            parse_hlo and body_once and flops > body_once * 1.01
+        )
         record["collectives"] = {
             "bytes_by_kind": res["collective_bytes_by_kind"],
             "counts_by_kind": res["collective_counts_by_kind"],

@@ -27,11 +27,35 @@ package is the single instrumentation layer every execution path feeds:
 * ``report``   — ``python -m repro.obs.report``: summarize a JSONL run,
   diff two runs, and gate a run against the committed
   ``BENCH_async.json`` perf baseline (trace counts exact, bytes exact,
-  wall-clock within a machine-tolerant band).
+  wall-clock within a machine-tolerant band);
+* ``compute``  — the compute meter (schema v3): structural oracle-site
+  counters + closed-form per-round `oracle_calls`, memoized
+  trip-count-aware round-body cost (`round_cost` → ``compute_flops`` /
+  ``hbm_bytes`` via `repro.launch.hlo_cost`), and host compile/memory
+  accounting — every record that carries ``wire_bytes`` now prices the
+  computation beside the communication.
 """
 
+from repro.obs.compute import (
+    ORACLE_FORMULAS,
+    ORACLE_KINDS,
+    RoundCost,
+    c2dfb_oracle_calls,
+    check_structure,
+    madsbo_oracle_calls,
+    mdbo_oracle_calls,
+    memory_peak_bytes,
+    oracle_calls_for,
+    oracle_trace_counts,
+    record_oracle,
+    reset_cost_cache,
+    reset_oracle_trace_counts,
+    round_cost,
+    structure_consistent,
+)
 from repro.obs.core import Obs, as_obs, scan_heartbeat
 from repro.obs.records import (
+    COMPUTE_FIELDS,
     ENGINES,
     METRIC_FIELDS,
     NODE_FIELDS,
@@ -61,15 +85,19 @@ from repro.obs.sink import (
 from repro.obs.timeline import (
     HostSpan,
     HostSpans,
+    flops_lane_events,
     merged_chrome_trace,
     node_lane_events,
     save_merged_trace,
 )
 
 __all__ = [
+    "COMPUTE_FIELDS",
     "ENGINES",
     "METRIC_FIELDS",
     "NODE_FIELDS",
+    "ORACLE_FORMULAS",
+    "ORACLE_KINDS",
     "PARITY_EXCLUDED",
     "SCHEMA_VERSION",
     "HostSpan",
@@ -79,23 +107,37 @@ __all__ = [
     "MetricsSink",
     "MultiSink",
     "Obs",
+    "RoundCost",
     "SocketSink",
     "as_obs",
+    "c2dfb_oracle_calls",
+    "check_structure",
+    "flops_lane_events",
     "follow_jsonl",
     "gate_record",
     "heartbeat_record",
     "iter_jsonl",
     "json_safe",
+    "madsbo_oracle_calls",
+    "mdbo_oracle_calls",
+    "memory_peak_bytes",
     "merged_chrome_trace",
     "node_lane_events",
     "node_record",
     "node_rows",
+    "oracle_calls_for",
+    "oracle_trace_counts",
     "parity_rows",
     "parity_view",
     "read_jsonl",
+    "record_oracle",
+    "reset_cost_cache",
+    "reset_oracle_trace_counts",
+    "round_cost",
     "round_record",
     "save_merged_trace",
     "scan_heartbeat",
     "sink_from_spec",
+    "structure_consistent",
     "timing_record",
 ]

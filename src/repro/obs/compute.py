@@ -1,0 +1,301 @@
+"""repro.obs.compute — the compute half of the telemetry spine.
+
+PRs 6-8 priced only communication: ``wire_bytes`` is codec-exact per
+round, per stream, per node, while computation was an unlabeled
+``wall_seconds``.  The paper's headline claim is *compute* AND
+communication efficiency — O~(eps^-4) FIRST-ORDER oracle calls against
+the Hessian-vector-product machinery of MDBO / MA-DSBO — so this module
+adds the missing half.  Three layers:
+
+1. **Structural oracle counters.**  Every oracle site in
+   `repro.core.bilevel_problem` / `repro.core.baselines` calls
+   `record_oracle(kind)` at TRACE time (the same discipline as
+   `repro.async_gossip.engine.record_trace`): a site inside ``lax.scan``
+   bumps once per compilation regardless of trip count, so the counters
+   prove STRUCTURE — C2DFB's round body traces zero ``hvp`` / ``jvp``
+   sites, provably.  The trip-count-aware per-round call counts come
+   from the closed-form formulas (`c2dfb_oracle_calls`,
+   `mdbo_oracle_calls`, `madsbo_oracle_calls`), and `check_structure`
+   pins the two views to each other: a kind the formula says is zero
+   must have zero traced sites, a nonzero kind must have at least one.
+
+2. **Trip-count-aware FLOPs / HBM / collective bytes.**  `round_cost`
+   lowers one ROUND BODY exactly once per cache key (memoized beside
+   `engine.cached_jit`'s compilations, the same ``id(problem)`` /
+   config key discipline as `engine.analytic_message_bytes`) and walks
+   the compiled HLO with `repro.launch.hlo_cost.analyze` — the
+   while-loop-multiplying walk, so K-step inner scans and Neumann /
+   HIGP loops are counted by their trip counts, not body-once.  Eager,
+   compiled and SimTransport runs share one cost closure per
+   configuration, so their ``compute_flops`` agree EXACTLY (the same
+   guarantee the analytic byte model gives ``wire_bytes``).
+
+3. **Host-side compile / memory accounting.**  The lowering above is
+   timed (``RoundCost.compile_seconds``) and `memory_peak_bytes` reads
+   the device allocator's high-water mark where the backend exposes one
+   (None otherwise — CPU has no allocator stats).  Both are
+   machine-dependent and therefore parity-EXCLUDED and gate-advisory,
+   unlike oracle counts and FLOPs which are exact.
+
+Oracle taxonomy (``ORACLE_KINDS``) — by the variable differentiated:
+
+* ``ul_grad`` — a gradient w.r.t. the upper-level variable x (the
+  hypergradient-assembly direction);
+* ``ll_grad`` — a gradient w.r.t. a lower-level variable (y or z; the
+  inner-descent direction — C2DFB's y-loop objective h = f + lam*g
+  counts as ONE ll_grad per evaluation);
+* ``hvp``     — a second-order product (d^2/dy^2 g) @ v;
+* ``jvp``     — a second-order cross product (d^2/dxdy g) @ v.
+
+Per-round, per-node closed forms (asserted against traced sites, and in
+tests against hand-counted code paths):
+
+| alg    | ul_grad | ll_grad   | hvp       | jvp |
+|--------|---------|-----------|-----------|-----|
+| c2dfb  | 3       | 2*(K+1)   | 0         | 0   |
+| mdbo   | 1       | K+1       | neumann_N | 1   |
+| madsbo | 1       | K+1       | Q         | 1   |
+
+C2DFB: `refresh_tracker` + K `inner_apply` steps for EACH of the y and z
+loops (2*(K+1) ``ll_grad``), then the three x-partials of `hyper_grad`.
+The second-order columns are the paper's point: identically zero.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+
+#: every oracle kind an engine may account — `record_oracle` rejects
+#: anything else so a typo'd tag cannot silently split a count
+ORACLE_KINDS = ("ul_grad", "ll_grad", "hvp", "jvp")
+
+#: trace-time oracle-site counters (module-global like the engine's
+#: `_TRACE_COUNTS`): bumped once per compilation per site, not per call
+_ORACLE_SITES: dict[str, int] = {}
+
+
+def record_oracle(kind: str, n: int = 1) -> None:
+    """Bump an oracle-site counter (called from inside traced oracle
+    functions, so it fires once per compilation, not per execution)."""
+    if kind not in ORACLE_KINDS:
+        raise ValueError(
+            f"unknown oracle kind {kind!r}; have {ORACLE_KINDS}"
+        )
+    _ORACLE_SITES[kind] = _ORACLE_SITES.get(kind, 0) + int(n)
+
+
+def oracle_trace_counts() -> dict[str, int]:
+    """Snapshot of the per-kind oracle SITE counters (trace-time)."""
+    return dict(_ORACLE_SITES)
+
+
+def reset_oracle_trace_counts() -> None:
+    _ORACLE_SITES.clear()
+
+
+def oracle_site_delta(before: dict[str, int]) -> dict[str, int]:
+    """Sites traced since ``before`` (a prior `oracle_trace_counts`
+    snapshot) — nonzero entries only, so an empty dict means "nothing
+    was (re)traced" (e.g. a memoized `round_cost` hit)."""
+    out = {}
+    for k, v in _ORACLE_SITES.items():
+        d = v - before.get(k, 0)
+        if d:
+            out[k] = d
+    return out
+
+
+# ---------------------------------------------------------------------------
+# closed-form per-round per-node oracle counts
+# ---------------------------------------------------------------------------
+
+
+def c2dfb_oracle_calls(cfg) -> dict[str, int]:
+    """C2DFB (Algorithm 1): `refresh_tracker` + K `inner_apply` gradient
+    evaluations for each of the y and z loops, then `hyper_grad`'s three
+    x-partials.  Fully first-order: hvp = jvp = 0 by construction."""
+    return {
+        "ul_grad": 3,
+        "ll_grad": 2 * (int(cfg.K) + 1),
+        "hvp": 0,
+        "jvp": 0,
+    }
+
+
+def mdbo_oracle_calls(cfg) -> dict[str, int]:
+    """MDBO: K LL gossip-GD gradients + the grad_y f Neumann seed, one
+    hvp per Neumann term, one cross jvp, one grad_x f."""
+    return {
+        "ul_grad": 1,
+        "ll_grad": int(cfg.K) + 1,
+        "hvp": int(cfg.neumann_N),
+        "jvp": 1,
+    }
+
+
+def madsbo_oracle_calls(cfg) -> dict[str, int]:
+    """MA-DSBO: K LL gradients + the grad_y f HIGP target, one hvp per
+    HIGP subsolver step, one cross jvp, one grad_x f."""
+    return {
+        "ul_grad": 1,
+        "ll_grad": int(cfg.K) + 1,
+        "hvp": int(cfg.Q),
+        "jvp": 1,
+    }
+
+
+ORACLE_FORMULAS = {
+    "c2dfb": c2dfb_oracle_calls,
+    "mdbo": mdbo_oracle_calls,
+    "madsbo": madsbo_oracle_calls,
+}
+
+
+def oracle_calls_for(
+    alg: str, cfg, m: int = 1, rounds: int = 1
+) -> dict[str, int]:
+    """The closed-form count scaled to ``m`` nodes and ``rounds``
+    rounds — what the round records (``m`` nodes, 1 round) and the gate
+    blocks (``m`` nodes, T rounds) carry."""
+    fn = ORACLE_FORMULAS.get(alg)
+    if fn is None:
+        raise ValueError(
+            f"no oracle formula for {alg!r}; have {tuple(ORACLE_FORMULAS)}"
+        )
+    per_node = fn(cfg)
+    return {k: v * int(m) * int(rounds) for k, v in per_node.items()}
+
+
+def structure_consistent(
+    expected: dict[str, int], sites: dict[str, int]
+) -> bool:
+    """Do traced oracle SITES agree with a closed-form count's
+    STRUCTURE?  A kind the formula makes zero must have traced zero
+    sites (this is the C2DFB-has-no-hvp claim), a nonzero kind must
+    have traced at least one (the formula prices something the code
+    actually does).  Site multiplicities are NOT compared — a
+    ``lax.cond`` traces both branches, a scan body traces once however
+    many trips it runs; only presence/absence is structural."""
+    for kind in ORACLE_KINDS:
+        want = int(expected.get(kind, 0))
+        have = int(sites.get(kind, 0))
+        if (want == 0) != (have == 0):
+            return False
+    return True
+
+
+def check_structure(
+    label: str, expected: dict[str, int], sites: dict[str, int]
+) -> None:
+    """Raise if a freshly traced round body's oracle sites contradict
+    the closed-form formula (see `structure_consistent`)."""
+    if not structure_consistent(expected, sites):
+        raise ValueError(
+            f"{label}: traced oracle sites {sites} are structurally "
+            f"inconsistent with the closed-form counts {expected} — a "
+            "tagged oracle moved without its formula (or vice versa)"
+        )
+
+
+# ---------------------------------------------------------------------------
+# trip-count-aware round-body cost (memoized lowering + HLO walk)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundCost:
+    """One round body's compiled cost: trip-count-aware FLOPs, dot
+    operand/output bytes (the first-order HBM-traffic proxy
+    `repro.launch.hlo_cost` extracts), collective payload bytes, and
+    the host seconds the lowering+compilation took.  ``flops`` /
+    ``hbm_bytes`` cover the WHOLE node-stacked body — all m nodes —
+    matching the fleet-wide ``wire_bytes`` accounting; node records
+    carry ``flops / m``."""
+
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    compile_seconds: float
+
+
+#: round-body cost memo — same key discipline as `engine.cached_jit`
+#: (``id(problem)`` / ``id(topo)`` + config + policy knobs); eager,
+#: compiled and SimTransport paths use the SAME key for the same
+#: configuration, so they share one analysis and agree exactly
+_COST_CACHE: dict = {}
+
+
+def reset_cost_cache() -> None:
+    _COST_CACHE.clear()
+
+
+def round_cost(
+    key: tuple,
+    fn,
+    *args,
+    expected_oracles: dict[str, int] | None = None,
+    label: str = "round",
+) -> RoundCost:
+    """Lower ``fn(*args)`` once, walk its compiled HLO with the
+    trip-count-aware `repro.launch.hlo_cost.analyze`, and memoize the
+    `RoundCost` under ``key``.
+
+    The lowering is wrapped in the engine's `preserve_trace_counts` so
+    the analysis pass never perturbs the jit-trace counters that
+    benchmarks pin (the cost trace is bookkeeping, not a retrace of the
+    run's math).  Oracle-SITE counters are deliberately NOT preserved:
+    on a fresh lowering their delta is the traced structure, checked
+    against ``expected_oracles`` when given (`check_structure`).  A
+    memo hit traces nothing and checks nothing."""
+    cached = _COST_CACHE.get(key)
+    if cached is not None:
+        return cached
+    # function-local import: engine imports repro.core which imports the
+    # oracle tags above — a module-level import here would be a cycle
+    from repro.async_gossip.engine import preserve_trace_counts
+    from repro.launch.hlo_cost import analyze
+
+    before = oracle_trace_counts()
+    with preserve_trace_counts():
+        t0 = time.perf_counter()
+        compiled = jax.jit(fn).lower(*args).compile()
+        compile_s = time.perf_counter() - t0
+        res = analyze(compiled.as_text())
+    if expected_oracles is not None:
+        sites = oracle_site_delta(before)
+        if sites:  # empty = jax reused a trace; nothing new to check
+            check_structure(label, expected_oracles, sites)
+    cost = RoundCost(
+        flops=float(res["flops"]),
+        hbm_bytes=float(res["dot_bytes"]),
+        collective_bytes=float(res["collective_bytes"]),
+        compile_seconds=float(compile_s),
+    )
+    _COST_CACHE[key] = cost
+    return cost
+
+
+# ---------------------------------------------------------------------------
+# host-side memory accounting
+# ---------------------------------------------------------------------------
+
+
+def memory_peak_bytes() -> int | None:
+    """The device allocator's high-water mark (``peak_bytes_in_use``)
+    where the backend exposes `memory_stats` — None otherwise (the CPU
+    backend has no allocator stats).  Machine-dependent: parity-excluded
+    and gate-advisory by contract."""
+    try:
+        devs = jax.local_devices()
+        if not devs:
+            return None
+        stats = devs[0].memory_stats()
+    except Exception:  # backend without memory_stats
+        return None
+    if not stats:
+        return None
+    peak = stats.get("peak_bytes_in_use")
+    return int(peak) if peak is not None else None

@@ -46,6 +46,17 @@ Round-record fields (absent signals are None, never missing keys):
 | sim_seconds        | float       | simulated wall clock of the round    |
 | wall_seconds       | float       | HOST wall clock (machine-dependent)  |
 | trace_counts       | dict        | per-body jit trace counters snapshot |
+| oracle_calls       | dict        | fleet-wide per-kind oracle calls this |
+|                    |             | round ({ul_grad, ll_grad, hvp, jvp}; |
+|                    |             | closed-form, schema v3)              |
+| compute_flops      | float       | trip-count-aware FLOPs of the round  |
+|                    |             | body (fleet-wide, schema v3)         |
+| hbm_bytes          | float       | dot operand/output bytes — the HBM   |
+|                    |             | traffic proxy (fleet-wide, v3)       |
+| compile_seconds    | float       | host seconds the cost lowering +     |
+|                    |             | compile took (round 0 only, v3)      |
+| memory_peak_bytes  | int         | device allocator high-water mark     |
+|                    |             | (round 0 only; None on CPU, v3)      |
 
 Node-record fields (schema v2; absent signals are None, never missing):
 
@@ -65,6 +76,8 @@ Node-record fields (schema v2; absent signals are None, never missing):
 |                    |             | when present, else of wire_bytes     |
 | staleness_max      | int         | max age over i's incident edges      |
 | staleness_mean     | float       | mean age over i's incident edges     |
+| compute_flops      | float       | i's share of the round-body FLOPs    |
+|                    |             | (fleet compute_flops / m, schema v3) |
 
 Parity contract: `parity_view` drops the machine- and path-dependent
 fields (`PARITY_EXCLUDED`) so eager / compiled / transport runs on the
@@ -72,11 +85,19 @@ same seed can be asserted row-for-row equal on everything that is a
 claim about the ALGORITHM (bytes, staleness, errors, simulated time)
 rather than about the host that ran it.
 
-SCHEMA VERSIONS.  v2 (this module) adds the ``node`` record kind and
-stamps every record ``schema: 2``; the round/heartbeat/timing/gate
-record KEYS are unchanged from v1, and `parity_rows` defaults to
-``kind="round"`` — so every PR 6 parity view / diff over fleet rows
-produces identical results on v2 streams (asserted in tests/test_obs).
+SCHEMA VERSIONS.  v2 adds the ``node`` record kind and stamps every
+record ``schema: 2``; the round/heartbeat/timing/gate record KEYS are
+unchanged from v1, and `parity_rows` defaults to ``kind="round"`` — so
+every PR 6 parity view / diff over fleet rows produces identical
+results on v2 streams (asserted in tests/test_obs).  v3 (this module)
+adds the COMPUTE fields (`COMPUTE_FIELDS` + ``oracle_calls``; see
+`repro.obs.compute`): deterministic ones (``oracle_calls``,
+``compute_flops``, ``hbm_bytes``) participate in parity, the
+machine-dependent pair (``compile_seconds``, ``memory_peak_bytes``)
+joins ``wall_seconds`` in `PARITY_EXCLUDED`.  Records that never
+carried the new keys (v1/v2 streams) parity-view and diff exactly as
+before — the new fields are additive and excluded-or-absent
+(asserted in tests/test_compute_meter).
 """
 
 from __future__ import annotations
@@ -85,7 +106,7 @@ from typing import Any
 
 import numpy as np
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 #: engine labels the shipped paths emit (callers may add their own)
 ENGINES = (
@@ -112,18 +133,42 @@ METRIC_FIELDS = (
     "sim_seconds",
 )
 
-#: scalar metric fields lifted verbatim from a per-node row (schema v2)
+#: scalar metric fields lifted verbatim from a per-node row (schema v2;
+#: ``compute_flops`` joined in v3)
 NODE_FIELDS = (
     "x_dist",
     "node_bytes",
     "wire_bytes",
     "staleness_max",
     "staleness_mean",
+    "compute_flops",
+)
+
+#: schema-v3 compute fields carried by round records (kwargs of
+#: `round_record`, not METRIC_FIELDS: engines pass them beside the
+#: metrics row, like ``bytes_by_stream``).  The first two are
+#: deterministic (parity-visible); the last two are host facts.
+COMPUTE_FIELDS = (
+    "compute_flops",
+    "hbm_bytes",
+    "compile_seconds",
+    "memory_peak_bytes",
 )
 
 #: fields that are about the HOST / the producing path, not the
-#: algorithm — excluded from cross-engine parity comparison
-PARITY_EXCLUDED = ("run", "engine", "wall_seconds", "trace_counts")
+#: algorithm — excluded from cross-engine parity comparison.  The
+#: schema-v3 compute partition: ``oracle_calls`` / ``compute_flops`` /
+#: ``hbm_bytes`` are claims about the ALGORITHM and stay parity-visible;
+#: ``compile_seconds`` / ``memory_peak_bytes`` are claims about the host
+#: and land here beside ``wall_seconds``.
+PARITY_EXCLUDED = (
+    "run",
+    "engine",
+    "wall_seconds",
+    "trace_counts",
+    "compile_seconds",
+    "memory_peak_bytes",
+)
 
 
 def _scalar(v: Any) -> Any:
@@ -155,6 +200,11 @@ def round_record(
     bytes_by_stream: dict | None = None,
     wall_seconds: float | None = None,
     trace_counts: dict | None = None,
+    oracle_calls: dict | None = None,
+    compute_flops: float | None = None,
+    hbm_bytes: float | None = None,
+    compile_seconds: float | None = None,
+    memory_peak_bytes: int | None = None,
 ) -> dict:
     """One round's record from an engine metrics row (missing metrics
     become explicit None so every record carries the full schema)."""
@@ -180,6 +230,23 @@ def round_record(
         float(wall_seconds) if wall_seconds is not None else None
     )
     rec["trace_counts"] = dict(trace_counts) if trace_counts else None
+    # schema-v3 compute fields (see repro.obs.compute): fleet-wide
+    # per-round oracle calls and round-body cost; None where a path has
+    # no meter (e.g. obs-less runs re-emitted from stacked metrics)
+    rec["oracle_calls"] = (
+        {k: int(v) for k, v in oracle_calls.items()}
+        if oracle_calls is not None else None
+    )
+    rec["compute_flops"] = (
+        float(compute_flops) if compute_flops is not None else None
+    )
+    rec["hbm_bytes"] = float(hbm_bytes) if hbm_bytes is not None else None
+    rec["compile_seconds"] = (
+        float(compile_seconds) if compile_seconds is not None else None
+    )
+    rec["memory_peak_bytes"] = (
+        int(memory_peak_bytes) if memory_peak_bytes is not None else None
+    )
     return rec
 
 
@@ -269,12 +336,19 @@ def gate_record(
     trace_counts: dict | None = None,
     warm_wall_s: float | None,
     config: dict,
+    oracle_calls: dict | None = None,
+    compute_flops: float | None = None,
+    compile_seconds: float | None = None,
+    memory_peak_bytes: int | None = None,
 ) -> dict:
     """A benchmark gate row — the unit `repro.obs.report --gate` compares
     against the committed ``BENCH_async.json`` / ``BENCH_transport.json``
     baseline.  ``trace_counts`` is None for backends without a jit trace
     meter (the device transport's eager loop) — the gate then only pins
-    bytes and wall clock."""
+    bytes and wall clock.  Schema v3 adds the compute block:
+    ``oracle_calls`` (whole run, all nodes) and ``compute_flops`` are
+    exact gate checks; ``compile_seconds`` / ``memory_peak_bytes`` are
+    advisory (machine facts, reported but never failed on)."""
     return {
         "schema": SCHEMA_VERSION,
         "kind": "gate",
@@ -286,6 +360,19 @@ def gate_record(
         ),
         "warm_wall_s": float(warm_wall_s) if warm_wall_s is not None else None,
         "config": dict(config),
+        "oracle_calls": (
+            {k: int(v) for k, v in oracle_calls.items()}
+            if oracle_calls is not None else None
+        ),
+        "compute_flops": (
+            float(compute_flops) if compute_flops is not None else None
+        ),
+        "compile_seconds": (
+            float(compile_seconds) if compile_seconds is not None else None
+        ),
+        "memory_peak_bytes": (
+            int(memory_peak_bytes) if memory_peak_bytes is not None else None
+        ),
     }
 
 

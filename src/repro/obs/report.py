@@ -6,16 +6,21 @@ Three modes over the one record schema (`repro.obs.records`):
   errors, byte totals by stream, staleness, wall/sim time, heartbeats —
   plus a per-NODE table (schema-v2 ``kind="node"`` rows: each node's
   wire egress, final consensus distance, max age) when the run emitted
-  node-resolved records;
+  node-resolved records, the schema-v3 compute totals (oracle calls by
+  kind, FLOPs, compile/memory), and a bytes-AND-flops-to-target table
+  (``--target``) pricing what each engine spent — on both meters — to
+  reach a hypergradient-norm threshold;
 * ``report a.jsonl --diff b.jsonl``    field-for-field diff of the two
   runs' parity views (`parity_rows`) — machine-dependent fields excluded
   — plus wall-clock deltas reported informationally;
 * ``report run.jsonl --gate BENCH_async.json``   regression gate against
   the committed benchmark baseline: jit trace counts EXACT, wire bytes
-  EXACT, warm wall-clock within a machine-tolerant band
-  (``--wall-tol``, default 10x; ``--no-wall`` skips the wall check for
-  cross-machine use).  Exit code 1 on any failure — CI runs this after
-  the perf smoke so a byte or retrace regression fails the job.
+  EXACT, oracle calls and compute FLOPs EXACT (schema v3 — both are
+  claims about the algorithm), warm wall-clock within a machine-tolerant
+  band (``--wall-tol``, default 10x; ``--no-wall`` skips the wall check
+  for cross-machine use), compile seconds / memory peak advisory-only.
+  Exit code 1 on any failure — CI runs this after the perf smoke so a
+  byte, retrace, oracle-count or FLOPs regression fails the job.
 
 The gate compares ``kind="gate"`` records (emitted by
 ``benchmarks/bench_async.py`` / ``benchmarks/bench_transport.py`` at one
@@ -97,6 +102,36 @@ def summarize(records: list[dict]) -> str:
                 "  trace_counts         "
                 + "  ".join(f"{k}={v}" for k, v in sorted(tc.items()))
             )
+        # schema-v3 compute meter totals (absent on v1/v2 streams)
+        oc_total: dict[str, int] = {}
+        for r in rows:
+            for k, v in (r.get("oracle_calls") or {}).items():
+                oc_total[k] = oc_total.get(k, 0) + int(v)
+        if oc_total:
+            out.append(
+                "  oracle_calls         "
+                + "  ".join(f"{k}={v}" for k, v in sorted(oc_total.items()))
+            )
+        flops = [r.get("compute_flops") for r in rows]
+        if any(f is not None for f in flops):
+            out.append(
+                f"  compute_flops        "
+                f"{_fmt(sum(f for f in flops if f is not None))}"
+            )
+        hbm = [r.get("hbm_bytes") for r in rows]
+        if any(h is not None for h in hbm):
+            out.append(
+                f"  hbm_bytes            "
+                f"{_fmt(sum(h for h in hbm if h is not None))}"
+            )
+        comp = [r.get("compile_seconds") for r in rows]
+        comp = [c for c in comp if c is not None]
+        if comp:
+            out.append(f"  compile_seconds      {_fmt(sum(comp))}")
+        mems = [r.get("memory_peak_bytes") for r in rows]
+        mems = [mv for mv in mems if mv is not None]
+        if mems:
+            out.append(f"  memory_peak_bytes    {max(mems)}")
         nrows = [
             r for r in records
             if r.get("kind") == "node" and r.get("engine") == eng
@@ -140,8 +175,64 @@ def summarize(records: list[dict]) -> str:
             f"gate policy={r.get('policy')} wire_bytes={r.get('wire_bytes')} "
             f"traces={r.get('trace_counts')} "
             f"warm_wall_s={_fmt(r.get('warm_wall_s'))}"
+            + (
+                f" oracle_calls={r.get('oracle_calls')}"
+                f" compute_flops={_fmt(r.get('compute_flops'))}"
+                if r.get("oracle_calls") is not None else ""
+            )
         )
     return "\n".join(out) if out else "(no records)"
+
+
+def to_target_table(records: list[dict], target: float | None = None) -> str:
+    """The bytes-AND-flops-to-target table: what every engine spent on
+    BOTH meters — cumulative ``wire_bytes``, ``compute_flops`` and total
+    ``oracle_calls`` — up to the first round with ``hypergrad_norm <=
+    target``.  With no explicit target, the loosest final hypergradient
+    norm across engines is used so every engine reaches it (the paper's
+    comparison frame: communication and computation to one accuracy,
+    not per-round rates).  Empty string when no round records carry a
+    hypergradient norm."""
+    rounds = [r for r in records if r.get("kind") == "round"]
+    engines: dict[str, list[dict]] = {}
+    for r in rounds:
+        engines.setdefault(r.get("engine", "?"), []).append(r)
+    finals = []
+    for rows in engines.values():
+        rows.sort(key=lambda r: r.get("round", 0))
+        vals = [
+            r.get("hypergrad_norm") for r in rows
+            if r.get("hypergrad_norm") is not None
+        ]
+        if vals:
+            finals.append(vals[-1])
+    if not finals:
+        return ""
+    if target is None:
+        target = max(finals)
+    out = [
+        f"to-target (hypergrad_norm <= {target:g}):",
+        "  engine              rounds  wire_bytes    compute_flops  "
+        "oracle_calls",
+    ]
+    for eng, rows in sorted(engines.items()):
+        cum_b, cum_f, cum_oc = 0, 0.0, 0
+        hit = None
+        for i, r in enumerate(rows):
+            cum_b += int(r.get("wire_bytes") or 0)
+            f = r.get("compute_flops")
+            cum_f += float(f) if f is not None else 0.0
+            cum_oc += sum((r.get("oracle_calls") or {}).values())
+            h = r.get("hypergrad_norm")
+            if h is not None and h <= target:
+                hit = i + 1
+                break
+        status = str(hit) if hit is not None else f">{len(rows)}"
+        out.append(
+            f"  {eng:<19} {status:<7} {cum_b:<13} "
+            f"{_fmt(cum_f):<14} {cum_oc}"
+        )
+    return "\n".join(out)
 
 
 def diff(a: list[dict], b: list[dict]) -> tuple[str, bool]:
@@ -193,10 +284,12 @@ def gate(
     check_wall: bool = True,
 ) -> tuple[str, bool]:
     """Gate a run's ``kind="gate"`` records against the baseline file's
-    ``"gate"`` block.  Trace counts and wire bytes are EXACT checks —
-    they are claims about the algorithm and the compilation structure,
-    not the machine; warm wall-clock only fails outside
-    ``baseline * wall_tol``.  Returns (report, ok)."""
+    ``"gate"`` block.  Trace counts, wire bytes, oracle calls and
+    compute FLOPs are EXACT checks — they are claims about the algorithm
+    and the compilation structure, not the machine; warm wall-clock only
+    fails outside ``baseline * wall_tol``, and compile seconds / memory
+    peak are advisory (printed, never failed on).  Returns
+    (report, ok)."""
     out: list[str] = []
     ok = True
 
@@ -243,6 +336,31 @@ def gate(
             f"{r.get('wire_bytes')} vs baseline {base.get('wire_bytes')} "
             "(exact)",
         )
+        # schema-v3 compute block: oracle counts and FLOPs are exact
+        # claims about the algorithm/compilation; skipped entirely when
+        # NEITHER side recorded them (pre-v3 baseline + pre-v3 run)
+        base_oc, cand_oc = base.get("oracle_calls"), r.get("oracle_calls")
+        if base_oc is not None or cand_oc is not None:
+            check(
+                f"{policy}/oracle_calls",
+                cand_oc == base_oc,
+                f"{cand_oc} vs baseline {base_oc} (exact)",
+            )
+        base_cf, cand_cf = base.get("compute_flops"), r.get("compute_flops")
+        if base_cf is not None or cand_cf is not None:
+            check(
+                f"{policy}/compute_flops",
+                cand_cf == base_cf,
+                f"{_fmt(cand_cf)} vs baseline {_fmt(base_cf)} (exact)",
+            )
+        # machine facts: reported, never failed on
+        for adv in ("compile_seconds", "memory_peak_bytes"):
+            bv, cv = base.get(adv), r.get(adv)
+            if bv is not None or cv is not None:
+                out.append(
+                    f"[INFO] {policy}/{adv}: {_fmt(cv)} vs baseline "
+                    f"{_fmt(bv)} (advisory)"
+                )
         bw, cw = base.get("warm_wall_s"), r.get("warm_wall_s")
         if not check_wall:
             out.append(f"[SKIP] {policy}/warm_wall_s: --no-wall")
@@ -285,6 +403,12 @@ def main(argv: list[str] | None = None) -> int:
         help="skip the wall-clock band in --gate (bytes and trace "
         "counts only)",
     )
+    p.add_argument(
+        "--target", type=float, default=None,
+        help="hypergrad-norm threshold for the bytes-AND-flops-to-target "
+        "table (default: the loosest final norm across engines, so every "
+        "engine reaches it)",
+    )
     args = p.parse_args(argv)
 
     records = read_jsonl(args.jsonl)
@@ -302,6 +426,9 @@ def main(argv: list[str] | None = None) -> int:
         print(text)
         return 0 if ok else 1
     print(summarize(records))
+    table = to_target_table(records, target=args.target)
+    if table:
+        print(table)
     return 0
 
 

@@ -125,6 +125,50 @@ def node_lane_events(
     return out
 
 
+def flops_lane_events(
+    records: list[dict], pid: str = "compute"
+) -> list[dict]:
+    """Schema-v3 compute meter as Perfetto COUNTER lanes: one tid per
+    engine, cumulative ``compute_flops`` and cumulative total
+    ``oracle_calls`` sampled at the fleet round's cumulative simulated
+    seconds (round index when the run carries no sim clock) — the
+    compute twin of `node_lane_events`' wire-egress counters.  Runs
+    whose records predate schema v3 produce no events."""
+    out: list[dict] = []
+    cum_f: dict[str, float] = {}
+    cum_oc: dict[str, int] = {}
+    clock: dict[str, float] = {}
+    for r in sorted(
+        (r for r in records if r.get("kind") == "round"),
+        key=lambda r: (r.get("engine") or "", r.get("round") or 0),
+    ):
+        eng = r.get("engine") or "?"
+        sim = r.get("sim_seconds")
+        clock[eng] = clock.get(eng, 0.0) + (
+            float(sim) if sim is not None else 1.0
+        )
+        args: dict = {}
+        if r.get("compute_flops") is not None:
+            cum_f[eng] = cum_f.get(eng, 0.0) + float(r["compute_flops"])
+            args["compute_flops_cum"] = cum_f[eng]
+        if r.get("oracle_calls"):
+            cum_oc[eng] = cum_oc.get(eng, 0) + sum(
+                int(v) for v in r["oracle_calls"].values()
+            )
+            args["oracle_calls_cum"] = cum_oc[eng]
+        if args:
+            tid = f"{eng}/flops"
+            out.append(
+                {
+                    "name": tid, "ph": "C", "pid": pid, "tid": tid,
+                    "ts": clock[eng] * 1e6, "args": args,
+                }
+            )
+    if out:
+        out.append(_meta(pid, f"{pid} (FLOPs/oracles, simulated seconds)"))
+    return out
+
+
 def merged_chrome_trace(
     trace=None,
     spans: HostSpans | None = None,
@@ -138,7 +182,9 @@ def merged_chrome_trace(
     clocks are independent (both start at their own zero); the process
     names make which-is-which explicit in the UI.  ``node_records``
     (a record list holding schema-v2 ``kind="node"`` rows) adds per-node
-    counter lanes (`node_lane_events`) on the simulated clock."""
+    counter lanes (`node_lane_events`) on the simulated clock, plus the
+    schema-v3 FLOPs/oracle counter lanes (`flops_lane_events`) when the
+    same list's round rows carry the compute meter."""
     out: list[dict] = []
     if trace is not None:
         events = (
@@ -167,6 +213,7 @@ def merged_chrome_trace(
         out.append(_meta(host_pid, f"{host_pid} (wall seconds)"))
     if node_records:
         out.extend(node_lane_events(node_records))
+        out.extend(flops_lane_events(node_records))
     return out
 
 

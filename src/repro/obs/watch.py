@@ -13,8 +13,10 @@ Attach it to the telemetry stream either way the sinks can produce one:
 The screen redraws every ``--interval`` seconds with, per engine:
 consensus / hypergradient error, cumulative wire bytes split by stream,
 the accumulated staleness histogram, heartbeat liveness (how long since
-the scan last phoned home), and — schema v2 — a per-NODE table of
-consensus distance, cumulative egress and staleness.  ``--once`` renders
+the scan last phoned home), a schema-v2 per-NODE table of consensus
+distance, cumulative egress and staleness, and — schema v3 — the
+compute meter: cumulative FLOPs, per-kind oracle calls, compile seconds
+and memory high-water.  ``--once`` renders
 a single frame from whatever is already readable and exits (scripts,
 tests); ``--duration`` bounds the session (demos).
 
@@ -79,6 +81,10 @@ class _EngineView:
         self.heartbeat_at: float | None = None  # watcher clock
         self.nodes: dict[int, dict] = {}        # latest node row per node
         self.node_wire: dict[int, int] = {}     # cumulative egress
+        self.flops_total = 0.0                  # cumulative compute_flops
+        self.oracles: dict[str, int] = {}       # cumulative oracle calls
+        self.compile_s = 0.0                    # summed compile spans
+        self.mem_peak: int | None = None        # allocator high-water
 
 
 class WatchState:
@@ -118,6 +124,17 @@ class WatchState:
                     v.hist += [0] * (len(hist) - len(v.hist))
                 for i, c in enumerate(hist):
                     v.hist[i] += int(c)
+            # schema-v3 compute meter (absent on older streams)
+            if record.get("compute_flops") is not None:
+                v.flops_total += float(record["compute_flops"])
+            for k, n in (record.get("oracle_calls") or {}).items():
+                v.oracles[k] = v.oracles.get(k, 0) + int(n)
+            if record.get("compile_seconds") is not None:
+                v.compile_s += float(record["compile_seconds"])
+            if record.get("memory_peak_bytes") is not None:
+                v.mem_peak = max(
+                    v.mem_peak or 0, int(record["memory_peak_bytes"])
+                )
         elif kind == "node":
             v = self._view(record)
             i = int(record.get("node", -1))
@@ -191,6 +208,17 @@ class WatchState:
                 out.append(
                     f"  staleness hist {_sparkline(v.hist)} (max age {smax})"
                 )
+            if v.flops_total or v.oracles:
+                line = f"  compute {_fmt(v.flops_total)} flops"
+                if v.oracles:
+                    line += "   " + "  ".join(
+                        f"{k}={n}" for k, n in sorted(v.oracles.items())
+                    )
+                if v.compile_s:
+                    line += f"   compile={v.compile_s:.2f}s"
+                if v.mem_peak is not None:
+                    line += f"   mem_peak={_fmt_bytes(v.mem_peak)}"
+                out.append(line)
             if v.nodes:
                 out.append(
                     "  node   x_dist      wire_cum    stale(max/mean)"

@@ -138,6 +138,38 @@ def run_c2dfb_transport(
     outer_bytes = 2 * tree_count(state.x) * 4 * m
 
     keys = jax.random.split(key, T)
+    cost = mem0 = fleet_oracles = None
+    if obs is not None:
+        from repro.obs.compute import (
+            c2dfb_oracle_calls,
+            memory_peak_bytes,
+            round_cost,
+        )
+
+        # executed round body's trip-count-aware cost.  shard_map lowers
+        # one SPMD module, so the walked FLOPs cover the nodes resident
+        # on ONE device (= the whole fleet on the single-device test
+        # mesh).  Advisory by contract on this backend: None rather than
+        # a crash when a runtime's HLO defeats the walker — the device
+        # loop must keep executing either way.
+        try:
+            with obs.span("cost_analysis", engine="transport-device"):
+                cost = round_cost(
+                    (
+                        "c2dfb/device", id(problem), id(topo), cfg,
+                        id(transport.mesh), jit,
+                    ),
+                    round_fn,
+                    *parts, keys[0], data_f, data_g,
+                    expected_oracles=c2dfb_oracle_calls(cfg),
+                    label="c2dfb/device",
+                )
+        except Exception:
+            cost = None
+        fleet_oracles = {
+            k: v * m for k, v in c2dfb_oracle_calls(cfg).items()
+        }
+        mem0 = memory_peak_bytes()
     rows: list[dict] = []
     payload_log: list = []
     for t in range(T):
@@ -215,6 +247,14 @@ def run_c2dfb_transport(
                     "z": _stream("z/"),
                 },
                 wall_seconds=wall,
+                oracle_calls=fleet_oracles,
+                compute_flops=cost.flops if cost is not None else None,
+                hbm_bytes=cost.hbm_bytes if cost is not None else None,
+                compile_seconds=(
+                    cost.compile_seconds
+                    if t == 0 and cost is not None else None
+                ),
+                memory_peak_bytes=mem0 if t == 0 else None,
             )
             # schema-v2 node rows with EXECUTED codec truth per node:
             # node_bytes counts each message once at its sender (the
@@ -247,6 +287,9 @@ def run_c2dfb_transport(
                         "wire_bytes": deg[i] * nbytes,
                         "staleness_max": 0,
                         "staleness_mean": 0.0,
+                        "compute_flops": (
+                            cost.flops / m if cost is not None else None
+                        ),
                     },
                     bytes_by_stream=split,
                 )

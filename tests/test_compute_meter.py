@@ -1,0 +1,394 @@
+"""Compute meter acceptance suite (ISSUE 9): oracle counts, trip-count
+FLOPs and memory beside wire bytes on the telemetry spine.
+
+* closed-form oracle formulas: C2DFB prices {ul_grad: 3, ll_grad:
+  2(K+1), hvp: 0, jvp: 0} per node per round; MDBO's hvp count is its
+  Neumann length, MADSBO's is its HIGP subsolver length — and the
+  structural trace-time site counters agree kind-for-kind;
+* C2DFB stays hvp-free under EVERY async policy x version rule (the
+  paper's fully-first-order claim is a property of the oracle set, not
+  of one schedule);
+* eager / compiled / SimTransport price the SAME run identically:
+  `oracle_calls` and `compute_flops` agree row-for-row because all
+  three paths analyze one shared memoized round body;
+* schema-v3 partition: `compile_seconds` / `memory_peak_bytes` are
+  host facts stripped by `parity_view` exactly like `wall_seconds`,
+  while `oracle_calls` / `compute_flops` / `hbm_bytes` stay
+  parity-visible — and pre-v3 records produce unchanged parity views;
+* the report CLI gates `oracle_calls` / `compute_flops` exactly,
+  treats compile/memory as advisory, and renders the
+  bytes-AND-flops-to-target table; the timeline gains FLOPs counter
+  lanes.
+"""
+
+import itertools
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.async_gossip import run_async, run_baseline_async
+from repro.async_gossip.compiled import run_async_compiled
+from repro.core.baselines import MADSBOConfig, MDBOConfig
+from repro.core.c2dfb import C2DFBConfig, run
+from repro.core.topology import ring
+from repro.data.bilevel_tasks import coefficient_tuning_task
+from repro.net import make_fabric
+from repro.obs import (
+    COMPUTE_FIELDS,
+    NODE_FIELDS,
+    PARITY_EXCLUDED,
+    SCHEMA_VERSION,
+    JsonlSink,
+    MemorySink,
+    Obs,
+    c2dfb_oracle_calls,
+    check_structure,
+    gate_record,
+    madsbo_oracle_calls,
+    mdbo_oracle_calls,
+    oracle_calls_for,
+    oracle_trace_counts,
+    parity_rows,
+    parity_view,
+    record_oracle,
+    reset_oracle_trace_counts,
+    round_record,
+    structure_consistent,
+)
+from repro.obs.report import main as report_main
+from repro.obs.timeline import flops_lane_events
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def bundle():
+    return coefficient_tuning_task(m=4, n=80, p=12, c=3, h=0.5, seed=0)
+
+
+def _cfg():
+    return C2DFBConfig(
+        K=3, compressor="topk", comp_ratio=0.3, gamma_in=0.3, eta_in=0.3
+    )
+
+
+def _fabric(topo, **kw):
+    defaults = dict(
+        profile="geo", straggler="lognormal", sigma=0.8, compute_s=0.05,
+        seed=1,
+    )
+    defaults.update(kw)
+    return make_fabric(topo, **defaults)
+
+
+# ---------------------------------------------------------------------------
+# closed-form formulas + structural site counters
+# ---------------------------------------------------------------------------
+
+
+def test_closed_form_oracle_formulas():
+    c = c2dfb_oracle_calls(_cfg())
+    assert c == {"ul_grad": 3, "ll_grad": 8, "hvp": 0, "jvp": 0}
+    m = mdbo_oracle_calls(MDBOConfig(K=3, neumann_N=4))
+    assert m == {"ul_grad": 1, "ll_grad": 4, "hvp": 4, "jvp": 1}
+    a = madsbo_oracle_calls(MADSBOConfig(K=3, Q=5))
+    assert a == {"ul_grad": 1, "ll_grad": 4, "hvp": 5, "jvp": 1}
+    # fleet/run scaling is plain multiplication
+    fleet = oracle_calls_for("c2dfb", _cfg(), m=4, rounds=2)
+    assert fleet == {k: v * 8 for k, v in c.items()}
+    with pytest.raises(ValueError, match="no oracle formula"):
+        oracle_calls_for("nope", _cfg())
+
+
+def test_site_counters_and_structure_check():
+    reset_oracle_trace_counts()
+    record_oracle("ll_grad")
+    record_oracle("hvp", 3)
+    have = oracle_trace_counts()
+    assert have["ll_grad"] == 1 and have["hvp"] == 3
+    assert have.get("ul_grad", 0) == 0 and have.get("jvp", 0) == 0
+    with pytest.raises(ValueError, match="unknown oracle kind"):
+        record_oracle("grad_soup")
+    # structure = the zero/nonzero pattern, not the magnitudes
+    want = {"ul_grad": 0, "ll_grad": 99, "hvp": 1, "jvp": 0}
+    assert structure_consistent(want, have)
+    assert not structure_consistent({"ul_grad": 2, "ll_grad": 1,
+                                     "hvp": 1, "jvp": 0}, have)
+    with pytest.raises(ValueError, match="structurally"):
+        check_structure("x", {"ul_grad": 2, "ll_grad": 1, "hvp": 1,
+                              "jvp": 0}, have)
+    reset_oracle_trace_counts()
+
+
+# ---------------------------------------------------------------------------
+# schema-v3 parity partition
+# ---------------------------------------------------------------------------
+
+
+def test_parity_partition_pins_compute_split():
+    assert SCHEMA_VERSION == 3
+    assert COMPUTE_FIELDS == (
+        "compute_flops", "hbm_bytes", "compile_seconds",
+        "memory_peak_bytes",
+    )
+    # host facts stripped like wall_seconds; algorithmic meters visible
+    for host_fact in ("compile_seconds", "memory_peak_bytes",
+                      "wall_seconds"):
+        assert host_fact in PARITY_EXCLUDED
+    for meter in ("oracle_calls", "compute_flops", "hbm_bytes"):
+        assert meter not in PARITY_EXCLUDED
+    assert "compute_flops" in NODE_FIELDS
+
+    rec = round_record(
+        "sync", "r", 0, {"wire_bytes": 9},
+        oracle_calls={"ul_grad": 3, "ll_grad": 8, "hvp": 0, "jvp": 0},
+        compute_flops=100.0, hbm_bytes=50.0,
+        compile_seconds=1.5, memory_peak_bytes=1024,
+    )
+    assert rec["schema"] == 3
+    pv = parity_view(rec)
+    assert pv["compute_flops"] == 100.0 and pv["hbm_bytes"] == 50.0
+    assert pv["oracle_calls"]["ul_grad"] == 3
+    assert "compile_seconds" not in pv and "memory_peak_bytes" not in pv
+
+
+def test_pre_v3_records_parity_views_unchanged():
+    """A v1/v2 record (no compute keys at all) must produce exactly the
+    parity view it produced before the meter existed — v3 is additive."""
+    old = {
+        "kind": "round", "schema": 2, "run": "r", "engine": "sync",
+        "round": 0, "wire_bytes": 9, "hypergrad_norm": 0.1,
+        "wall_seconds": 0.01, "trace_counts": {"c2dfb_round": 1},
+    }
+    pv = parity_view(old)
+    assert pv == {"kind": "round", "schema": 2, "round": 0,
+                  "wire_bytes": 9, "hypergrad_norm": 0.1}
+
+
+# ---------------------------------------------------------------------------
+# every engine path prices compute per round
+# ---------------------------------------------------------------------------
+
+
+def test_sync_run_emits_compute_meter(bundle):
+    topo = ring(4)
+    cfg = _cfg()
+    sink = MemorySink()
+    run(bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=3, key=KEY,
+        obs=sink)
+    rows = sink.rows(kind="round")
+    assert len(rows) == 3
+    expected = oracle_calls_for("c2dfb", cfg, m=4)
+    for r in rows:
+        assert r["oracle_calls"] == expected
+        assert r["compute_flops"] > 0 and r["hbm_bytes"] > 0
+    # host facts only on round 0 (one lowering prices the whole run)
+    assert rows[0]["compile_seconds"] is not None
+    assert all(r["compile_seconds"] is None for r in rows[1:])
+    # per-node share: fleet FLOPs split evenly across the m nodes
+    nodes = sink.rows(kind="node")
+    assert nodes and all(
+        n["compute_flops"] == pytest.approx(rows[0]["compute_flops"] / 4)
+        for n in nodes
+    )
+
+
+@pytest.mark.parametrize(
+    "policy,bound,rule",
+    [(p, {"sync": 0, "bounded": 1, "full": 0}[p], r)
+     for p, r in itertools.product(
+         ("sync", "bounded", "full"),
+         ("common", "deterministic", "acked"))
+     # the scheduler rejects deterministic x full by contract (the full
+     # policy never waits, so k - S is not guaranteed held)
+     if not (p == "full" and r == "deterministic")],
+)
+def test_c2dfb_zero_hvp_every_policy_and_rule(bundle, policy, bound, rule):
+    """The fully-first-order claim as an invariant: no async schedule or
+    version protocol makes C2DFB touch a second-order oracle."""
+    topo = ring(4)
+    cfg = _cfg()
+    sink = MemorySink()
+    run_async(
+        bundle.problem, topo, cfg, bundle.x0, bundle.y0, 2, KEY,
+        _fabric(topo), policy=policy, bound=bound, version_rule=rule,
+        payload_bytes="analytic", obs=Obs(sink=sink, run="p"),
+    )
+    rows = sink.rows(kind="round")
+    assert len(rows) == 2
+    for r in rows:
+        assert r["oracle_calls"]["hvp"] == 0
+        assert r["oracle_calls"]["jvp"] == 0
+        assert r["oracle_calls"] == oracle_calls_for("c2dfb", cfg, m=4)
+
+
+def test_eager_compiled_transport_price_identically(bundle):
+    """One shared memoized round-body analysis -> the three execution
+    paths agree EXACTLY (not approximately) on oracle_calls and
+    compute_flops, row for row."""
+    from repro.transport import SimTransport
+
+    topo = ring(4)
+    cfg = _cfg()
+    kw = dict(policy="bounded", bound=1)
+    sinks = {k: MemorySink() for k in ("eager", "compiled", "transport")}
+    run_async(
+        bundle.problem, topo, cfg, bundle.x0, bundle.y0, 3, KEY,
+        _fabric(topo), payload_bytes="analytic",
+        obs=Obs(sink=sinks["eager"], run="e"), **kw,
+    )
+    run_async_compiled(
+        bundle.problem, topo, cfg, bundle.x0, bundle.y0, 3, KEY,
+        _fabric(topo), obs=Obs(sink=sinks["compiled"], run="c"), **kw,
+    )
+    run(bundle.problem, topo, cfg, bundle.x0, bundle.y0, T=3, key=KEY,
+        transport=SimTransport(_fabric(topo)), async_mode="bounded",
+        staleness_bound=1, compiled=True, obs=sinks["transport"])
+    meters = {
+        k: [(r["oracle_calls"], r["compute_flops"], r["hbm_bytes"])
+            for r in s.rows(kind="round")]
+        for k, s in sinks.items()
+    }
+    assert len(meters["eager"]) == 3
+    assert meters["eager"] == meters["compiled"] == meters["transport"]
+    assert all(f > 0 for _, f, _ in meters["eager"])
+
+
+@pytest.mark.parametrize("alg,cfg,hvp_each", [
+    ("mdbo", MDBOConfig(K=3, neumann_N=4), 4),
+    ("madsbo", MADSBOConfig(K=3, Q=5), 5),
+])
+def test_baselines_price_second_order_oracles(bundle, alg, cfg, hvp_each):
+    """MDBO/MADSBO are NOT hvp-free: their per-round hvp count equals the
+    Neumann / HIGP loop length, and eager == compiled exactly."""
+    topo = ring(4)
+    meters = {}
+    for compiled in (False, True):
+        sink = MemorySink()
+        run_baseline_async(
+            alg, bundle.problem, topo, cfg, bundle.x0, bundle.y0, 2,
+            _fabric(topo), policy="bounded", bound=1, compiled=compiled,
+            obs=Obs(sink=sink, run=alg),
+        )
+        rows = sink.rows(kind="round")
+        assert len(rows) == 2
+        for r in rows:
+            assert r["oracle_calls"]["hvp"] == hvp_each * 4  # per node x m
+            assert r["oracle_calls"]["jvp"] == 4
+            assert r["oracle_calls"] == oracle_calls_for(alg, cfg, m=4)
+        meters[compiled] = [
+            (r["oracle_calls"], r["compute_flops"]) for r in rows
+        ]
+    assert meters[False] == meters[True]
+
+
+# ---------------------------------------------------------------------------
+# report: exact compute gate, advisory host facts, to-target table
+# ---------------------------------------------------------------------------
+
+_OC = {"ul_grad": 36, "ll_grad": 96, "hvp": 0, "jvp": 0}
+
+
+def _write_gate_run(path, oracle_calls=_OC, flops=1000.0, compile_s=2.0):
+    with JsonlSink(str(path)) as sink:
+        for t in range(3):
+            sink.emit(round_record(
+                "async-compiled", "r", t,
+                {"wire_bytes": 100, "hypergrad_norm": 0.1,
+                 "sim_seconds": 0.5},
+                trace_counts={"compiled_scan": 1, "c2dfb_round": 1},
+                oracle_calls=oracle_calls, compute_flops=flops / 3,
+            ))
+        sink.emit(gate_record(
+            "r", "bounded1", wire_bytes=300,
+            trace_counts={"compiled_scan": 1, "c2dfb_round": 1},
+            warm_wall_s=0.05, config={"m": 6, "T": 12},
+            oracle_calls=oracle_calls, compute_flops=flops,
+            compile_seconds=compile_s, memory_peak_bytes=None,
+        ))
+
+
+def _gate_baseline(path, oracle_calls=_OC, flops=1000.0, compile_s=9.0):
+    payload = {"gate": {
+        "config": {"m": 6, "T": 12},
+        "policies": {"bounded1": {
+            "wire_bytes": 300,
+            "trace_counts": {"compiled_scan": 1, "c2dfb_round": 1},
+            "warm_wall_s": 0.05,
+            "oracle_calls": oracle_calls, "compute_flops": flops,
+            "compile_seconds": compile_s, "memory_peak_bytes": None,
+        }},
+    }}
+    path.write_text(json.dumps(payload))
+
+
+def test_report_gates_compute_exactly(tmp_path, capsys):
+    runp = tmp_path / "run.jsonl"
+    _write_gate_run(runp)
+
+    good = tmp_path / "good.json"
+    _gate_baseline(good)  # compile_seconds differs: advisory, not a FAIL
+    assert report_main([str(runp), "--gate", str(good)]) == 0
+    out = capsys.readouterr().out
+    assert "oracle_calls" in out and "compute_flops" in out
+    assert "[INFO] bounded1/compile_seconds" in out
+
+    # FLOPs drift is an exact failure, like wire bytes
+    bad_f = tmp_path / "bad_flops.json"
+    _gate_baseline(bad_f, flops=1001.0)
+    assert report_main([str(runp), "--gate", str(bad_f)]) == 1
+    assert "compute_flops" in capsys.readouterr().out
+
+    # an oracle-mix drift (e.g. an hvp sneaking into C2DFB) fails
+    bad_oc = tmp_path / "bad_oc.json"
+    _gate_baseline(bad_oc, oracle_calls=dict(_OC, hvp=1))
+    assert report_main([str(runp), "--gate", str(bad_oc)]) == 1
+    assert "oracle_calls" in capsys.readouterr().out
+
+
+def test_report_gate_one_sided_compute_fails(tmp_path, capsys):
+    """A baseline WITH the compute block vs a run without it (or vice
+    versa) is a mismatch, not a silent skip — only pre-v3 on BOTH sides
+    skips the check."""
+    runp = tmp_path / "run.jsonl"
+    with JsonlSink(str(runp)) as sink:
+        sink.emit(gate_record(
+            "r", "bounded1", wire_bytes=300,
+            trace_counts={"compiled_scan": 1, "c2dfb_round": 1},
+            warm_wall_s=0.05, config={"m": 6, "T": 12},
+        ))
+    base = tmp_path / "base.json"
+    _gate_baseline(base)
+    assert report_main([str(runp), "--gate", str(base)]) == 1
+    assert "oracle_calls" in capsys.readouterr().out
+
+
+def test_to_target_table_and_flops_lanes(tmp_path, capsys, bundle):
+    topo = ring(4)
+    sink = MemorySink()
+    run(bundle.problem, topo, _cfg(), bundle.x0, bundle.y0, T=3, key=KEY,
+        obs=sink)
+    path = tmp_path / "run.jsonl"
+    with JsonlSink(str(path)) as jl:
+        for r in sink.records:
+            jl.emit(r)
+    assert report_main([str(path)]) == 0
+    out = capsys.readouterr().out
+    assert "to-target" in out and "compute_flops" in out
+
+    lanes = flops_lane_events(sink.records)
+    counters = [e for e in lanes if e.get("ph") == "C"]
+    assert len(counters) == 3
+    # cumulative: last sample carries 3x the per-round FLOPs
+    per_round = sink.rows(kind="round")[0]["compute_flops"]
+    assert counters[-1]["args"]["compute_flops_cum"] == pytest.approx(
+        3 * per_round
+    )
+    assert counters[-1]["args"]["oracle_calls_cum"] == 3 * sum(
+        oracle_calls_for("c2dfb", _cfg(), m=4).values()
+    )
+    # pre-v3 records -> no lanes, no crash
+    assert flops_lane_events([{"kind": "round", "engine": "sync",
+                               "round": 0, "wire_bytes": 5}]) == []

@@ -33,6 +33,7 @@ from repro.core.topology import ring
 from repro.data.bilevel_tasks import coefficient_tuning_task
 from repro.net import make_fabric
 from repro.obs import (
+    SCHEMA_VERSION,
     MemorySink,
     Obs,
     SocketSink,
@@ -230,7 +231,7 @@ def test_node_record_schema_and_lane_events():
          "wire_bytes": 80, "staleness_max": 2, "staleness_mean": 0.5},
         bytes_by_stream={"outer": 10, "y": 15, "z": 15},
     )
-    assert rec["schema"] == 2 and rec["kind"] == "node"
+    assert rec["schema"] == SCHEMA_VERSION and rec["kind"] == "node"
     assert rec["node"] == 2 and isinstance(rec["node"], int)
     assert rec["x_dist"] == 0.5 and rec["node_bytes"] == 40
     assert rec["bytes_by_stream"] == {"outer": 10, "y": 15, "z": 15}
