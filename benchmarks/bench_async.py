@@ -50,7 +50,7 @@ and gate row through `repro.obs` (then
 regression gate CI fails on); ``--trace-out`` adds the merged Perfetto
 timeline.  Suite-only runs never touch the baseline file.
 
-    PYTHONPATH=src python benchmarks/bench_async.py [--smoke] [--full] [--adaptive] [--compiled] [--compiled-only] [--out PATH] [--jsonl PATH] [--trace-out PATH]
+    PYTHONPATH=src python benchmarks/bench_async.py [--smoke] [--full] [--adaptive] [--compiled] [--compiled-only] [--out PATH] [--jsonl PATH] [--trace-out PATH] [--suite-trace-out PATH]
     PYTHONPATH=src python -m benchmarks.run --only async
 """
 
@@ -106,6 +106,8 @@ ADAPTIVE_POLICIES = [
     ("full_expdecay", "full", 0, "exp-decay"),
 ]
 
+#: suggested --suite-trace-out path (the CI artifact name); the suite
+#: trace is OPT-IN — nothing is written without the flag
 TRACE_PATH = "bench_async_trace.json"
 BENCH_PATH = "BENCH_async.json"
 
@@ -130,7 +132,8 @@ def _task(smoke: bool, comm_bound: bool = False):
     return m, K, bundle, ring(m)
 
 
-def run_suite(fast: bool = True, smoke: bool = False, adaptive: bool = False):
+def run_suite(fast: bool = True, smoke: bool = False, adaptive: bool = False,
+              trace_path: str | None = None):
     T = 3 if smoke else (8 if fast else 20)
     m, K, bundle, topo = _task(smoke)
     # gamma_in: with the adaptive axis on, run at the LARGE mixing step the
@@ -188,18 +191,21 @@ def run_suite(fast: bool = True, smoke: bool = False, adaptive: bool = False):
             if tr is not None:
                 trace_out[label] = tr.to_chrome_trace()
 
-    with open(TRACE_PATH, "w") as fh:
-        json.dump(
-            # one merged chrome trace; policies offset into named lanes by
-            # prefixing pids so they don't overlap
-            [
-                {**ev, "pid": f"{pol}/{ev['pid']}"}
-                for pol, evs in trace_out.items()
-                for ev in evs
-            ],
-            fh,
-        )
-    print(f"# chrome trace: {TRACE_PATH}", flush=True)
+    if trace_path is not None:
+        # opt-in only (--suite-trace-out): benchmark artifacts land solely
+        # at caller-routed paths, never as strays in the working directory
+        with open(trace_path, "w") as fh:
+            json.dump(
+                # one merged chrome trace; policies offset into named lanes
+                # by prefixing pids so they don't overlap
+                [
+                    {**ev, "pid": f"{pol}/{ev['pid']}"}
+                    for pol, evs in trace_out.items()
+                    for ev in evs
+                ],
+                fh,
+            )
+        print(f"# chrome trace: {trace_path}", flush=True)
     return rows
 
 
@@ -619,6 +625,10 @@ def main() -> None:
                     help="with --jsonl: export the merged Perfetto "
                          "timeline (simulated fabric lanes + host "
                          "compile/scan spans) of the gate's bounded run")
+    ap.add_argument("--suite-trace-out", default=None, metavar="PATH",
+                    help="write the eager suite's merged Chrome trace "
+                         "(geo_straggler lanes per policy) to this path — "
+                         f"opt-in; CI uses {TRACE_PATH}")
     args = ap.parse_args()
     compiled = args.compiled or args.compiled_only
     obs = None
@@ -637,7 +647,8 @@ def main() -> None:
     }
     if not args.compiled_only:
         payload["suite"] = run_suite(
-            fast=not args.full, smoke=args.smoke, adaptive=args.adaptive
+            fast=not args.full, smoke=args.smoke, adaptive=args.adaptive,
+            trace_path=args.suite_trace_out,
         )
     if compiled:
         payload["compiled_axis"] = run_compiled_axis(

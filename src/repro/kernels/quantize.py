@@ -35,10 +35,22 @@ def _quant_kernel(x_ref, u_ref, o_ref, s_ref, *, bits: int):
     s_ref[...] = jnp.broadcast_to(scale, s_ref.shape)
 
 
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
 @functools.partial(jax.jit, static_argnames=("bits", "block", "interpret"))
 def quantize_pallas(
-    x2d: jnp.ndarray, u2d: jnp.ndarray, bits: int, block: int, interpret: bool = True
+    x2d: jnp.ndarray,
+    u2d: jnp.ndarray,
+    bits: int,
+    block: int,
+    interpret: bool | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """``interpret=None`` auto-detects: compiled on TPU, interpreter mode
+    elsewhere (matching `pack_residuals` / `kernels.ops`)."""
+    if interpret is None:
+        interpret = not _on_tpu()
     nb = x2d.shape[0]
     assert x2d.shape[1] == block and block % 128 == 0
     pad = (-nb) % BLOCK_ROWS

@@ -45,11 +45,19 @@ def _topk_kernel(x_ref, o_ref, *, k: int):
     o_ref[...] = x * mask.astype(x.dtype)
 
 
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
 @functools.partial(jax.jit, static_argnames=("k", "block", "interpret"))
 def block_topk_pallas(
-    x2d: jnp.ndarray, k: int, block: int, interpret: bool = True
+    x2d: jnp.ndarray, k: int, block: int, interpret: bool | None = None
 ) -> jnp.ndarray:
-    """x2d: (nb, block) residual blocks; keeps ~k per row by magnitude."""
+    """x2d: (nb, block) residual blocks; keeps ~k per row by magnitude.
+    ``interpret=None`` auto-detects: compiled on TPU, interpreter mode
+    elsewhere (matching `pack_residuals` / `kernels.ops`)."""
+    if interpret is None:
+        interpret = not _on_tpu()
     nb = x2d.shape[0]
     assert x2d.shape[1] == block and block % 128 == 0, (x2d.shape, block)
     pad = (-nb) % BLOCK_ROWS

@@ -352,6 +352,100 @@ def measure_tree_bytes_chunked(
 
 
 # ---------------------------------------------------------------------------
+# packed-record fast path (fused on-device compression, no dense tree)
+# ---------------------------------------------------------------------------
+
+
+def encode_packed_records_chunked(
+    vals_list: list[np.ndarray],
+    idx_list: list[np.ndarray],
+    leaf_sizes: list[int],
+    block: int,
+    chunk: int = 1 << 16,
+) -> list[bytes]:
+    """Chunked sparse wire payloads built DIRECTLY from the Pallas pack
+    kernel's ``(vals, idx)`` records — the fused `DeviceTransport` path,
+    where the dense residual tree never exists on the host.
+
+    ``vals_list`` / ``idx_list`` hold one ``(nb, kpad)`` record pair per
+    leaf (f32 values, i32 per-block lane ids, sentinel ``idx == block``
+    past a block's nnz); ``leaf_sizes`` are the UNPADDED flat sizes in
+    `jax.tree` leaf order.  Per-block lane ids are globalized into the
+    flattened-tree f32 stream, sorted ascending, and split at ``chunk``
+    boundaries into exactly the payloads
+    ``BlockSparseCodec.encode_tree_chunked`` would emit over the dense
+    tree — BYTE-IDENTICAL (both are the ascending nonzero records of each
+    chunk under the same ``_HDR_S`` header; pinned in
+    tests/test_lm_transport.py), so executed fused bytes still equal
+    `measure_tree_bytes_chunked` exactly."""
+    if chunk <= 0:
+        raise ValueError(f"chunk must be positive, got {chunk}")
+    if not (len(vals_list) == len(idx_list) == len(leaf_sizes)):
+        raise ValueError("vals/idx/leaf_sizes must align leaf-for-leaf")
+    gidx_all, vals_all = [], []
+    off = 0
+    for vals, idx, d in zip(vals_list, idx_list, leaf_sizes):
+        vals = np.asarray(vals, np.float32)
+        idx = np.asarray(idx)
+        nb = vals.shape[0]
+        valid = idx < block
+        g = (idx + block * np.arange(nb, dtype=np.int64)[:, None])[valid]
+        v = vals[valid]
+        # drop tile padding past the leaf's true size (defensive: the pad
+        # region is zeros, so the pack kernel never emits records there)
+        keep = g < d
+        gidx_all.append(off + g[keep])
+        vals_all.append(v[keep])
+        off += int(d)
+    total = off
+    gidx = (
+        np.concatenate(gidx_all) if gidx_all else np.zeros(0, np.int64)
+    )
+    vals = (
+        np.concatenate(vals_all) if vals_all else np.zeros(0, np.float32)
+    )
+    order = np.argsort(gidx, kind="stable")
+    gidx, vals = gidx[order], vals[order]
+    payloads = []
+    for coff in range(0, total, chunk):
+        dc = min(chunk, total - coff)
+        lo = int(np.searchsorted(gidx, coff, "left"))
+        hi = int(np.searchsorted(gidx, coff + dc, "left"))
+        local = (gidx[lo:hi] - coff).astype(np.uint32)
+        payloads.append(
+            _HDR_S.pack(b"S", dc, hi - lo)
+            + local.tobytes()
+            + vals[lo:hi].astype(np.float32).tobytes()
+        )
+    return payloads
+
+
+def scatter_packed_records(
+    vals_list: list[np.ndarray],
+    idx_list: list[np.ndarray],
+    leaf_sizes: list[int],
+    block: int,
+) -> np.ndarray:
+    """Host oracle for the packed form: scatter ``(vals, idx)`` records to
+    the flattened-tree f32 stream (what a receiver reconstructs) — the
+    verification reference `DeviceTransport` checks decoded chunks
+    against in fused mode."""
+    out = np.zeros(int(sum(leaf_sizes)), np.float32)
+    off = 0
+    for vals, idx, d in zip(vals_list, idx_list, leaf_sizes):
+        vals = np.asarray(vals, np.float32)
+        idx = np.asarray(idx)
+        nb = vals.shape[0]
+        valid = idx < block
+        g = (idx + block * np.arange(nb, dtype=np.int64)[:, None])[valid]
+        v = vals[valid]
+        keep = g < d
+        out[off + g[keep]] = v[keep]
+        off += int(d)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # jit-compatible byte counting (exact per-message bytes inside lax.scan)
 # ---------------------------------------------------------------------------
 

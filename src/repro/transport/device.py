@@ -52,6 +52,12 @@ from repro.core.compression import Compressor
 from repro.core.inner_loop import InnerState, refresh_tracker
 from repro.core.topology import Topology
 from repro.core.types import Pytree
+from repro.kernels.pack_residuals import (
+    pack_sparse_blocks,
+    padded_k,
+    unpack_sparse_blocks,
+)
+from repro.net import wire
 from repro.net.fabric import NetworkFabric, StragglerModel
 from repro.net.wire import codec_for
 from repro.transport.base import ExchangeReport, Transport
@@ -86,6 +92,71 @@ def _compress_rank(
         node_keys = jax.random.split(k, m)
         out.append(compressor(node_keys[rank], leaf[0])[None])
     return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# fused on-device compression: packed (vals, idx) record form on the wire
+# ---------------------------------------------------------------------------
+
+
+def fused_pack_spec(compressor: Compressor) -> tuple[int, int]:
+    """(block, kpad) of the fused packed exchange, or raise for compressors
+    whose residuals are not block-sparse tiles.  ``kpad`` is the per-block
+    record budget (k rounded up to the 128-lane boundary), so the packed
+    form moves ``nb * kpad * 8`` bytes per leaf where the dense tile form
+    moves ``nb * block * 4`` — a 2*kpad/block exchange-size ratio."""
+    if not isinstance(compressor, (C.BlockTopK, C.KernelBlockTopK)):
+        raise ValueError(
+            "fused on-device compression needs a block-sparse compressor "
+            "(block_topk / kernel_topk) whose survivors fit the packed "
+            f"(vals, idx) record form; got {type(compressor).__name__}"
+        )
+    block = compressor.block
+    k = max(1, int(round(compressor.ratio * block)))
+    return block, padded_k(k)
+
+
+def _pack_tree(tree: Pytree, block: int, kpad: int) -> tuple[Pytree, Pytree]:
+    """Per-rank residual tree (leaves (1, *shape)) -> packed record trees
+    ``(vals, idx)`` with leaves (1, nb, kpad) — the Pallas pack kernel run
+    ON-DEVICE inside shard_map, so the wire collectives move records, never
+    dense tiles."""
+    leaves, treedef = jax.tree.flatten(tree)
+    vs, ix = [], []
+    for leaf in leaves:
+        flat = leaf[0].reshape(-1).astype(jnp.float32)
+        d = flat.shape[0]
+        nb = -(-d // block)
+        tiles = jnp.pad(flat, (0, nb * block - d)).reshape(nb, block)
+        vals, idx = pack_sparse_blocks(tiles, k=kpad, block=block)
+        vs.append(vals[None])
+        ix.append(idx[None])
+    return jax.tree.unflatten(treedef, vs), jax.tree.unflatten(treedef, ix)
+
+
+def _unpack_like(
+    vals_tree: Pytree, idx_tree: Pytree, like: Pytree, block: int
+) -> Pytree:
+    """Inverse of `_pack_tree` against a shape/dtype template: packed
+    leaves (..., nb, kpad) -> dense leaves shaped/typed like ``like``
+    (leading node axis preserved).  Bit-exact for <= kpad survivors per
+    block: the one-hot f32 routing moves values untouched, and
+    f32 -> leaf-dtype is exact for values that started in that dtype."""
+
+    def leaf(v, i, l):
+        nb, kpad = v.shape[-2:]
+        lead = int(np.prod(l.shape[:1]))
+        d = int(np.prod(l.shape[1:]))
+        dense = unpack_sparse_blocks(
+            v.reshape(-1, kpad), i.reshape(-1, kpad), block
+        )
+        return (
+            dense.reshape(lead, nb * block)[:, :d]
+            .reshape(l.shape)
+            .astype(l.dtype)
+        )
+
+    return jax.tree.map(leaf, vals_tree, idx_tree, like)
 
 
 # ---------------------------------------------------------------------------
@@ -133,6 +204,19 @@ class _PpermuteGossiper:
             for (s, _), c in zip(self.schedule, copies)
         )
 
+    def push_packed(self, copies: tuple, packed, block: int) -> tuple:
+        """Fused push: `lax.ppermute` moves the packed (vals, idx) records
+        — nb*kpad*8 bytes per leaf, not the nb*block*4 dense tile — and
+        each receiver unpacks on its own device."""
+        vals_t, idx_t = packed
+        out = []
+        for (s, _), c in zip(self.schedule, copies):
+            q = _unpack_like(
+                self._shift(vals_t, s), self._shift(idx_t, s), c, block
+            )
+            out.append(jax.tree.map(jnp.add, c, q))
+        return tuple(out)
+
 
 class _AllGatherGossiper:
     """General-graph fallback: rank r keeps the full reference table
@@ -166,6 +250,15 @@ class _AllGatherGossiper:
     def push(self, table: Pytree, q_own: Pytree) -> Pytree:
         return jax.tree.map(jnp.add, table, self._gather(q_own))
 
+    def push_packed(self, table: Pytree, packed, block: int) -> Pytree:
+        """Fused push: `lax.all_gather` moves packed (vals, idx) records;
+        the (m, nb, kpad) record table is unpacked locally per rank."""
+        vals_t, idx_t = packed
+        q = _unpack_like(
+            self._gather(vals_t), self._gather(idx_t), table, block
+        )
+        return jax.tree.map(jnp.add, table, q)
+
 
 def _gossiper(topo: Topology, axis: str):
     if topo.ppermute_schedule is not None:
@@ -189,15 +282,35 @@ def _device_inner_loop(
     K: int,
     rank,
     m: int,
+    fused: tuple[int, int] | None = None,
 ):
     """Algorithm 2 on one rank (axis-1 slices): K compressed-GT steps where
     the reference mixing reads neighbor COPIES and each step's residual
     broadcast is a real collective.  Mirrors `inner_loop.inner_loop`'s scan
     body step-for-step (same key splits, same update order) — keep the two
     in lockstep.  Returns the state and the per-step payload stacks
-    ``(q_d, q_s)`` (leaves (K, 1, ...)) for host-side wire metering."""
+    ``(q_d, q_s)`` (leaves (K, 1, ...)) for host-side wire metering.
+
+    With ``fused=(block, kpad)`` each residual is packed ON-DEVICE into
+    (vals, idx) records (`_pack_tree`) right after compression: the gossip
+    collectives move only the records, every receiver (and the sender's
+    own reference update) applies the unpacked form — bit-exact with the
+    dense path for <= kpad survivors per block — and the payload stacks
+    are the packed pairs, so the dense residual tree never exists on the
+    host."""
     copies_d = gossip.init(state.d_hat)
     copies_s = gossip.init(state.s_hat)
+
+    def broadcast(copies, q):
+        """Pack-and-push one compressed residual; returns (copies, applied
+        residual, wire payload)."""
+        if fused is None:
+            return gossip.push(copies, q), q, q
+        block, kpad = fused
+        packed = _pack_tree(q, block, kpad)
+        copies = gossip.push_packed(copies, packed, block)
+        q_eff = _unpack_like(*packed, q, block)
+        return copies, q_eff, packed
 
     def body(carry, k):
         st, cd, cs = carry
@@ -211,7 +324,7 @@ def _device_inner_loop(
             compressor, kd, jax.tree.map(jnp.subtract, d_new, st.d_hat),
             rank, m,
         )
-        cd = gossip.push(cd, q_d)
+        cd, q_d, pay_d = broadcast(cd, q_d)
         d_hat_new = jax.tree.map(jnp.add, st.d_hat, q_d)
 
         g_new = grad_fn(d_new)
@@ -224,13 +337,13 @@ def _device_inner_loop(
             compressor, ks, jax.tree.map(jnp.subtract, s_new, st.s_hat),
             rank, m,
         )
-        cs = gossip.push(cs, q_s)
+        cs, q_s, pay_s = broadcast(cs, q_s)
         s_hat_new = jax.tree.map(jnp.add, st.s_hat, q_s)
 
         st = InnerState(
             d=d_new, d_hat=d_hat_new, s=s_new, s_hat=s_hat_new, g_prev=g_new
         )
-        return (st, cd, cs), (q_d, q_s)
+        return (st, cd, cs), (pay_d, pay_s)
 
     keys = jax.random.split(key, K)
     (state, _, _), payloads = jax.lax.scan(
@@ -246,15 +359,24 @@ def make_device_round(
     mesh: Mesh,
     axis: str = "nodes",
     jit: bool = True,
+    fused: bool = False,
 ):
     """Build the jitted multi-device C2DFB round: a `shard_map` over
     ``axis`` running `c2dfb.c2dfb_round_core`'s update order with every
     gossip exchange executed as a collective.  Returns
     ``fn(x, s_x, u_prev, inner_y, inner_z, key, data_f, data_g) ->
     (x, s_x, u_new, inner_y, inner_z, (q_y, q_z))`` on node-stacked trees;
-    the payload stacks carry every inner message for wire metering."""
+    the payload stacks carry every inner message for wire metering.
+
+    ``fused=True`` (block-sparse compressors only) fuses the Pallas pack
+    kernel into the exchange: inner residuals are compressed AND packed to
+    (vals, idx) records on-device, the collectives move the records, and
+    the payload stacks are ``((vals, idx), ...)`` pairs with leaves
+    (K, m, nb, kpad) — metered via `wire.encode_packed_records_chunked`
+    without ever materializing the dense tree on the host."""
     m = topo.m
     compressor = cfg.make_compressor()
+    pack_spec = fused_pack_spec(compressor) if fused else None
     gossip = _gossiper(topo, axis)
 
     def per_rank(x, s_x, u_prev, inner_y, inner_z, key, data_f, data_g):
@@ -280,11 +402,11 @@ def make_device_round(
         inner_z = refresh_tracker(inner_z, gz)
         inner_y, q_y = _device_inner_loop(
             inner_y, ky, gy, gossip, compressor, cfg.gamma_in, cfg.eta_in_y,
-            cfg.K, rank, m,
+            cfg.K, rank, m, fused=pack_spec,
         )
         inner_z, q_z = _device_inner_loop(
             inner_z, kz, gz, gossip, compressor, cfg.gamma_in, cfg.eta_in,
-            cfg.K, rank, m,
+            cfg.K, rank, m, fused=pack_spec,
         )
 
         # ---- hypergradient + tracker update ------------------------------
@@ -327,6 +449,16 @@ class DeviceTransport(Transport):
     verify     : check decode(encode(payload)) message-for-message
                  (bit-exact; KernelQuant to 1 ulp).  Leave on — it is the
                  deployment-correctness assertion of the backend.
+    fused      : run the FUSED round (`make_device_round(fused=True)`):
+                 inner residuals are compressed + packed to (vals, idx)
+                 records on-device and the collectives move the records —
+                 block-sparse compressors only.  Implies chunked metering
+                 (``chunk`` defaults to 1 << 16).
+    chunk      : when set, wire-meter every message with the CHUNKED tree
+                 codec (`wire.encode_tree_chunked` — per-chunk headers, the
+                 LM-scale format); executed bytes then equal
+                 `wire.measure_tree_bytes_chunked` exactly.  None keeps the
+                 per-leaf format of `wire.measure_tree_bytes`.
     """
 
     def __init__(
@@ -339,11 +471,19 @@ class DeviceTransport(Transport):
         trace=None,
         axis: str = "nodes",
         verify: bool = True,
+        fused: bool = False,
+        chunk: int | None = None,
         **straggler_kw,
     ):
         self.mesh = mesh
         self.axis = axis if mesh is None else mesh.axis_names[0]
         self.verify = verify
+        if fused and chunk is None:
+            chunk = 1 << 16
+        if chunk is not None and chunk <= 0:
+            raise ValueError(f"chunk must be positive, got {chunk}")
+        self.fused = fused
+        self.chunk = chunk
         self._link = link
         if isinstance(straggler, str):
             straggler = StragglerModel(kind=straggler, **straggler_kw)
@@ -475,6 +615,71 @@ class DeviceTransport(Transport):
             label=label,
         )
 
+    def _roundtrip_chunked(
+        self, payload: Pytree, compressor: Compressor | None
+    ) -> tuple:
+        """Chunked twin of `_roundtrip`: encode -> decode each node's
+        message with `wire.encode_tree_chunked` (per-chunk headers, the
+        LM-scale format) and verify the decoded stream bit-exactly.
+        Returns per-node executed bytes (== `measure_tree_bytes_chunked`
+        of each slice by construction)."""
+        comp = compressor if compressor is not None else C.Identity()
+        codec = codec_for(comp)
+        node_bytes = []
+        leaves = [np.asarray(l) for l in jax.tree.leaves(payload)]
+        m = leaves[0].shape[0]
+        for i in range(m):
+            slc = [a[i] for a in leaves]
+            payloads = codec.encode_tree_chunked(slc, self.chunk)
+            node_bytes.append(sum(len(p) for p in payloads))
+            if self.verify:
+                dec = codec.decode_tree_chunked(payloads, slc)
+                sent = np.concatenate(
+                    [np.asarray(a, np.float32).reshape(-1) for a in slc]
+                )
+                got = np.concatenate(
+                    [np.asarray(a).reshape(-1) for a in dec]
+                )
+                if not np.array_equal(got, sent):
+                    raise AssertionError(
+                        f"chunked wire round-trip mismatch on node {i}: "
+                        "the executed payload did not survive "
+                        "encode->decode bit-exactly"
+                    )
+        return tuple(node_bytes)
+
+    def _packed_node_bytes(
+        self, vals_leaves, idx_leaves, k, leaf_sizes, block: int
+    ) -> tuple:
+        """Executed bytes of inner step ``k``'s per-node messages built
+        DIRECTLY from the on-device packed records — the fused path's
+        codec truth (byte-identical to chunked-encoding the dense tree,
+        which never exists on the host here)."""
+        chunk = self.chunk if self.chunk is not None else 1 << 16
+        m = vals_leaves[0].shape[1]
+        node_bytes = []
+        for i in range(m):
+            vlist = [v[k, i] for v in vals_leaves]
+            ilist = [ix[k, i] for ix in idx_leaves]
+            payloads = wire.encode_packed_records_chunked(
+                vlist, ilist, leaf_sizes, block, chunk
+            )
+            node_bytes.append(sum(len(p) for p in payloads))
+            if self.verify:
+                dec = np.concatenate(
+                    [wire.SparseCodec().decode(p) for p in payloads]
+                )
+                ref = wire.scatter_packed_records(
+                    vlist, ilist, leaf_sizes, block
+                )
+                if not np.array_equal(dec, ref):
+                    raise AssertionError(
+                        f"packed-record wire round-trip mismatch on node "
+                        f"{i}, inner step {k}: decoded chunks disagree "
+                        "with the scattered records"
+                    )
+        return tuple(node_bytes)
+
     # ------------------------------------------------------------------
     def meter_round(
         self,
@@ -482,6 +687,8 @@ class DeviceTransport(Transport):
         inner_stacks,
         compressor: Compressor,
         round_idx: int,
+        packed: bool = False,
+        inner_like: Pytree | None = None,
     ) -> dict:
         """Wire-account one executed round: run every message of the round
         through the codec round trip (verification included) and price the
@@ -492,7 +699,15 @@ class DeviceTransport(Transport):
         ``inner_stacks``: [(tag, (q_d, q_s) with (K, m, ...) leaves), ...].
         Returns {"sim_seconds", "wire_bytes", "node_bytes"} where
         ``node_bytes`` maps phase label -> per-node executed message bytes
-        (== `wire.measure_tree_bytes` per node slice, tested).
+        (== `wire.measure_tree_bytes` per node slice — or its chunked twin
+        when ``self.chunk`` is set — tested).
+
+        ``packed=True`` (the fused round): inner stacks are the on-device
+        packed ``((vals, idx), ...)`` record pairs with leaves
+        (K, m, nb, kpad); bytes come from
+        `wire.encode_packed_records_chunked` against ``inner_like`` (one
+        node's residual tree template supplying leaf sizes), byte-identical
+        to chunk-encoding the dense tree the records represent.
 
         Accounting note vs the sim backend: every byte here is codec
         truth, INCLUDING the dense outer broadcasts (DenseCodec pays a
@@ -505,20 +720,61 @@ class DeviceTransport(Transport):
         edges = self._edge_set(None)
         phases, labels, per_phase_nb = [], [], {}
 
-        def add_phase(label, tree, comp):
-            _, nb = self._roundtrip(tree, comp)
+        def add_phase(label, nb):
             phases.append({(i, j): nb[i] for (i, j) in edges})
             labels.append(label)
             per_phase_nb[label] = nb
 
+        def dense_nb(tree, comp):
+            if self.chunk is None:
+                _, nb = self._roundtrip(tree, comp)
+                return nb
+            return self._roundtrip_chunked(tree, comp)
+
         for label, tree in outer_payloads:
-            add_phase(label, tree, None)
-        for tag, (q_d, q_s) in inner_stacks:
-            K = jax.tree.leaves(q_d)[0].shape[0]
-            for k in range(K):
-                for name, stack in (("d", q_d), ("s", q_s)):
-                    step_tree = jax.tree.map(lambda v, k=k: v[k], stack)
-                    add_phase(f"{tag}/in{k}/{name}", step_tree, compressor)
+            add_phase(label, dense_nb(tree, None))
+        if packed:
+            if inner_like is None:
+                raise ValueError(
+                    "packed metering needs inner_like (one node's residual "
+                    "tree template) to recover leaf sizes"
+                )
+            block, _ = fused_pack_spec(compressor)
+            leaf_sizes = [
+                int(np.prod(np.shape(l)))
+                for l in jax.tree.leaves(inner_like)
+            ]
+            for tag, stacks in inner_stacks:
+                rec = {
+                    name: (
+                        [np.asarray(v) for v in jax.tree.leaves(vals_t)],
+                        [np.asarray(v) for v in jax.tree.leaves(idx_t)],
+                    )
+                    for name, (vals_t, idx_t) in (
+                        ("d", stacks[0]), ("s", stacks[1])
+                    )
+                }
+                K = rec["d"][0][0].shape[0]
+                for k in range(K):
+                    for name in ("d", "s"):
+                        vals_leaves, idx_leaves = rec[name]
+                        add_phase(
+                            f"{tag}/in{k}/{name}",
+                            self._packed_node_bytes(
+                                vals_leaves, idx_leaves, k, leaf_sizes,
+                                block,
+                            ),
+                        )
+        else:
+            for tag, (q_d, q_s) in inner_stacks:
+                K = jax.tree.leaves(q_d)[0].shape[0]
+                for k in range(K):
+                    for name, stack in (("d", q_d), ("s", q_s)):
+                        step_tree = jax.tree.map(lambda v, k=k: v[k], stack)
+                        add_phase(
+                            f"{tag}/in{k}/{name}",
+                            dense_nb(step_tree, compressor),
+                        )
         rep = self.fabric.simulate_round(phases, round_idx, labels=labels)
         return {
             "sim_seconds": rep["sim_seconds"],

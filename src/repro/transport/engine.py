@@ -122,8 +122,15 @@ def run_c2dfb_transport(
     obs = as_obs(obs)
     state = init_state(problem, cfg, x0, y0)
     compressor = cfg.make_compressor()
+    fused = transport.fused
     round_fn = make_device_round(
-        problem, topo, cfg, transport.mesh, transport.axis, jit=jit
+        problem, topo, cfg, transport.mesh, transport.axis, jit=jit,
+        fused=fused,
+    )
+    # one node's inner-residual template: leaf sizes for packed metering
+    inner_like = jax.tree.map(
+        lambda v: jax.ShapeDtypeStruct(v.shape[1:], v.dtype),
+        state.inner_y.d,
     )
     parts = (
         transport.shard(state.x),
@@ -149,20 +156,25 @@ def run_c2dfb_transport(
         # executed round body's trip-count-aware cost.  shard_map lowers
         # one SPMD module, so the walked FLOPs cover the nodes resident
         # on ONE device (= the whole fleet on the single-device test
-        # mesh).  Advisory by contract on this backend: None rather than
-        # a crash when a runtime's HLO defeats the walker — the device
-        # loop must keep executing either way.
+        # mesh).  The fused round is a DIFFERENT lowering (pack/unpack
+        # matmuls + record-sized collectives), so it gets its own cache
+        # key — LM device rows carry its compute_flops/hbm_bytes rather
+        # than inheriting the dense round's.  Advisory by contract on
+        # this backend: None rather than a crash when a runtime's HLO
+        # defeats the walker — the device loop must keep executing
+        # either way.
+        cost_label = "c2dfb/device-fused" if fused else "c2dfb/device"
         try:
             with obs.span("cost_analysis", engine="transport-device"):
                 cost = round_cost(
                     (
-                        "c2dfb/device", id(problem), id(topo), cfg,
-                        id(transport.mesh), jit,
+                        cost_label, id(problem), id(topo), cfg,
+                        id(transport.mesh), jit, fused, transport.chunk,
                     ),
                     round_fn,
                     *parts, keys[0], data_f, data_g,
                     expected_oracles=c2dfb_oracle_calls(cfg),
-                    label="c2dfb/device",
+                    label=cost_label,
                 )
         except Exception:
             cost = None
@@ -182,12 +194,16 @@ def run_c2dfb_transport(
         wall = time.perf_counter() - t0
         parts = (x, s_x, u_new, inner_y, inner_z)
 
+        t1 = time.perf_counter()
         rep = transport.meter_round(
             [("out/x", x_prev), ("out/s_x", s_prev)],
             [("y", q_y), ("z", q_z)],
             compressor,
             t,
+            packed=fused,
+            inner_like=inner_like if fused else None,
         )
+        meter_wall = time.perf_counter() - t1
         row = {
             "hypergrad_norm": np.sqrt(
                 float(tree_sq_norm(node_mean(u_new)))
@@ -216,6 +232,10 @@ def run_c2dfb_transport(
             "wire_bytes": int(rep["wire_bytes"]),
             "sim_seconds": float(rep["sim_seconds"]),
             "wall_seconds": wall,
+            # host wire-metering wall (codec encode/verify of every
+            # message) — the round's OTHER cost axis: the fused packed
+            # path pays record assembly here instead of host compression
+            "meter_seconds": meter_wall,
             "x_node_dist": np.asarray(node_consensus_dist(x)),
         }
         rows.append(row)
